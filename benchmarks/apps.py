@@ -1,0 +1,497 @@
+"""The paper's six benchmarks as Myrmics task programs (virtual mode).
+
+Each app has a *flat* variant (main spawns every fine-grained task) and
+a *hierarchical* variant (main spawns coarse per-group tasks with
+region arguments; those spawn the fine tasks from worker cores, so
+spawn handling lands on the leaf schedulers — paper SVI-B).  Shared
+data that crosses group boundaries (stencil borders, bitonic exchange
+buffers, reduction partials) lives in dedicated double-buffered regions
+so coarse tasks declare exact region dependencies and groups of the
+same step run in parallel.
+
+An analytic *MPI* baseline models the hand-tuned message-passing
+implementation on the same cost constants (near-perfect scaling by
+construction, as the paper measures).
+
+Compute is virtual cycles; DMA traffic follows from real object sizes
+and the schedulers' placement decisions.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core import In, InOut, Myrmics, Out, Safe
+from repro.core.sim import CostModel
+
+BARRIER = 459.0   # paper SIII: 512-worker barrier
+
+
+@dataclass
+class AppResult:
+    cycles: float
+    tasks: int
+    dma_bytes: int
+    msg_bytes: int
+    worker_busy_frac: float
+    worker_task_frac: float
+    sched_busy_frac: float
+    max_sched_busy_frac: float
+
+
+def _run(main, n_workers, levels, policy_p=20, cost=None) -> AppResult:
+    rt = Myrmics(n_workers=n_workers, sched_levels=levels,
+                 cost=cost or CostModel.heterogeneous(), policy_p=policy_p)
+    rep = rt.run(main)
+    assert rep["tasks_spawned"] == rep["tasks_done"], "benchmark app hung"
+    total = rep["total_cycles"] or 1.0
+    wb = [w.busy_cycles / total for w in rep["workers"].values()]
+    wt = [w.task_cycles / total for w in rep["workers"].values()]
+    sb = [s.busy_cycles / total for s in rep["scheds"].values()]
+    return AppResult(
+        cycles=rep["total_cycles"],
+        tasks=rep["tasks_done"],
+        dma_bytes=sum(w.dma_bytes for w in rep["workers"].values()),
+        msg_bytes=sum(w.msg_bytes_sent for w in rep["workers"].values())
+        + sum(s.msg_bytes_sent for s in rep["scheds"].values()),
+        worker_busy_frac=sum(wb) / max(len(wb), 1),
+        worker_task_frac=sum(wt) / max(len(wt), 1),
+        sched_busy_frac=sum(sb) / max(len(sb), 1),
+        max_sched_busy_frac=max(sb) if sb else 0.0,
+    )
+
+
+def hier_levels(n_workers: int) -> list[int]:
+    """Paper's scheduler configuration (Fig. 8 caption): L=2 for 32w,
+    4 for 64w, 7 for >=128w."""
+    if n_workers <= 32:
+        return [1, 2]
+    if n_workers <= 64:
+        return [1, 4]
+    return [1, 7]
+
+
+def n_groups(P: int) -> int:
+    return max(1, min(16, P // 16))
+
+
+# ---------------------------------------------------------------------------
+# Jacobi iteration — nearest-neighbour stencil
+# ---------------------------------------------------------------------------
+
+def jacobi(n_workers: int, *, total_work: float = 256e6, steps: int = 6,
+           chunks_per_worker: int = 2, hier: bool = False,
+           row_bytes: int = 8192, block_bytes: int = 1 << 20):
+    P = n_workers * chunks_per_worker
+    work = total_work / steps / P
+
+    def main(ctx, root):
+        G = n_groups(P) if hier else 1
+        grp = lambda i: i * G // P
+        g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
+        # borders: per (group, parity) regions so coarse tasks declare
+        # exact cross-group dependencies
+        b_rids = [[ctx.ralloc(root, 1) for _ in range(2)] for _ in range(G)]
+        blocks, tops, bots = [], [], []
+        for i in range(P):
+            blocks.append(ctx.alloc(block_bytes, g_rids[grp(i)]))
+            tops.append([ctx.alloc(row_bytes, b_rids[grp(i)][par])
+                         for par in range(2)])
+            bots.append([ctx.alloc(row_bytes, b_rids[grp(i)][par])
+                         for par in range(2)])
+
+        def fine_args(i, t):
+            pb, cb = (t + 1) % 2, t % 2
+            args = [InOut(blocks[i]), Out(tops[i][cb]), Out(bots[i][cb])]
+            if t > 0:
+                if i > 0:
+                    args.append(In(bots[i - 1][pb]))
+                if i < P - 1:
+                    args.append(In(tops[i + 1][pb]))
+            return args
+
+        if not hier:
+            for t in range(steps):
+                for i in range(P):
+                    ctx.spawn(None, fine_args(i, t), duration=work,
+                              name=f"j{t}.{i}")
+        else:
+            def coarse(c, *args):
+                g, t = args[-2], args[-1]
+                lo, hi = g * P // G, (g + 1) * P // G
+                for i in range(lo, hi):
+                    c.spawn(None, fine_args(i, t), duration=work)
+
+            for t in range(steps):
+                pb, cb = (t + 1) % 2, t % 2
+                for g in range(G):
+                    args = [InOut(g_rids[g], notransfer=True),
+                            Out(b_rids[g][cb], notransfer=True),
+                            In(b_rids[g][pb], notransfer=True)]
+                    if g > 0:
+                        args.append(In(b_rids[g - 1][pb], notransfer=True))
+                    if g < G - 1:
+                        args.append(In(b_rids[g + 1][pb], notransfer=True))
+                    args += [Safe(g), Safe(t)]
+                    ctx.spawn(coarse, args, name=f"J{t}.{g}")
+        yield ctx.wait([InOut(root)])
+
+    return main
+
+
+def jacobi_mpi(n_workers: int, cost: CostModel, *, total_work: float = 256e6,
+               steps: int = 6, row_bytes: int = 8192) -> float:
+    per_step = total_work / steps / n_workers
+    comm = 2 * (cost.dma_startup + row_bytes / cost.dma_bytes_per_cycle)
+    return steps * (per_step + comm + BARRIER)
+
+
+# ---------------------------------------------------------------------------
+# Raytracing — embarrassingly parallel with scene-complexity imbalance
+# ---------------------------------------------------------------------------
+
+def raytrace(n_workers: int, *, total_work: float = 256e6,
+             chunks_per_worker: int = 2, hier: bool = False,
+             scene_bytes: int = 1 << 20, lines_bytes: int = 1 << 18):
+    P = n_workers * chunks_per_worker
+    base = total_work / P
+
+    def imbalance(i):
+        return 0.6 + 0.8 * ((i * 2654435761) % 1000) / 1000.0
+
+    def main(ctx, root):
+        G = n_groups(P) if hier else 1
+        grp = lambda i: i * G // P
+        scene = ctx.alloc(scene_bytes, root, label="scene")
+        ctx.spawn(None, [Out(scene)], duration=1e5, name="load_scene")
+        g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
+        outs = [ctx.alloc(lines_bytes, g_rids[grp(i)]) for i in range(P)]
+
+        if not hier:
+            for i in range(P):
+                ctx.spawn(None, [In(scene), Out(outs[i])],
+                          duration=base * imbalance(i), name=f"rt{i}")
+        else:
+            def coarse(c, g_rid, scene_o, g):
+                for i in range(g * P // G, (g + 1) * P // G):
+                    c.spawn(None, [In(scene_o), Out(outs[i])],
+                            duration=base * imbalance(i))
+            for g in range(G):
+                ctx.spawn(coarse, [InOut(g_rids[g], notransfer=True),
+                                   In(scene, notransfer=True), Safe(g)],
+                          name=f"RT{g}")
+        yield ctx.wait([InOut(root)])
+
+    return main
+
+
+def raytrace_mpi(n_workers: int, cost: CostModel, *,
+                 total_work: float = 256e6,
+                 scene_bytes: int = 1 << 20) -> float:
+    bcast = (cost.dma_startup + scene_bytes / cost.dma_bytes_per_cycle) * \
+        math.ceil(math.log2(max(n_workers, 2)))
+    return bcast + 1.08 * total_work / n_workers
+
+
+# ---------------------------------------------------------------------------
+# Bitonic sort — butterfly exchanges
+# ---------------------------------------------------------------------------
+
+def bitonic(n_workers: int, *, total_elems_work: float = 256e6,
+            hier: bool = False, chunk_bytes: int = 1 << 19):
+    P = max(4, 1 << int(math.log2(max(4, n_workers))))
+    stages = [(k, j) for k in range(1, int(math.log2(P)) + 1)
+              for j in range(k - 1, -1, -1)]
+    work = total_elems_work / (P * (len(stages) + 1))
+
+    def main(ctx, root):
+        G = n_groups(P) if hier else 1
+        cpg = P // G
+        grp = lambda i: i // cpg
+        # buffers double-buffered by stage parity, grouped by region
+        r_bufs = [[ctx.ralloc(root, 1) for _ in range(2)] for _ in range(G)]
+        bufs = [[ctx.alloc(chunk_bytes, r_bufs[grp(i)][par])
+                 for par in range(2)] for i in range(P)]
+
+        for i in range(P):
+            ctx.spawn(None, [Out(bufs[i][0])], duration=work,
+                      name=f"sort{i}")
+
+        def fine(c, s, lo, hi):
+            _, j = stages[s]
+            src, dst = s % 2, (s + 1) % 2
+            for i in range(lo, hi):
+                p = i ^ (1 << j)
+                c.spawn(None, [In(bufs[i][src]), In(bufs[p][src]),
+                               Out(bufs[i][dst])], duration=work)
+
+        if not hier:
+            for s in range(len(stages)):
+                fine(ctx, s, 0, P)
+        else:
+            def coarse(c, *args):
+                s, g = args[-2], args[-1]
+                fine(c, s, g * cpg, (g + 1) * cpg)
+            for s, (_, j) in enumerate(stages):
+                src, dst = s % 2, (s + 1) % 2
+                for g in range(G):
+                    pg = grp((g * cpg) ^ (1 << j))  # partner group
+                    args = [In(r_bufs[g][src], notransfer=True),
+                            Out(r_bufs[g][dst], notransfer=True)]
+                    if pg != g:
+                        args.append(In(r_bufs[pg][src], notransfer=True))
+                    args += [Safe(s), Safe(g)]
+                    ctx.spawn(coarse, args, name=f"B{s}.{g}")
+        yield ctx.wait([InOut(root)])
+
+    return main
+
+
+def bitonic_mpi(n_workers: int, cost: CostModel, *,
+                total_elems_work: float = 256e6,
+                chunk_bytes: int = 1 << 19) -> float:
+    P = max(4, 1 << int(math.log2(max(4, n_workers))))
+    n_stages = sum(range(1, int(math.log2(P)) + 1))
+    work = total_elems_work / (P * (n_stages + 1))
+    xfer = cost.dma_startup + chunk_bytes / cost.dma_bytes_per_cycle
+    return (n_stages + 1) * work + n_stages * (xfer + BARRIER)
+
+
+# ---------------------------------------------------------------------------
+# K-Means — parallel reductions + broadcast
+# ---------------------------------------------------------------------------
+
+def kmeans(n_workers: int, *, total_work: float = 256e6, steps: int = 4,
+           chunks_per_worker: int = 2, hier: bool = False,
+           chunk_bytes: int = 1 << 19, cent_bytes: int = 1 << 14):
+    P = n_workers * chunks_per_worker
+    work = total_work / steps / P
+    red_work = work / 8
+
+    def main(ctx, root):
+        G = n_groups(P) if hier else 1
+        grp = lambda i: i * G // P
+        g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
+        chunks = [ctx.alloc(chunk_bytes, g_rids[grp(i)]) for i in range(P)]
+        cents = [ctx.alloc(cent_bytes, root) for _ in range(steps + 1)]
+        ctx.spawn(None, [Out(cents[0])], duration=1e5, name="init_c")
+
+        for t in range(steps):
+            tmp = ctx.ralloc(root, 1, label=f"tmp{t}")
+            tmp_sub = [ctx.ralloc(tmp, 2) for _ in range(G)]
+            partials = [ctx.alloc(cent_bytes, tmp_sub[grp(i)])
+                        for i in range(P)]
+
+            def fine(c, lo, hi, t=t, partials=partials):
+                for i in range(lo, hi):
+                    c.spawn(None, [In(cents[t]), InOut(chunks[i]),
+                                   Out(partials[i])], duration=work)
+
+            if not hier:
+                fine(ctx, 0, P)
+            else:
+                def coarse(c, *args, fine_fn=fine):
+                    g = args[-1]
+                    fine_fn(c, g * P // G, (g + 1) * P // G)
+                for g in range(G):
+                    ctx.spawn(coarse,
+                              [InOut(g_rids[g], notransfer=True),
+                               Out(tmp_sub[g], notransfer=True),
+                               In(cents[t], notransfer=True), Safe(g)],
+                              name=f"K{t}.{g}")
+            # tree reduction over partials (spawned by main: object args)
+            level = list(partials)
+            r = 0
+            while len(level) > 1:
+                nxt = []
+                for a in range(0, len(level) - 1, 2):
+                    o = ctx.alloc(cent_bytes, tmp)
+                    ctx.spawn(None, [In(level[a]), In(level[a + 1]), Out(o)],
+                              duration=red_work, name=f"red{t}.{r}")
+                    nxt.append(o)
+                    r += 1
+                if len(level) % 2:
+                    nxt.append(level[-1])
+                level = nxt
+            ctx.spawn(None, [In(level[0]), Out(cents[t + 1])],
+                      duration=red_work, name=f"newc{t}")
+        yield ctx.wait([InOut(root)])
+
+    return main
+
+
+def kmeans_mpi(n_workers: int, cost: CostModel, *, total_work: float = 256e6,
+               steps: int = 4, cent_bytes: int = 1 << 14) -> float:
+    per_step = total_work / steps / n_workers
+    logp = math.ceil(math.log2(max(n_workers, 2)))
+    red = logp * (cost.dma_startup + cent_bytes / cost.dma_bytes_per_cycle
+                  + cost.msg_proc)
+    return steps * (per_step + 2 * red + BARRIER)
+
+
+# ---------------------------------------------------------------------------
+# Matrix multiplication — communication bursts (hot blocks)
+# ---------------------------------------------------------------------------
+
+def matmul(n_workers: int, *, total_work: float = 512e6, hier: bool = False,
+           block_bytes: int = 1 << 19):
+    p = 1 << int(math.log2(max(2, int(math.sqrt(n_workers)))))
+    P = p * p
+    work = total_work / (P * p)
+
+    def main(ctx, root):
+        G = n_groups(P) if hier else 1
+        grp = lambda cell: cell * G // P
+        # A/B are read-shared after init; C is written — separate region
+        # families so coarse tasks of different groups never conflict
+        ab_rids = [ctx.ralloc(root, 1, label=f"ab{g}") for g in range(G)]
+        g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
+        A = [[ctx.alloc(block_bytes, ab_rids[grp(i * p + j)])
+              for j in range(p)] for i in range(p)]
+        B = [[ctx.alloc(block_bytes, ab_rids[grp(i * p + j)])
+              for j in range(p)] for i in range(p)]
+        C = [[ctx.alloc(block_bytes, g_rids[grp(i * p + j)])
+              for j in range(p)] for i in range(p)]
+        for i in range(p):
+            for j in range(p):
+                for M in (A, B, C):
+                    ctx.spawn(None, [Out(M[i][j])], duration=1e4)
+
+        def fine(c, cells):
+            for cell in cells:
+                i, j = cell // p, cell % p
+                for k in range(p):
+                    c.spawn(None, [InOut(C[i][j]), In(A[i][k]), In(B[k][j])],
+                            duration=work)
+
+        if not hier:
+            fine(ctx, range(P))
+        else:
+            def coarse(c, *args):
+                g = args[-1]
+                fine(c, range(g * P // G, (g + 1) * P // G))
+            for g in range(G):
+                args = [InOut(g_rids[g], notransfer=True)]
+                args += [In(ab_rids[x], notransfer=True) for x in range(G)]
+                args.append(Safe(g))
+                ctx.spawn(coarse, args, name=f"M{g}")
+        yield ctx.wait([InOut(root)])
+
+    return main
+
+
+def matmul_mpi(n_workers: int, cost: CostModel, *, total_work: float = 512e6,
+               block_bytes: int = 1 << 19) -> float:
+    p = 1 << int(math.log2(max(2, int(math.sqrt(n_workers)))))
+    P = p * p
+    work = total_work / (P * p)
+    xfer = cost.dma_startup + block_bytes / cost.dma_bytes_per_cycle
+    return p * (work + 2 * xfer)
+
+
+# ---------------------------------------------------------------------------
+# Barnes-Hut — irregular, allocation-heavy, poor scaling (paper SVI-B)
+# ---------------------------------------------------------------------------
+
+def barnes_hut(n_workers: int, *, total_work: float = 256e6, steps: int = 3,
+               hier: bool = False, tree_bytes: int = 1 << 18):
+    P = max(2, n_workers)
+    build_work = 0.2 * total_work / steps / P
+    force_work = 0.8 * total_work / steps / (P * 4)
+
+    def main(ctx, root):
+        G = n_groups(P) if hier else 1
+        grp = lambda i: i * G // P
+        g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
+        bodies = [ctx.alloc(tree_bytes, g_rids[grp(i)]) for i in range(P)]
+        for i in range(P):
+            ctx.spawn(None, [Out(bodies[i])], duration=1e4)
+
+        for t in range(steps):
+            step_r = ctx.ralloc(root, 1, label=f"s{t}")
+            sub = [ctx.ralloc(step_r, 2) for _ in range(G)]
+            trees = [ctx.alloc(tree_bytes, sub[grp(i)]) for i in range(P)]
+
+            def builds(c, lo, hi):
+                for i in range(lo, hi):
+                    c.spawn(None, [In(bodies[i]), Out(trees[i])],
+                            duration=build_work)
+
+            def forces(c, lo, hi):
+                for i in range(lo, hi):
+                    for krel in range(4):
+                        j = (i + 1 + (krel * krel * 7 + i)
+                             % max(P - 1, 1)) % P
+                        imb = 0.5 + 1.5 * ((i * 31 + krel) % 100) / 100.0
+                        c.spawn(None, [InOut(bodies[i]), In(trees[i]),
+                                       In(trees[j])],
+                                duration=force_work * imb)
+
+            if not hier:
+                builds(ctx, 0, P)
+                forces(ctx, 0, P)
+            else:
+                def c_build(c, *args, fn=builds):
+                    g = args[-1]
+                    fn(c, g * P // G, (g + 1) * P // G)
+
+                def c_force(c, *args, fn=forces):
+                    g = args[-1]
+                    fn(c, g * P // G, (g + 1) * P // G)
+                for g in range(G):
+                    ctx.spawn(c_build,
+                              [In(g_rids[g], notransfer=True),
+                               Out(sub[g], notransfer=True), Safe(g)],
+                              name=f"BH_b{t}.{g}")
+                for g in range(G):
+                    args = [InOut(g_rids[g], notransfer=True),
+                            In(step_r, notransfer=True), Safe(g)]
+                    ctx.spawn(c_force, args, name=f"BH_f{t}.{g}")
+            # all-to-all load-balance exchange
+            ctx.spawn(None, [In(step_r)] + [InOut(b) for b in bodies[:8]],
+                      duration=1e5, name=f"rebal{t}")
+            yield ctx.wait([InOut(root)])
+            ctx.rfree(step_r)
+        yield ctx.wait([InOut(root)])
+
+    return main
+
+
+def barnes_hut_mpi(n_workers: int, cost: CostModel, *,
+                   total_work: float = 256e6, steps: int = 3,
+                   tree_bytes: int = 1 << 18) -> float:
+    per_step = total_work / steps / n_workers
+    a2a = n_workers * (cost.dma_startup
+                       + (tree_bytes / 8) / cost.dma_bytes_per_cycle) / 4
+    return steps * (per_step * 1.5 + a2a + 3 * BARRIER)
+
+
+APPS = {
+    "jacobi": (jacobi, jacobi_mpi),
+    "raytrace": (raytrace, raytrace_mpi),
+    "bitonic": (bitonic, bitonic_mpi),
+    "kmeans": (kmeans, kmeans_mpi),
+    "matmul": (matmul, matmul_mpi),
+    "barnes_hut": (barnes_hut, barnes_hut_mpi),
+}
+
+
+def run_app(name: str, n_workers: int, mode: str, *, policy_p: int = 20,
+            cost: CostModel | None = None, **kw):
+    """mode: mpi (analytic cycles) | flat | hier (AppResult)."""
+    builder, mpi_model = APPS[name]
+    cost = cost or CostModel.heterogeneous()
+    if mode == "mpi":
+        # forward only the kwargs the analytic model understands
+        import inspect
+        sig = inspect.signature(mpi_model)
+        mkw = {k: v for k, v in kw.items() if k in sig.parameters}
+        return mpi_model(n_workers, cost, **mkw)
+    if mode == "flat":
+        return _run(builder(n_workers, hier=False, **kw), n_workers, [1],
+                    policy_p, cost)
+    if mode == "hier":
+        return _run(builder(n_workers, hier=True, **kw), n_workers,
+                    hier_levels(n_workers), policy_p, cost)
+    raise ValueError(mode)

@@ -1,0 +1,160 @@
+"""Paper-figure reproductions (Figs. 7-12) on the calibrated simulator.
+
+Each function returns rows of dicts; run.py prints them as CSV and
+EXPERIMENTS.md records the validated numbers.
+"""
+
+from __future__ import annotations
+
+from repro.core import InOut, Myrmics, Out
+from repro.core.sim import CostModel
+
+from .apps import APPS, hier_levels, run_app
+
+
+# -- Fig. 7a: intrinsic overhead ------------------------------------------------
+
+def intrinsic_overhead(n_tasks: int = 500) -> list[dict]:
+    rows = []
+    for label, cm in (("heterogeneous", CostModel.heterogeneous()),
+                      ("microblaze", CostModel.microblaze())):
+        def app(ctx, root):
+            o = ctx.alloc(64, root, label="o")
+            ctx.spawn(None, [Out(o)])
+            for _ in range(n_tasks):
+                ctx.spawn(None, [InOut(o)])
+            yield ctx.wait([InOut(root)])
+
+        rt = Myrmics(n_workers=1, sched_levels=[1], cost=cm)
+        rep = rt.run(app)
+        spawn = (cm.worker_spawn_call + cm.spawn_proc
+                 + cm.dep_enqueue_per_arg + 2 * cm.msg_base_latency)
+        per_task = rep["total_cycles"] / n_tasks
+        exec_c = per_task - spawn + cm.worker_spawn_call
+        rows.append({
+            "mode": label,
+            "spawn_cycles": round(spawn),
+            "exec_cycles": round(exec_c),
+            "paper_spawn": 16200 if label == "heterogeneous" else 37400,
+            "paper_exec": 13300 if label == "heterogeneous" else None,
+        })
+    return rows
+
+
+# -- Fig. 7b / 12a: task granularity impact --------------------------------------
+
+def granularity(task_sizes=(100e3, 1e6, 10e6),
+                workers=(1, 4, 16, 64, 128, 256),
+                cost: CostModel | None = None,
+                n_tasks: int = 512) -> list[dict]:
+    cost = cost or CostModel.heterogeneous()
+    rows = []
+    for size in task_sizes:
+        base = None
+        for w in workers:
+            def app(ctx, root, size=size):
+                oids = ctx.balloc(64, root, n_tasks)
+                for o in oids:
+                    ctx.spawn(None, [Out(o)], duration=size)
+                yield ctx.wait([InOut(root)])
+
+            rt = Myrmics(n_workers=w, sched_levels=[1], cost=cost)
+            rep = rt.run(app)
+            if base is None:
+                base = rep["total_cycles"]
+            rows.append({"task_size": size, "workers": w,
+                         "speedup": round(base / rep["total_cycles"], 2)})
+    return rows
+
+
+# -- Fig. 8: scaling of the six benchmarks -----------------------------------------
+
+def scaling(names=None, workers=(8, 16, 32, 64, 128),
+            total_work: float = 512e6) -> list[dict]:
+    rows = []
+    for name in names or list(APPS):
+        base = {}
+        for w in workers:
+            for mode in ("mpi", "flat", "hier"):
+                kw = {}
+                if name not in ("bitonic", "matmul"):
+                    kw["total_work"] = total_work
+                r = run_app(name, w, mode, **kw)
+                cycles = r if mode == "mpi" else r.cycles
+                key = mode
+                if key not in base:
+                    base[key] = cycles * w  # normalize vs 1-worker ideal
+                rows.append({
+                    "bench": name, "mode": mode, "workers": w,
+                    "cycles": round(cycles),
+                    "speedup_vs_ideal1w": round(base[key] / cycles / w, 3)
+                    if cycles else 0.0,
+                })
+    return rows
+
+
+# -- Fig. 9/10: breakdown + traffic -------------------------------------------------
+
+def breakdown(names=("bitonic", "kmeans", "raytrace"),
+              workers=(32, 64, 128), total_work: float = 512e6) -> list[dict]:
+    rows = []
+    for name in names:
+        for w in workers:
+            kw = {}
+            if name not in ("bitonic", "matmul"):
+                kw["total_work"] = total_work
+            r = run_app(name, w, "hier", **kw)
+            rows.append({
+                "bench": name, "workers": w,
+                "worker_task_frac": round(r.worker_task_frac, 3),
+                "avg_sched_busy": round(r.sched_busy_frac, 3),
+                "max_sched_busy": round(r.max_sched_busy_frac, 3),
+                "dma_mb_per_worker": round(r.dma_bytes / 1e6 / w, 2),
+                "msg_mb_total": round(r.msg_bytes / 1e6, 2),
+            })
+    return rows
+
+
+# -- Fig. 11: locality vs load balance ------------------------------------------------
+
+def locality_sweep(name: str = "matmul", workers: int = 32,
+                   points=(100, 80, 60, 40, 20, 0)) -> list[dict]:
+    rows = []
+    for p in points:
+        r = run_app(name, workers, "hier", policy_p=p)
+        rows.append({"bench": name, "policy_p": p,
+                     "cycles": round(r.cycles),
+                     "dma_mb": round(r.dma_bytes / 1e6, 1)})
+    return rows
+
+
+# -- Fig. 12b: deeper hierarchies -------------------------------------------------------
+
+def hierarchy_depth(workers=(32, 64, 128, 256),
+                    task_size: float = 22_500.0,
+                    tasks_per_worker: int = 4) -> list[dict]:
+    """Saturate the schedulers with near-empty tasks (MicroBlaze cost
+    model, paper SVI-E) and compare 1/2/3 scheduler levels."""
+    cm = CostModel.microblaze()
+    rows = []
+    for w in workers:
+        n_tasks = w * tasks_per_worker
+        for label, levels in (
+                ("1-level", [1]),
+                ("2-level", [1, max(2, w // 6 // 4)]),
+                ("3-level", [1, max(2, w // 36), max(2, w // 6)])):
+            def app(ctx, root):
+                G = levels[-1] if len(levels) > 1 else 4
+                rids = [ctx.ralloc(root, len(levels) - 1) for _ in range(G)]
+                for i in range(n_tasks):
+                    o = ctx.alloc(64, rids[i % G])
+                    ctx.spawn(None, [Out(o)], duration=task_size)
+                yield ctx.wait([InOut(root)])
+
+            rt = Myrmics(n_workers=w, sched_levels=levels, cost=cm)
+            rep = rt.run(app)
+            per = rep["total_cycles"] / n_tasks
+            rows.append({"workers": w, "config": label,
+                         "cycles_per_task": round(per),
+                         "slowdown_vs_size": round(per / task_size, 2)})
+    return rows

@@ -1,0 +1,92 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV rows: ``us_per_call`` is the
+harness wall time per simulated run; ``derived`` carries the
+figure-specific quantity (virtual cycles, speedups, fractions).
+Default is a reduced grid that finishes in a few minutes on one CPU
+core; ``--full`` runs the paper-sized grids.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _emit(name: str, wall_s: float, n_runs: int, rows: list[dict]) -> None:
+    us = wall_s * 1e6 / max(n_runs, 1)
+    derived = json.dumps(rows, separators=(",", ":"))
+    print(f"{name},{us:.0f},{derived}")
+    sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    full = args.full
+
+    from . import paper_figs as F
+
+    def want(name):
+        return args.only is None or args.only == name
+
+    if want("fig7a_intrinsic_overhead"):
+        t0 = time.time()
+        rows = F.intrinsic_overhead()
+        _emit("fig7a_intrinsic_overhead", time.time() - t0, 2, rows)
+
+    if want("fig7b_granularity"):
+        t0 = time.time()
+        workers = (1, 4, 16, 64, 128, 256) if full else (1, 16, 64, 128)
+        rows = F.granularity(workers=workers)
+        _emit("fig7b_granularity", time.time() - t0, len(rows), rows)
+
+    if want("fig12a_granularity_microblaze"):
+        from repro.core.sim import CostModel
+        t0 = time.time()
+        rows = F.granularity(task_sizes=(1e6,),
+                             workers=(1, 16, 64) if not full
+                             else (1, 4, 16, 64, 128),
+                             cost=CostModel.microblaze())
+        _emit("fig12a_granularity_microblaze", time.time() - t0, len(rows),
+              rows)
+
+    if want("fig8_scaling"):
+        t0 = time.time()
+        workers = (8, 16, 32, 64, 128, 256) if full else (8, 32, 64)
+        rows = F.scaling(workers=workers)
+        _emit("fig8_scaling", time.time() - t0, len(rows), rows)
+
+    if want("fig9_breakdown"):
+        t0 = time.time()
+        workers = (32, 64, 128, 256) if full else (32, 64)
+        rows = F.breakdown(workers=workers)
+        _emit("fig9_breakdown", time.time() - t0, len(rows), rows)
+
+    if want("fig11_locality_sweep"):
+        t0 = time.time()
+        rows = F.locality_sweep()
+        _emit("fig11_locality_sweep", time.time() - t0, len(rows), rows)
+
+    if want("fig12b_hierarchy_depth"):
+        t0 = time.time()
+        workers = (32, 64, 128, 256) if full else (32, 64, 128)
+        rows = F.hierarchy_depth(workers=workers)
+        _emit("fig12b_hierarchy_depth", time.time() - t0, len(rows), rows)
+
+    if want("roofline_table") and os.path.isdir("reports"):
+        t0 = time.time()
+        from repro.roofline.report import summarize
+        rows = summarize("reports")
+        _emit("roofline_table", time.time() - t0, max(len(rows), 1), rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Myrmics core runtime: hierarchical dependency-aware task scheduling.
+
+The paper's primary contribution (regions, dependency queues,
+hierarchical schedulers, locality/load-balance placement) lives here.
+"""
+
+from .regions import MODE_READ, MODE_WRITE, ROOT_RID, Directory
+from .runtime import (
+    Arg,
+    In,
+    InOut,
+    Myrmics,
+    Out,
+    Safe,
+    SerialRuntime,
+    Task,
+    TaskContext,
+)
+from .sim import CostModel, Engine
+
+__all__ = [
+    "Arg", "In", "InOut", "Out", "Safe",
+    "Myrmics", "SerialRuntime", "Task", "TaskContext",
+    "CostModel", "Engine", "Directory",
+    "MODE_READ", "MODE_WRITE", "ROOT_RID",
+]

@@ -1,0 +1,270 @@
+"""Hierarchical dependency analysis (paper SV-D).
+
+Every region/object node keeps an in-order *dependency queue* plus
+counters tracking busy descendants.  A task is ready when its entry is
+*active* at every argument node.  Traversals flow from the spawner's
+covering argument down to the target node, incrementing per-edge "sent"
+counters; subtree completion flows upward as QUIESCE notifications
+carrying cumulative "received" counters, which the parent compares with
+its "sent" counters to tolerate crossing messages (the paper's
+parent/child counter race protocol, Fig. 5b).
+
+The engine is a pure state machine: all cross-node notifications are
+emitted through an ``Effects`` interface so the runtime can charge
+scheduler processing costs and message latencies for hops that cross
+scheduler boundaries.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Protocol
+
+from .regions import MODE_READ, MODE_WRITE, Directory
+
+
+# ---------------------------------------------------------------------------
+# queue entries
+# ---------------------------------------------------------------------------
+
+ARG = "arg"            # task argument settles at this node
+TRAVERSE = "traverse"  # passing through, heading to a descendant
+WAIT = "wait"          # sys_wait: task waits for its delegated subtree
+
+
+@dataclass
+class Entry:
+    kind: str
+    task: "object"            # runtime Task (opaque to this module)
+    mode: str                 # MODE_READ or MODE_WRITE
+    path: tuple[int, ...] = ()  # remaining node path (TRAVERSE only)
+    arg_index: int = -1       # which task argument (ARG/WAIT)
+
+
+@dataclass
+class EdgeState:
+    """Parent-side per-child-edge counters (paper's 'c' counters) and the
+    acknowledgement state used for the race protocol."""
+
+    sent_r: int = 0
+    sent_w: int = 0
+    acked_r: int = 0
+    acked_w: int = 0
+
+    @property
+    def busy_r(self) -> int:
+        return self.sent_r - self.acked_r
+
+    @property
+    def busy_w(self) -> int:
+        return self.sent_w - self.acked_w
+
+
+@dataclass
+class DepNode:
+    nid: int
+    queue: deque = field(default_factory=deque)
+    holders: dict = field(default_factory=dict)      # task -> mode (active ARGs)
+    edges: dict = field(default_factory=dict)        # child nid -> EdgeState
+    recv_r: int = 0   # child-side cumulative received counters ('p' counters)
+    recv_w: int = 0
+    last_quiesce_sent: tuple[int, int] = (-1, -1)
+
+    def child_busy(self, mode: str) -> int:
+        if mode == MODE_WRITE:
+            return sum(e.busy_r + e.busy_w for e in self.edges.values())
+        return sum(e.busy_w for e in self.edges.values())
+
+    def active_writers(self) -> list:
+        return [t for t, m in self.holders.items() if m == MODE_WRITE]
+
+    def idle(self) -> bool:
+        return (
+            not self.queue
+            and not self.holders
+            and all(e.busy_r == 0 and e.busy_w == 0 for e in self.edges.values())
+        )
+
+
+class Effects(Protocol):
+    """Callbacks the runtime provides; every call corresponds to work on
+    the scheduler that owns the *destination* node."""
+
+    def forward_traverse(self, from_nid: int, entry: Entry) -> None: ...
+    def arg_activated(self, task, arg_index: int, nid: int) -> None: ...
+    def wait_activated(self, task, nid: int) -> None: ...
+    def send_quiesce(self, child_nid: int, parent_nid: int,
+                     recv_r: int, recv_w: int) -> None: ...
+
+
+class DepEngine:
+    """Per-node dependency state machine.
+
+    The runtime routes each operation to the handler of the owning
+    scheduler, then calls into this engine; emitted effects are again
+    routed (and charged) by the runtime.  State per node is therefore
+    only ever touched 'on' its owner, matching the distributed design.
+    """
+
+    def __init__(self, directory: Directory, effects: Effects):
+        self.dir = directory
+        self.fx = effects
+        self.nodes: dict[int, DepNode] = {}
+
+    def node(self, nid: int) -> DepNode:
+        n = self.nodes.get(nid)
+        if n is None:
+            n = self.nodes[nid] = DepNode(nid)
+        return n
+
+    # -- helpers ------------------------------------------------------------
+
+    @staticmethod
+    def _is_ancestor_task(maybe_anc, task) -> bool:
+        cur = task
+        while cur is not None:
+            cur = getattr(cur, "parent", None)
+            if cur is maybe_anc:
+                return True
+        return False
+
+    def _foreign_holders(self, node: DepNode, task) -> list:
+        """Active holders that are NOT ancestors of ``task`` (a spawner's
+        own hold does not block its descendants: hierarchical delegation)."""
+        return [t for t in node.holders if not self._is_ancestor_task(t, task)]
+
+    # -- entry admission ------------------------------------------------------
+
+    def enqueue(self, nid: int, entry: Entry, via_parent: int | None = None) -> None:
+        """Admit an entry at a node.  ``via_parent`` set when the entry
+        arrived through the region-tree edge from that parent (counts
+        toward the child-side 'received' counters)."""
+        node = self.node(nid)
+        if via_parent is not None:
+            if entry.mode == MODE_WRITE:
+                node.recv_w += 1
+            else:
+                node.recv_r += 1
+        node.queue.append(entry)
+        self.scan(nid)
+
+    # -- activation scan ------------------------------------------------------
+
+    def _can_activate(self, node: DepNode, entry: Entry) -> bool:
+        foreign = self._foreign_holders(node, entry.task)
+        foreign_w = [t for t in foreign if node.holders[t] == MODE_WRITE]
+        if entry.kind == TRAVERSE:
+            # heading into a child: ordering deeper in the tree resolves
+            # same-branch conflicts; only whole-node holders block us.
+            if entry.mode == MODE_WRITE:
+                return not foreign
+            return not foreign_w
+        if entry.kind == ARG:
+            if entry.mode == MODE_WRITE:
+                return not foreign and node.child_busy(MODE_WRITE) == 0
+            return not foreign_w and node.child_busy(MODE_READ) == 0
+        if entry.kind == WAIT:
+            others = [t for t in node.holders if t is not entry.task]
+            if entry.mode == MODE_WRITE:
+                return not others and node.child_busy(MODE_WRITE) == 0
+            return (
+                not [t for t in others if node.holders[t] == MODE_WRITE]
+                and node.child_busy(MODE_READ) == 0
+            )
+        raise AssertionError(entry.kind)
+
+    def _activate(self, node: DepNode, entry: Entry) -> None:
+        if entry.kind == ARG:
+            node.holders[entry.task] = self._merge_hold(
+                node.holders.get(entry.task), entry.mode
+            )
+            self.fx.arg_activated(entry.task, entry.arg_index, node.nid)
+        elif entry.kind == TRAVERSE:
+            nxt = entry.path[0]
+            edge = node.edges.setdefault(nxt, EdgeState())
+            if entry.mode == MODE_WRITE:
+                edge.sent_w += 1
+            else:
+                edge.sent_r += 1
+            self.fx.forward_traverse(node.nid, entry)
+        elif entry.kind == WAIT:
+            self.fx.wait_activated(entry.task, node.nid)
+
+    def _nested_in_holder(self, node: DepNode, entry: Entry) -> bool:
+        """Entry spawned (transitively) by a task currently holding this
+        node: it belongs to the holder's turn and may bypass blocked
+        entries queued ahead of it (paper SV-D: a parent's children are
+        enqueued *under* its active claim, not behind later waiters)."""
+        return any(self._is_ancestor_task(h, entry.task)
+                   for h in node.holders)
+
+    def scan(self, nid: int) -> None:
+        """Activate admissible entries: FIFO prefix for ordinary entries
+        (the first blocked entry stops ordinary activation, preserving
+        the program's serial order), but entries nested inside a current
+        active holder bypass the blocked prefix."""
+        node = self.node(nid)
+        progressed = True
+        while progressed:
+            progressed = False
+            blocked_front = False
+            for entry in list(node.queue):
+                if not blocked_front:
+                    if self._can_activate(node, entry):
+                        node.queue.remove(entry)
+                        self._activate(node, entry)
+                        progressed = True
+                        break
+                    blocked_front = True
+                    continue
+                # behind a blocked entry: only holder-nested entries
+                # (in their own FIFO order) may bypass
+                if self._nested_in_holder(node, entry) and \
+                        self._can_activate(node, entry):
+                    node.queue.remove(entry)
+                    self._activate(node, entry)
+                    progressed = True
+                    break
+        self._maybe_quiesce(nid)
+
+    @staticmethod
+    def _merge_hold(existing: str | None, new: str) -> str:
+        if existing == MODE_WRITE or new == MODE_WRITE:
+            return MODE_WRITE
+        return MODE_READ
+
+    # -- completion ------------------------------------------------------------
+
+    def release(self, nid: int, task) -> None:
+        """Task finished (or sys_wait consumed): drop its hold and let the
+        queue progress."""
+        node = self.node(nid)
+        node.holders.pop(task, None)
+        self.scan(nid)
+
+    # -- quiesce protocol --------------------------------------------------------
+
+    def _maybe_quiesce(self, nid: int) -> None:
+        node = self.node(nid)
+        meta = self.dir.nodes.get(nid)
+        if meta is None or meta.parent is None:
+            return
+        if node.idle():
+            snap = (node.recv_r, node.recv_w)
+            if snap != node.last_quiesce_sent and snap != (0, 0):
+                node.last_quiesce_sent = snap
+                self.fx.send_quiesce(nid, meta.parent, *snap)
+
+    def recv_quiesce(self, parent_nid: int, child_nid: int,
+                     recv_r: int, recv_w: int) -> None:
+        """Parent-side handling of a child's QUIESCE: only accept if the
+        counts match what we have sent (otherwise messages are still in
+        flight and the child will re-report; paper Fig. 5b)."""
+        node = self.node(parent_nid)
+        edge = node.edges.get(child_nid)
+        if edge is None:
+            return
+        if edge.sent_r == recv_r and edge.sent_w == recv_w:
+            edge.acked_r, edge.acked_w = recv_r, recv_w
+            self.scan(parent_nid)

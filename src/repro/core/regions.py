@@ -1,0 +1,141 @@
+"""Region/object metadata: the global region tree directory.
+
+A Myrmics *region* is a growable pool of objects and subregions
+(paper SII, SV-C).  Each region/object node is owned by exactly one
+scheduler; the owner performs all dependency analysis for the node.
+This module holds the logical tree structure; the distributed-protocol
+state (queues, counters) lives in ``deps.DepNode``.
+
+``ROOT_RID`` (0) is the implicit top-level region owned by the root
+scheduler.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+ROOT_RID = 0
+
+MODE_READ = "r"
+MODE_WRITE = "w"   # inout: write implies read access
+
+
+@dataclass
+class NodeMeta:
+    nid: int
+    parent: int | None            # parent region nid (None for root)
+    is_region: bool
+    owner: str                    # scheduler core_id responsible for the node
+    size: int = 0                 # bytes (objects only)
+    level_hint: int = 0           # regions: requested scheduler depth
+    last_producer: str | None = None   # worker core_id (objects only)
+    children: set[int] = field(default_factory=set)
+    freed: bool = False
+
+
+class Directory:
+    """Global region-tree directory.
+
+    Logically this state is distributed across schedulers (each owns its
+    part); we keep it in one structure for implementability, while every
+    *access* in the runtime is performed by the owning scheduler's event
+    handler and charged accordingly.  The paper's footnote 4 applies: the
+    path between two nodes is discovered by walking parent pointers.
+    """
+
+    def __init__(self, root_owner: str):
+        self._ids = itertools.count(1)
+        self.nodes: dict[int, NodeMeta] = {
+            ROOT_RID: NodeMeta(ROOT_RID, None, True, root_owner)
+        }
+
+    def new_region(self, parent: int, owner: str, level_hint: int) -> int:
+        nid = next(self._ids)
+        self.nodes[nid] = NodeMeta(nid, parent, True, owner, level_hint=level_hint)
+        self.nodes[parent].children.add(nid)
+        return nid
+
+    def new_object(self, parent: int, owner: str, size: int) -> int:
+        nid = next(self._ids)
+        self.nodes[nid] = NodeMeta(nid, parent, False, owner, size=size)
+        self.nodes[parent].children.add(nid)
+        return nid
+
+    def free(self, nid: int) -> list[int]:
+        """Recursively free a node; returns all freed nids."""
+        freed = []
+        stack = [nid]
+        while stack:
+            cur = stack.pop()
+            meta = self.nodes[cur]
+            if meta.freed:
+                continue
+            meta.freed = True
+            freed.append(cur)
+            stack.extend(meta.children)
+        parent = self.nodes[nid].parent
+        if parent is not None:
+            self.nodes[parent].children.discard(nid)
+        return freed
+
+    def ancestors(self, nid: int) -> list[int]:
+        """nid's ancestor chain [parent, ..., root]."""
+        out = []
+        cur = self.nodes[nid].parent
+        while cur is not None:
+            out.append(cur)
+            cur = self.nodes[cur].parent
+        return out
+
+    def path_down(self, origin: int, target: int) -> list[int]:
+        """Region-tree path [origin, ..., target].  ``origin`` must be an
+        ancestor of (or equal to) ``target``; discovered by walking parent
+        pointers from the target upward (paper SV-D)."""
+        if origin == target:
+            return [origin]
+        chain = [target]
+        cur = self.nodes[target].parent
+        while cur is not None:
+            chain.append(cur)
+            if cur == origin:
+                return list(reversed(chain))
+            cur = self.nodes[cur].parent
+        raise ValueError(f"node {origin} is not an ancestor of {target}")
+
+    def is_ancestor_or_self(self, anc: int, nid: int) -> bool:
+        if anc == nid:
+            return True
+        cur = self.nodes[nid].parent
+        while cur is not None:
+            if cur == anc:
+                return True
+            cur = self.nodes[cur].parent
+        return False
+
+    def covering_node(self, parent_arg_nids: list[int], target: int) -> int:
+        """Deepest node among ``parent_arg_nids`` that covers ``target``;
+        falls back to the root region (used for the initial main task)."""
+        best, best_depth = ROOT_RID, -1
+        for nid in parent_arg_nids:
+            if self.is_ancestor_or_self(nid, target):
+                d = len(self.ancestors(nid))
+                if d > best_depth:
+                    best, best_depth = nid, d
+        return best
+
+    def objects_under(self, nid: int) -> list[NodeMeta]:
+        """All live objects in the subtree rooted at nid (nid included if
+        it is an object)."""
+        out = []
+        stack = [nid]
+        while stack:
+            cur = stack.pop()
+            meta = self.nodes[cur]
+            if meta.freed:
+                continue
+            if meta.is_region:
+                stack.extend(meta.children)
+            else:
+                out.append(meta)
+        return out

@@ -1,0 +1,204 @@
+"""Hierarchical scheduler/worker tree (paper SIV, SV-C, SV-E).
+
+Schedulers form a tree; workers hang off leaf schedulers.  All
+communication is strictly parent<->child: a message between two cores is
+routed along the tree (via the LCA), charging forwarding cost on every
+intermediate scheduler — this is what makes non-local traffic expensive
+and the hierarchy matter, exactly as on the prototype's NoC.
+
+Scheduling of a ready task descends the tree one level at a time
+combining a locality score L (bytes of the task's packed footprint that
+were last produced inside the candidate subtree) with a load-balancing
+score B, as ``T = (p*L + (100-p)*B) / 100`` (paper SV-E / SVI-D).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+from .sim import Core, CostModel, Engine, MESSAGE_SIZE
+
+
+class SchedNode:
+    """A scheduler core in the hierarchy."""
+
+    def __init__(self, engine: Engine, core_id: str, depth: int,
+                 parent: Optional["SchedNode"]):
+        self.core = Core(engine, core_id)
+        self.core_id = core_id
+        self.depth = depth
+        self.parent = parent
+        self.children: list[SchedNode] = []
+        self.workers: list[WorkerNode] = []          # leaf schedulers only
+        self.region_load = 0                          # owned regions/objects
+        # outstanding dispatched tasks per direct child (core_id -> count);
+        # incremented during descent, decremented as completions route back.
+        self.load: dict[str, int] = {}
+        self._rr = 0                                  # deterministic tie-break
+
+    @property
+    def is_leaf(self) -> bool:
+        return not self.children
+
+    def subtree_scheds(self) -> list["SchedNode"]:
+        out, stack = [], [self]
+        while stack:
+            s = stack.pop()
+            out.append(s)
+            stack.extend(s.children)
+        return out
+
+    def subtree_worker_ids(self) -> set[str]:
+        out: set[str] = set()
+        for s in self.subtree_scheds():
+            out.update(w.core_id for w in s.workers)
+        return out
+
+
+class WorkerNode:
+    """A worker core: executes tasks dispatched by its leaf scheduler,
+    fetching remote argument data by DMA first.  DMA for a queued task is
+    issued at dispatch time, so it overlaps with the currently running
+    task (double buffering, paper SV-E)."""
+
+    def __init__(self, engine: Engine, core_id: str, parent: SchedNode):
+        self.core = Core(engine, core_id)
+        self.core_id = core_id
+        self.parent = parent
+        self.queue: list[Any] = []          # TaskExec records (runtime-owned)
+        self.suspended: dict[int, Any] = {} # tid -> suspended execution state
+        self.running: Any | None = None
+        self.dma_free: float = 0.0
+
+
+@dataclass
+class Hierarchy:
+    """The full core tree plus routing helpers."""
+
+    engine: Engine
+    cost: CostModel
+    root: SchedNode
+    scheds: list[SchedNode]
+    workers: list[WorkerNode]
+    by_id: dict[str, Any] = field(default_factory=dict)
+
+    @staticmethod
+    def build(engine: Engine, cost: CostModel, n_workers: int,
+              sched_levels: list[int]) -> "Hierarchy":
+        """``sched_levels[i]`` = number of schedulers at depth i
+        (sched_levels[0] must be 1).  Workers attach to the deepest
+        scheduler level, split as evenly as possible."""
+        assert sched_levels and sched_levels[0] == 1
+        levels: list[list[SchedNode]] = []
+        scheds: list[SchedNode] = []
+        for depth, count in enumerate(sched_levels):
+            row = []
+            for i in range(count):
+                if depth == 0:
+                    parent = None
+                else:
+                    parent = levels[depth - 1][i * len(levels[depth - 1]) // count]
+                s = SchedNode(engine, f"s{depth}.{i}", depth, parent)
+                if parent is not None:
+                    parent.children.append(s)
+                    parent.load[s.core_id] = 0
+                row.append(s)
+                scheds.append(s)
+            levels.append(row)
+        leaves = levels[-1]
+        workers = []
+        for w in range(n_workers):
+            leaf = leaves[w * len(leaves) // n_workers]
+            wn = WorkerNode(engine, f"w{w}", leaf)
+            leaf.workers.append(wn)
+            leaf.load[wn.core_id] = 0
+            workers.append(wn)
+        h = Hierarchy(engine, cost, levels[0][0], scheds, workers)
+        for s in scheds:
+            h.by_id[s.core_id] = s
+        for w in workers:
+            h.by_id[w.core_id] = w
+        return h
+
+    # -- tree routing ----------------------------------------------------------
+
+    def _chain_up(self, node: Any) -> list[Any]:
+        chain = [node]
+        cur = node.parent if isinstance(node, WorkerNode) else node.parent
+        while cur is not None:
+            chain.append(cur)
+            cur = cur.parent
+        return chain
+
+    def route_path(self, src: Any, dst: Any) -> list[Any]:
+        """Cores visited between src and dst (exclusive of both) when
+        routing along the tree via the LCA."""
+        if src is dst:
+            return []
+        up = self._chain_up(src)
+        down = self._chain_up(dst)
+        up_ids = {id(n): i for i, n in enumerate(up)}
+        lca_j = next(j for j, n in enumerate(down) if id(n) in up_ids)
+        lca_i = up_ids[id(down[lca_j])]
+        path = up[1:lca_i + 1] + list(reversed(down[1:lca_j]))
+        return path
+
+    def send(self, src: Any, dst: Any, proc_cost: float, handler, *args,
+             send_time: float | None = None, payload_bytes: int = MESSAGE_SIZE):
+        """Route a message src -> dst along the tree.  Intermediate
+        schedulers charge forwarding cost; the destination core charges
+        ``proc_cost`` and then runs ``handler(*args)``."""
+        t = self.engine.now if send_time is None else send_time
+        if src is dst:
+            dst.core.exec_at(t, proc_cost, handler, *args)
+            return
+        src.core.stats.msgs_sent += 1
+        src.core.stats.msg_bytes_sent += payload_bytes
+        inter = self.route_path(src, dst)
+        hops = len(inter) + 1
+        t += self.cost.msg_base_latency + self.cost.msg_hop_latency * (hops - 1)
+        for node in inter:
+            t = node.core.occupy(t, self.cost.msg_proc)
+            node.core.stats.msgs_sent += 1
+            node.core.stats.msg_bytes_sent += payload_bytes
+        dst.core.exec_at(t, proc_cost, handler, *args)
+
+    def local(self, node: Any, proc_cost: float, handler, *args,
+              at_time: float | None = None):
+        """Charge processing on ``node`` without any message (same-core
+        follow-up work)."""
+        t = self.engine.now if at_time is None else at_time
+        node.core.exec_at(t, proc_cost, handler, *args)
+
+
+def choose(scored: list[tuple[float, int, Any]]) -> Any:
+    """Pick max score; ties broken by the stable secondary key."""
+    best = max(scored, key=lambda x: (x[0], -x[1]))
+    return best[2]
+
+
+def score_candidates(
+    pack_bytes_by_worker: dict[str, int],
+    candidates: list[tuple[Any, set[str], int]],
+    policy_p: int,
+) -> Any:
+    """Combine locality and load-balance scores (paper SV-E).
+
+    candidates: (node, worker_ids_in_subtree, load) triples.
+    """
+    total = sum(pack_bytes_by_worker.values())
+    max_load = max((load for _, _, load in candidates), default=0)
+    scored = []
+    for i, (node, wids, load) in enumerate(candidates):
+        if total > 0:
+            produced = sum(
+                b for wid, b in pack_bytes_by_worker.items() if wid in wids
+            )
+            loc = 1024.0 * produced / total
+        else:
+            loc = 0.0
+        bal = 1024.0 * (1.0 - (load / max_load if max_load > 0 else 0.0))
+        t = (policy_p * loc + (100 - policy_p) * bal) / 100.0
+        scored.append((t, i, node))
+    return choose(scored)

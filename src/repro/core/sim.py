@@ -1,0 +1,202 @@
+"""Discrete-event simulation engine + paper-calibrated cost model.
+
+The Myrmics paper evaluates on a 520-core message-passing prototype
+(8 ARM Cortex-A9 scheduler cores + 512 MicroBlaze worker cores).  This
+container is CPU-only, so the scalability experiments run in *virtual
+time*: every message, DMA and runtime function charges cycles on the
+core that performs it, using constants calibrated to the paper's
+measurements (Fig. 7a):
+
+  * heterogeneous (Cortex scheduler / MicroBlaze worker):
+      spawn(1-arg empty task) ~ 16.2 K cycles, execute ~ 13.3 K cycles
+  * homogeneous MicroBlaze scheduler: spawn ~ 37.4 K cycles
+
+The same scheduler/dependency code also runs in *real mode* where tasks
+execute actual Python/JAX callables; only the clock is virtual.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+class Event:
+    __slots__ = ("time", "seq", "fn", "args")
+
+    def __init__(self, time: float, seq: int, fn: Callable, args: tuple):
+        self.time = time
+        self.seq = seq
+        self.fn = fn
+        self.args = args
+
+    def __lt__(self, other: "Event") -> bool:
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+class Engine:
+    """Minimal deterministic discrete-event engine (virtual cycles)."""
+
+    def __init__(self) -> None:
+        self._q: list[Event] = []
+        self._seq = itertools.count()
+        self.now: float = 0.0
+        self.events_processed = 0
+
+    def at(self, time: float, fn: Callable, *args: Any) -> None:
+        heapq.heappush(self._q, Event(max(time, self.now), next(self._seq), fn, args))
+
+    def after(self, delay: float, fn: Callable, *args: Any) -> None:
+        self.at(self.now + delay, fn, *args)
+
+    def run(self, until: float | None = None, max_events: int | None = None) -> None:
+        while self._q:
+            if max_events is not None and self.events_processed >= max_events:
+                raise RuntimeError(
+                    f"simulation exceeded {max_events} events (possible livelock)"
+                )
+            ev = heapq.heappop(self._q)
+            if until is not None and ev.time > until:
+                heapq.heappush(self._q, ev)
+                return
+            self.now = ev.time
+            self.events_processed += 1
+            ev.fn(*ev.args)
+
+    @property
+    def pending(self) -> int:
+        return len(self._q)
+
+
+@dataclass(frozen=True)
+class CostModel:
+    """Per-operation virtual-cycle costs.
+
+    Scheduler-side costs are *effective* cycles (already reflecting the
+    scheduler core's speed); worker-side costs are MicroBlaze cycles.
+    Calibration targets and the fit are documented in EXPERIMENTS.md.
+    """
+
+    name: str = "heterogeneous"
+
+    # --- network (paper SIII: round trip 38..131 cycles, msgs processed
+    #     back-to-back in 450..750 cycles) ---
+    msg_base_latency: float = 20.0     # one-way, nearest
+    msg_hop_latency: float = 8.0       # extra per hierarchy hop
+    msg_proc: float = 650.0            # generic forward/route processing
+
+    # --- worker-side runtime calls ---
+    worker_spawn_call: float = 8000.0
+    worker_dispatch_recv: float = 3000.0
+    worker_complete_send: float = 2100.0
+    worker_wait_call: float = 1500.0
+    worker_alloc_call: float = 900.0
+
+    # --- scheduler-side processing ---
+    spawn_proc: float = 6600.0         # spawn request bookkeeping
+    dep_enqueue_per_arg: float = 1500.0
+    traverse_hop: float = 650.0        # per region-tree hop during traversal
+    schedule_base: float = 3200.0      # ready-task scheduling decision
+    pack_per_arg: float = 800.0        # packing one argument
+    dispatch_proc: float = 1200.0
+    complete_proc_base: float = 1300.0
+    complete_per_arg: float = 500.0
+    arg_ready_proc: float = 400.0
+    quiesce_proc: float = 650.0
+    load_report_proc: float = 650.0
+    ralloc_proc: float = 2500.0
+    alloc_proc: float = 1200.0
+    balloc_per_obj: float = 150.0
+    free_proc: float = 900.0
+
+    # --- DMA engine (paper SIII: a DMA can be started in 24 cycles) ---
+    dma_startup: float = 24.0
+    dma_bytes_per_cycle: float = 8.0
+
+    @staticmethod
+    def heterogeneous() -> "CostModel":
+        """Cortex-A9 schedulers + MicroBlaze workers (the default)."""
+        return CostModel(name="heterogeneous")
+
+    @staticmethod
+    def microblaze() -> "CostModel":
+        """MicroBlaze-only system: scheduler-side costs scaled so that the
+        single-arg spawn microbenchmark reproduces the paper's 37.4 K
+        cycles (Fig. 7a / Fig. 12a)."""
+        f = 3.617  # (37.4K - worker-side spawn path) / (16.2K - same)
+        h = CostModel.heterogeneous()
+        return CostModel(
+            name="microblaze",
+            msg_base_latency=h.msg_base_latency,
+            msg_hop_latency=h.msg_hop_latency,
+            msg_proc=h.msg_proc * f,
+            worker_spawn_call=h.worker_spawn_call,
+            worker_dispatch_recv=h.worker_dispatch_recv,
+            worker_complete_send=h.worker_complete_send,
+            worker_wait_call=h.worker_wait_call,
+            worker_alloc_call=h.worker_alloc_call,
+            spawn_proc=h.spawn_proc * f,
+            dep_enqueue_per_arg=h.dep_enqueue_per_arg * f,
+            traverse_hop=h.traverse_hop * f,
+            schedule_base=h.schedule_base * f,
+            pack_per_arg=h.pack_per_arg * f,
+            dispatch_proc=h.dispatch_proc * f,
+            complete_proc_base=h.complete_proc_base * f,
+            complete_per_arg=h.complete_per_arg * f,
+            arg_ready_proc=h.arg_ready_proc * f,
+            quiesce_proc=h.quiesce_proc * f,
+            load_report_proc=h.load_report_proc * f,
+            ralloc_proc=h.ralloc_proc * f,
+            alloc_proc=h.alloc_proc * f,
+            balloc_per_obj=h.balloc_per_obj * f,
+            free_proc=h.free_proc * f,
+            dma_startup=h.dma_startup,
+            dma_bytes_per_cycle=h.dma_bytes_per_cycle,
+        )
+
+
+@dataclass
+class CoreStats:
+    """Per-core accounting used by the breakdown / traffic figures."""
+
+    busy_cycles: float = 0.0
+    task_cycles: float = 0.0          # workers: cycles inside task bodies
+    idle_wait_dma: float = 0.0
+    msgs_sent: int = 0
+    msg_bytes_sent: int = 0
+    dma_bytes: int = 0
+    tasks_executed: int = 0
+    events: int = 0
+
+
+class Core:
+    """A simulated core: serially processes work items (messages, task
+    executions).  ``next_free`` models the core being busy."""
+
+    def __init__(self, engine: Engine, core_id: str):
+        self.engine = engine
+        self.core_id = core_id
+        self.next_free: float = 0.0
+        self.stats = CoreStats()
+
+    def occupy(self, arrival: float, cost: float) -> float:
+        """Reserve the core for ``cost`` cycles starting no earlier than
+        ``arrival``; returns the completion time."""
+        start = max(arrival, self.next_free)
+        end = start + cost
+        self.next_free = end
+        self.stats.busy_cycles += cost
+        self.stats.events += 1
+        return end
+
+    def exec_at(self, arrival: float, cost: float, fn: Callable, *args: Any) -> float:
+        """Process a work item: occupy the core, then run the handler at
+        the completion time.  Returns completion time."""
+        end = self.occupy(arrival, cost)
+        self.engine.at(end, fn, *args)
+        return end
+
+
+MESSAGE_SIZE = 64  # bytes; paper SV-B: fixed 64-byte messages (1 cache line)

@@ -1,0 +1,75 @@
+"""Chrome-trace export for the Myrmics runtime.
+
+Records per-core busy intervals (task execution, scheduler processing,
+DMA transfers) during a run and writes the Chrome tracing JSON format —
+load in chrome://tracing or Perfetto to see the schedule: worker lanes,
+scheduler lanes, DMA overlap, straggler backups, failures.
+
+    rt = Myrmics(...)
+    tracer = attach_tracer(rt)
+    rt.run(main)
+    tracer.write("trace.json")
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Tracer:
+    events: list = field(default_factory=list)
+    _pids: dict = field(default_factory=dict)
+
+    def _pid(self, core_id: str) -> int:
+        kind = 0 if core_id.startswith("w") else 1
+        return kind
+
+    def add(self, core_id: str, name: str, start: float, dur: float,
+            cat: str = "work", args: dict | None = None) -> None:
+        if dur <= 0:
+            return
+        self.events.append({
+            "name": name, "cat": cat, "ph": "X",
+            "ts": start, "dur": dur,
+            "pid": self._pid(core_id), "tid": core_id,
+            "args": args or {},
+        })
+
+    def write(self, path: str) -> None:
+        doc = {
+            "traceEvents": self.events,
+            "displayTimeUnit": "ns",
+            "metadata": {"unit": "virtual cycles (as us)"},
+        }
+        with open(path, "w") as f:
+            json.dump(doc, f)
+
+
+def attach_tracer(rt) -> Tracer:
+    """Instrument a Myrmics runtime instance (monkey-patch the two
+    choke points: core occupancy and task execution)."""
+    tracer = Tracer()
+
+    orig_finish = rt._finish_exec
+
+    def finish_exec(w, rec):
+        t = rec.task
+        tracer.add(w.core_id, t.name, rec.start, rec.ctx.cursor,
+                   cat="task", args={"tid": t.tid})
+        return orig_finish(w, rec)
+
+    rt._finish_exec = finish_exec
+
+    # wrap every core's occupy for scheduler/message lanes
+    def make(orig, cid):
+        def occupy(arrival, cost):
+            end = orig(arrival, cost)
+            tracer.add(cid, "sched", end - cost, cost, cat="runtime")
+            return end
+        return occupy
+
+    for s in rt.hier.scheds:
+        s.core.occupy = make(s.core.occupy, s.core_id)
+    return tracer

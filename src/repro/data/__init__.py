@@ -1,0 +1,3 @@
+from .pipeline import TokenDataset
+
+__all__ = ["TokenDataset"]

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the assigned architectures' hot spots.
+
+The Myrmics paper itself has no kernel-level contribution (it is a
+runtime paper — DESIGN.md §5); these kernels serve the architecture
+substrate, each with a pure-jnp oracle in ref.py and jit'd wrappers in
+ops.py, validated under interpret=True:
+
+  flash_attention.py      tiled online-softmax fwd (GQA via index maps)
+  flash_attention_bwd.py  kv-major backward (dq/dk/dv, VMEM accumulators)
+  decode_attention.py     single-token GQA decode w/ scalar-prefetch length
+  mamba_scan.py           selective-scan, channel-tiled state slab in VMEM
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

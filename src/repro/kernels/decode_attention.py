@@ -1,0 +1,101 @@
+"""Single-token GQA decode attention Pallas TPU kernel.
+
+The decode hot loop: one query position per sequence against a long KV
+cache.  Grid = (B*Hq, T/bk) with the KV axis innermost; (m, l, acc)
+accumulators persist in VMEM scratch.  The live cache length arrives as
+a scalar-prefetch operand (SMEM) so one compiled kernel serves every
+step.  Fully-masked KV blocks (block start >= length) skip their
+flash update (`@pl.when`), which is what makes early-exit decode cheap
+on a ring-buffer cache.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, bk: int, scale: float):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    length = len_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j * bk < length)
+    def _update():
+        q = q_ref[0].astype(jnp.float32) * scale        # (1, d)
+        k = k_ref[0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (1, bk)
+        kv_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(kv_pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _fin():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: jax.Array, *, n_q_heads: int,
+                         n_kv_heads: int, bk: int = 256,
+                         sm_scale: float | None = None,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B*Hq, 1, D); k, v: (B*Hkv, T, D); length: () int32.
+    Returns (B*Hq, 1, D)."""
+    bh, _, d = q.shape
+    t = k.shape[1]
+    group = n_q_heads // n_kv_heads
+    assert t % bk == 0, (t, bk)
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    grid = (bh, t // bk)
+
+    def q_map(b, j, len_ref):
+        return (b, 0, 0)
+
+    def kv_map(b, j, len_ref):
+        kvh = (b // n_q_heads) * n_kv_heads + (b % n_q_heads) // group
+        return (kvh, j, 0)
+
+    kernel = functools.partial(_dec_kernel, bk=bk, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(length, jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,109 @@
+"""Flash-attention forward Pallas TPU kernel (GQA-aware).
+
+Online-softmax tiling: grid = (B*Hq, S/bq, T/bk) with the KV axis
+innermost (sequential on TPU), accumulators (m, l, acc) live in VMEM
+scratch and persist across the KV steps.  BlockSpec index maps place
+each program's q tile and the matching *grouped* KV head tile — GQA is
+handled entirely in the index map, no KV repetition in memory.
+
+MXU alignment: bq/bk default to 128 and head_dim is padded to a
+multiple of 128 by the ops.py wrapper.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               causal: bool, bq: int, bk: int, kv_len: int, scale: float):
+    i = pl.program_id(1)          # q block
+    j = pl.program_id(2)          # kv block (innermost, sequential)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kv_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kv_pos < kv_len
+    if causal:
+        mask = mask & (kv_pos <= q_pos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _fin():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool, n_q_heads: int, n_kv_heads: int,
+                         bq: int = 128, bk: int = 128,
+                         kv_len: int | None = None,
+                         sm_scale: float | None = None,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B*Hq, S, D); k, v: (B*Hkv, T, D).  Returns (B*Hq, S, D).
+
+    ``kv_len`` masks KV padding beyond the true length; ``sm_scale``
+    overrides 1/sqrt(D) when D itself is padded.
+    """
+    bh, s, d = q.shape
+    t = k.shape[1]
+    group = n_q_heads // n_kv_heads
+    scale = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    kv_len = t if kv_len is None else kv_len
+    # effective (padded) lengths are multiples of the block sizes
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    grid = (bh, s // bq, t // bk)
+
+    def q_map(b, i, j):
+        return (b, i, 0)
+
+    def kv_map(b, i, j):
+        kvh = (b // n_q_heads) * n_kv_heads + (b % n_q_heads) // group
+        return (kvh, j, 0)
+
+    kernel = functools.partial(
+        _fa_kernel, causal=causal, bq=bq, bk=bk, kv_len=kv_len, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

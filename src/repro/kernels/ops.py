@@ -1,0 +1,145 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle layout ((B,S,H,D) <-> (B*H,S,D)), pad head_dim to the MXU lane
+width (128) and sequence lengths to block multiples, and expose an
+``interpret`` switch so the same entry points run on CPU (tests) and
+TPU (production).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention_bhd
+from .flash_attention import flash_attention_bhsd
+from .flash_attention_bwd import flash_attention_bwd_bhsd
+from .mamba_scan import mamba_scan as _mamba_scan_raw
+
+LANE = 128
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    size = x.shape[axis]
+    target = (size + mult - 1) // mult * mult
+    if target == size:
+        return x, size
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads), size
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, S, Hq, D); k, v: (B, T, Hkv, D) -> (B, S, Hq, D)."""
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    q2 = jnp.moveaxis(q, 2, 1).reshape(b * hq, s, d)
+    k2 = jnp.moveaxis(k, 2, 1).reshape(b * hkv, t, d)
+    v2 = jnp.moveaxis(v, 2, 1).reshape(b * hkv, t, d)
+    q2, _ = _pad_axis(q2, 2, LANE)
+    k2, _ = _pad_axis(k2, 2, LANE)
+    v2, _ = _pad_axis(v2, 2, LANE)
+    bq_ = min(bq, s)
+    bk_ = min(bk, t)
+    q2, s0 = _pad_axis(q2, 1, bq_)
+    k2, t0 = _pad_axis(k2, 1, bk_)
+    v2, _ = _pad_axis(v2, 1, bk_)
+    o = flash_attention_bhsd(
+        q2, k2, v2, causal=causal, n_q_heads=hq, n_kv_heads=hkv,
+        bq=bq_, bk=bk_, kv_len=t0, sm_scale=1.0 / (d ** 0.5),
+        interpret=interpret)
+    o = o[:, :s0, :d].reshape(b, hq, s, d)
+    return jnp.moveaxis(o, 1, 2)
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_bwd(q, k, v, o, do, lse, *, causal: bool = True,
+                        bq: int = 128, bk: int = 128,
+                        interpret: bool = False):
+    """Backward kernel wrapper.  q/do/o: (B, S, Hq, D); k, v:
+    (B, T, Hkv, D); lse: (B, Hq, S).  Returns (dq, dk, dv) with dk/dv in
+    Hkv heads (GQA group-summed)."""
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    kx = jnp.repeat(k, rep, axis=2)
+    vx = jnp.repeat(v, rep, axis=2)
+
+    def to2(x):
+        return jnp.moveaxis(x, 2, 1).reshape(b * hq, x.shape[1], d)
+
+    q2, k2, v2 = to2(q), to2(kx), to2(vx)
+    do2, o2 = to2(do), to2(o)
+    delta = jnp.sum(do2.astype(jnp.float32) * o2.astype(jnp.float32),
+                    axis=-1)                                  # (BH, S)
+    lse2 = lse.reshape(b * hq, s)
+    q2, _ = _pad_axis(q2, 2, LANE)
+    k2, _ = _pad_axis(k2, 2, LANE)
+    v2, _ = _pad_axis(v2, 2, LANE)
+    do2, _ = _pad_axis(do2, 2, LANE)
+    bq_, bk_ = min(bq, s), min(bk, t)
+    q2, s0 = _pad_axis(q2, 1, bq_)
+    do2, _ = _pad_axis(do2, 1, bq_)
+    big_neg = jnp.full((b * hq, q2.shape[1] - s0), 1e30, lse2.dtype)
+    lse2 = jnp.concatenate([lse2, big_neg], axis=1) \
+        if q2.shape[1] != s0 else lse2
+    delta = jnp.pad(delta, ((0, 0), (0, q2.shape[1] - s0)))
+    k2, t0 = _pad_axis(k2, 1, bk_)
+    v2, _ = _pad_axis(v2, 1, bk_)
+    dq2, dk2, dv2 = flash_attention_bwd_bhsd(
+        q2, k2, v2, do2, lse2, delta, causal=causal, bq=bq_, bk=bk_,
+        kv_len=t0, sm_scale=1.0 / (d ** 0.5), interpret=interpret)
+    dq = jnp.moveaxis(dq2[:, :s0, :d].reshape(b, hq, s, d), 1, 2)
+    dkx = jnp.moveaxis(dk2[:, :t0, :d].reshape(b, hq, t, d), 1, 2)
+    dvx = jnp.moveaxis(dv2[:, :t0, :d].reshape(b, hq, t, d), 1, 2)
+    # GQA: sum gradient over the query groups of each KV head
+    dk = dkx.reshape(b, t, hkv, rep, d).sum(axis=3)
+    dv = dvx.reshape(b, t, hkv, rep, d).sum(axis=3)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length: jax.Array, *, bk: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, 1, Hq, D); k, v caches: (B, T, Hkv, D) -> (B, 1, Hq, D)."""
+    b, _, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    q2 = jnp.moveaxis(q, 2, 1).reshape(b * hq, 1, d)
+    k2 = jnp.moveaxis(k, 2, 1).reshape(b * hkv, t, d)
+    v2 = jnp.moveaxis(v, 2, 1).reshape(b * hkv, t, d)
+    q2, _ = _pad_axis(q2, 2, LANE)
+    k2, _ = _pad_axis(k2, 2, LANE)
+    v2, _ = _pad_axis(v2, 2, LANE)
+    bk_ = min(bk, t)
+    k2, _ = _pad_axis(k2, 1, bk_)
+    v2, _ = _pad_axis(v2, 1, bk_)
+    o = decode_attention_bhd(
+        q2, k2, v2, length, n_q_heads=hq, n_kv_heads=hkv, bk=bk_,
+        sm_scale=1.0 / (d ** 0.5), interpret=interpret)
+    o = o[:, :, :d].reshape(b, hq, 1, d)
+    return jnp.moveaxis(o, 1, 2)
+
+
+@partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
+def mamba_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+               C: jax.Array, D: jax.Array, *, bd: int = 512,
+               chunk: int = 64, interpret: bool = False) -> jax.Array:
+    """Selective scan; shapes as layers.selective_scan (y only)."""
+    bt, s, din = x.shape
+    bd_ = min(bd, din)
+    while din % bd_:
+        bd_ //= 2
+    chunk_ = min(chunk, s)
+    x_, s0 = _pad_axis(x, 1, chunk_)
+    dt_, _ = _pad_axis(dt, 1, chunk_)
+    B_, _ = _pad_axis(B, 1, chunk_)
+    C_, _ = _pad_axis(C, 1, chunk_)
+    y = _mamba_scan_raw(x_, dt_, A, B_, C_, D, bd=bd_, chunk=chunk_,
+                        interpret=interpret)
+    return y[:, :s0]

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+Deliberately naive: direct softmax attention and a step-by-step
+lax.scan SSM recurrence, all in float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool, kv_len: int | None = None) -> jax.Array:
+    """q: (B, S, Hq, D); k, v: (B, T, Hkv, D) -> (B, S, Hq, D)."""
+    b, s, hq, d = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+    if kv_len is not None:
+        mask = mask & (jnp.arange(t)[None, :] < kv_len)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length) -> jax.Array:
+    """q: (B, 1, Hq, D); caches (B, T, Hkv, D)."""
+    return attention_ref(q, k, v, causal=False, kv_len=length)
+
+
+def mamba_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                   C: jax.Array, D: jax.Array,
+                   h0: jax.Array | None = None):
+    """Step-by-step selective scan.  Shapes as kernels.mamba_scan.
+    Returns (y, h_final)."""
+    bt, s, din = x.shape
+    n = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((bt, din, n), jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    def step(h, blk):
+        x_t, dt_t, b_t, c_t = blk     # (Bt, Din), (Bt, Din), (Bt, N), (Bt, N)
+        decay = jnp.exp(dt_t[..., None] * Af[None])
+        h = decay * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + Df[None] * x_t
+        return h, y
+
+    h_fin, ys = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_fin

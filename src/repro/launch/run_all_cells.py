@@ -1,0 +1,65 @@
+"""Dry-run driver: every (arch x shape x mesh) cell, one subprocess each
+(compiles are heavy and jax device state is global).  Idempotent: cells
+with an existing OK report are skipped, so the driver can be re-run.
+
+    PYTHONPATH=src python -m repro.launch.run_all_cells --out reports
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import cells
+
+
+def cell_done(out: str, arch: str, shape: str, mesh: str, tag: str) -> bool:
+    p = os.path.join(out, f"{arch}.{shape}.{mesh}.{tag}.json")
+    if not os.path.exists(p):
+        return False
+    try:
+        with open(p) as f:
+            return json.load(f).get("status") == "ok"
+    except Exception:
+        return False
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="reports")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    meshes = args.meshes.split(",")
+    todo = []
+    for arch, shape, skip in cells(include_skips=False):
+        for mesh in meshes:
+            if not cell_done(args.out, arch, shape, mesh, args.tag):
+                todo.append((arch, shape, mesh))
+    print(f"{len(todo)} cells to run")
+    failed = []
+    for i, (arch, shape, mesh) in enumerate(todo):
+        t0 = time.time()
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--out", args.out, "--tag", args.tag]
+        r = subprocess.run(cmd, capture_output=True, text=True,
+                           timeout=args.timeout)
+        ok = r.returncode == 0
+        line = r.stdout.strip().splitlines()[-1] if r.stdout.strip() else ""
+        print(f"[{i+1}/{len(todo)}] {time.time()-t0:6.1f}s {line}")
+        if not ok:
+            failed.append((arch, shape, mesh))
+            print(r.stderr[-2000:])
+        sys.stdout.flush()
+    print(f"done; {len(failed)} failures: {failed}")
+
+
+if __name__ == "__main__":
+    main()

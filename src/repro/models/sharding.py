@@ -1,0 +1,260 @@
+"""Sharding rules: parameter/cache/batch PartitionSpecs per architecture.
+
+Megatron-style TP over heads / d_ff / expert-ff on the "model" axis,
+DP over batch on ("pod", "data").  Dims that do not divide the model
+axis are replicated (qwen2's 14 heads, granite's 40 experts) — the
+fallback is automatic and recorded by ``explain()``.
+
+This module is also where the Myrmics placement engine plugs in: the
+locality score of the paper (SV-E) maps to choosing, per tensor, the
+sharding that minimizes resharding bytes between producer and consumer
+steps (see core/placement.py and EXPERIMENTS.md SPerf).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ModelConfig
+
+MODEL_AXIS = "model"
+
+# activation batch axes for with_sharding_constraint inside layers
+# (set by launch/train code; empty = no constraints, e.g. smoke tests)
+_BATCH_AXES: tuple[str, ...] = ()
+
+
+def set_batch_axes(axes: tuple[str, ...]) -> None:
+    global _BATCH_AXES
+    _BATCH_AXES = tuple(axes)
+
+
+def get_batch_axes() -> tuple[str, ...]:
+    return _BATCH_AXES
+
+
+_CTX_MESH: Mesh | None = None
+
+
+def set_ctx_mesh(mesh: Mesh | None) -> None:
+    global _CTX_MESH
+    _CTX_MESH = mesh
+
+
+def get_ctx_mesh() -> Mesh | None:
+    return _CTX_MESH
+
+
+def constrain_batch_dim(x):
+    """Pin dim 0 of an activation to the DP axes (keeps GSPMD from
+    replicating through gather/scatter chains, e.g. MoE dispatch)."""
+    if not _BATCH_AXES:
+        return x
+    from jax.lax import with_sharding_constraint
+    from jax.sharding import PartitionSpec as P
+    spec = P(_BATCH_AXES, *([None] * (x.ndim - 1)))
+    try:
+        return with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _shard_dim(shape: tuple[int, ...], dim: int, mesh: Mesh,
+               zero_axis: str | None = None) -> P:
+    """P with ``dim`` on the model axis when divisible, else replicated."""
+    spec: list = [None] * len(shape)
+    if shape[dim] % _axis_size(mesh, MODEL_AXIS) == 0:
+        spec[dim] = MODEL_AXIS
+    return P(*spec)
+
+
+# leaf-name -> which dim (negative, from the right) carries the TP shard
+_RULES: dict[str, int] = {
+    "emb": -2,        # (V, D): shard vocab
+    "lm_head": -1,    # (D, V): shard vocab
+    "wq": -1, "wk": -1, "wv": -1,
+    "bq": -1, "bk": -1, "bv": -1,
+    "wo": -2,
+    "wg": -1, "wu": -1,
+    "wd": -2,
+    "in_proj": -1,
+    "out_proj": -2,
+    "conv_w": -1,
+    "x_proj": -2,
+    "dt_proj": -1,
+    "dt_bias": -1,
+    "A_log": -2,
+    "D": -1,
+}
+_REPLICATED = {"router", "ln", "ln1", "ln2", "ln_x", "out_norm",
+               "pos_enc", "pos_dec", "dt", "norm"}
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh,
+                expert_parallel: bool = False,
+                fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching ``params_shape`` (shapes or arrays).
+
+    ``fsdp``: additionally shard every large parameter over the "data"
+    axis on its largest free divisible dim (GSPMD inserts the per-layer
+    all-gathers — ZeRO-3-style; required to FIT grok-1 314B on 256
+    chips, costed in EXPERIMENTS.md §Perf).
+    """
+    data = _axis_size(mesh, "data") if "data" in mesh.axis_names else 1
+
+    def add_fsdp(spec: list, shape) -> list:
+        best, best_size = -1, 0
+        for i, (dim, used) in enumerate(zip(shape, spec)):
+            if used is None and dim % data == 0 and dim > best_size:
+                best, best_size = i, dim
+        if best >= 0 and best_size >= 1024:
+            spec[best] = "data"
+        return spec
+
+    def leaf_spec(path, leaf) -> P:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        if name in _REPLICATED:
+            return P()
+        spec = None
+        if expert_parallel and cfg.moe is not None and name in (
+                "wg", "wu", "wd"):
+            # EP: shard the expert dim (dim after the layer-stack lead)
+            e_dim = len(shape) - 3
+            if shape[e_dim] % _axis_size(mesh, MODEL_AXIS) == 0:
+                spec = [None] * len(shape)
+                spec[e_dim] = MODEL_AXIS
+        if spec is None and name in _RULES:
+            dim = _RULES[name] % len(shape)
+            spec = list(_shard_dim(shape, dim, mesh)) \
+                + [None] * (len(shape) - len(_shard_dim(shape, dim, mesh)))
+        if spec is None:
+            spec = [None] * len(shape)
+        if fsdp:
+            spec = add_fsdp(spec, shape)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def opt_state_specs(param_spec_tree: Any, zero: bool = False,
+                    mesh: Mesh | None = None, shapes: Any = None) -> Any:
+    """Moment shardings: same as params; with ``zero`` additionally
+    partition the largest unsharded dim over "data" when divisible."""
+    if not zero:
+        return param_spec_tree
+
+    def add_data(spec: P, leaf) -> P:
+        data = _axis_size(mesh, "data")
+        cur = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        flat_used = set()
+        for u in cur:
+            if isinstance(u, tuple):
+                flat_used.update(u)
+            elif u is not None:
+                flat_used.add(u)
+        if "data" in flat_used:
+            return P(*cur)  # params already FSDP-sharded over data
+        best, best_size = -1, 0
+        for i, (s, used) in enumerate(zip(leaf.shape, cur)):
+            if used is None and s % data == 0 and s > best_size:
+                best, best_size = i, s
+        if best >= 0:
+            cur[best] = "data"
+            return P(*cur)
+        return spec
+
+    return jax.tree.map(add_data, param_spec_tree, shapes)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, kind: str) -> dict[str, P]:
+    dp = dp_axes(mesh)
+    bspec = P(dp)
+    out = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.family == "encdec":
+        out["frames"] = P(dp, None, None)
+    if cfg.family == "vlm":
+        out["img_embeds"] = P(dp, None, None)
+    if kind == "decode":
+        out = {"token": bspec}
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh,
+                batch: int) -> Any:
+    """Decode-cache shardings.
+
+    KV caches: batch over DP when divisible; KV heads over model when
+    divisible, else the *sequence* dim over model (flash-decode style
+    sharded-KV reduction — GSPMD stitches the softmax).  SSM states:
+    d_inner over model.
+    """
+    dp = dp_axes(mesh)
+    dp_ok = batch % int(np.prod([mesh.shape[a] for a in dp])) == 0
+    model = _axis_size(mesh, MODEL_AXIS)
+
+    def spec(path, leaf) -> P:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        if name == "len":
+            return P()
+        s: list = [None] * len(shape)
+        if name in ("k", "v", "xk", "xv"):
+            # (..., B, T, Hkv, hd): locate batch dim = ndim-4
+            bdim = len(shape) - 4
+            if dp_ok:
+                s[bdim] = dp
+            if cfg.sharded_decode and name in ("k", "v") \
+                    and shape[-3] % model == 0:
+                s[-3] = MODEL_AXIS   # shard sequence (shard_map decode)
+            elif shape[-2] % model == 0:
+                s[-2] = MODEL_AXIS
+            elif shape[-3] % model == 0:
+                s[-3] = MODEL_AXIS   # shard sequence
+            return P(*s)
+        if name == "h":        # (L, B, din, N)
+            if dp_ok:
+                s[1] = dp
+            if shape[2] % model == 0:
+                s[2] = MODEL_AXIS
+            return P(*s)
+        if name == "conv":     # (L, B, K-1, din)
+            if dp_ok:
+                s[1] = dp
+            if shape[3] % model == 0:
+                s[3] = MODEL_AXIS
+            return P(*s)
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def explain(cfg: ModelConfig, params_shape: Any, mesh: Mesh) -> list[str]:
+    """Human-readable report of replicated-fallback decisions."""
+    specs = param_specs(cfg, params_shape, mesh)
+    notes = []
+
+    def visit(path, leaf, spec):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if all(s is None for s in spec) and leaf.size > 1_000_000:
+            notes.append(f"replicated large tensor {name} {leaf.shape}")
+
+    jax.tree_util.tree_map_with_path(visit, params_shape, specs)
+    return notes

@@ -1,0 +1,64 @@
+"""int8 gradient compression with error feedback (off by default).
+
+For DP all-reduce at 1000+ nodes the gradient volume dominates the DCN
+budget; int8 quantization with per-tensor scales cuts it 4x (bf16->int8
+plus scale).  Error feedback accumulates the quantization residual into
+the next step's gradient so the *expected* update is unbiased — the
+standard EF-SGD construction, which keeps convergence (tested:
+quadratic + smoke-LM loss still decreases).
+
+Usage:
+    comp = GradCompressor()
+    state = comp.init(grads)
+    q, state = comp.compress(grads, state)      # what the wire carries
+    grads_hat = comp.decompress(q)              # what the optimizer sees
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any          # residual feedback, same tree as grads
+
+
+class Quantized(NamedTuple):
+    values: Any         # int8 tree
+    scales: Any         # f32 per-tensor scales
+
+
+class GradCompressor:
+    def init(self, grads: Any) -> CompressionState:
+        return CompressionState(
+            error=jax.tree.map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+    def compress(self, grads: Any,
+                 state: CompressionState) -> tuple[Quantized, CompressionState]:
+        def q(g, e):
+            g = g.astype(jnp.float32) + e
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            vals = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+            err = g - vals.astype(jnp.float32) * scale
+            return vals, scale, err
+
+        flat, tdef = jax.tree_util.tree_flatten(grads)
+        err_flat = tdef.flatten_up_to(state.error)
+        out = [q(g, e) for g, e in zip(flat, err_flat)]
+        values = tdef.unflatten([o[0] for o in out])
+        scales = tdef.unflatten([o[1] for o in out])
+        new_err = tdef.unflatten([o[2] for o in out])
+        return Quantized(values, scales), CompressionState(error=new_err)
+
+    def decompress(self, q: Quantized) -> Any:
+        return jax.tree.map(
+            lambda v, s: v.astype(jnp.float32) * s, q.values, q.scales)
+
+    @staticmethod
+    def wire_bytes(q: Quantized) -> int:
+        return sum(v.size for v in jax.tree.leaves(q.values)) + \
+            4 * len(jax.tree.leaves(q.scales))

@@ -1,0 +1,74 @@
+"""Parse collective ops (and their byte volumes) out of HLO text.
+
+cost_analysis() does not expose collective bytes, so we scan the
+post-SPMD module text for all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instructions and sum their *result*
+shard sizes (the module is the per-device program, so these are
+per-device bytes).  Convention (documented in EXPERIMENTS.md):
+
+  * all-reduce counts 2x its result bytes (ring: reduce-scatter +
+    all-gather phases each move ~(n-1)/n of the buffer);
+  * everything else counts 1x result bytes.
+
+The absolute numbers carry that convention; comparisons between
+baseline and optimized lowerings (Sperf) are convention-invariant.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# e.g.:  %all-gather.3 = bf16[4,2048]{1,0} all-gather(...)
+_INSTR = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+
+_TUPLE_INSTR = re.compile(
+    r"=\s*\(([^)]*)\)\s*(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Returns {op_kind: bytes} plus a "total" entry (per-device)."""
+    out: dict[str, int] = defaultdict(int)
+    seen_ids: set[str] = set()
+    for line in hlo_text.splitlines():
+        if "-start(" in line:
+            # avoid double counting start/done pairs: count starts only
+            pass
+        elif "-done(" in line:
+            continue
+        m = _INSTR.search(line)
+        if m:
+            dtype, dims, op = m.groups()
+            mult = 2 if op == "all-reduce" else 1
+            out[op] += mult * _shape_bytes(dtype, dims)
+            continue
+        mt = _TUPLE_INSTR.search(line)
+        if mt:
+            inner, op = mt.groups()
+            mult = 2 if op == "all-reduce" else 1
+            total = sum(_shape_bytes(d, s) for d, s in _SHAPE.findall(inner))
+            # async tuple form carries (operand, result, ...): halve
+            out[op] += mult * total // 2 if "-start(" in line else mult * total
+    out["total"] = sum(v for k, v in out.items())
+    return dict(out)

@@ -1,0 +1,87 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  cost_analysis() on the SPMD-partitioned module
+returns *per-device* FLOPs/bytes; collective bytes are likewise
+per-device (see collectives.py), so no chip-count division is applied.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link (serialization assumption: 1 link)
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_global: float       # 6*N*D (or 6*N_active*D)
+    n_chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/dispatch waste detector."""
+        hlo_global = self.flops_per_device * self.n_chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-model-FLOPs throughput at the bound, vs chip peak."""
+        if self.t_bound == 0:
+            return 0.0
+        per_dev_useful = self.model_flops_global / self.n_chips
+        return (per_dev_useful / self.t_bound) / PEAK_FLOPS
+
+    def as_dict(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bound": self.bound,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops_global": self.model_flops_global,
+            "n_chips": self.n_chips,
+        }
+
+
+def model_flops(cfg, shape, n_tokens: int | None = None) -> float:
+    """6*N_active*D for training; 2*N_active*D for a forward-only token
+    batch (prefill/decode)."""
+    n_active = cfg.active_param_count()
+    if n_tokens is None:
+        n_tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if shape.kind == "train" else 2.0
+    if shape.kind == "decode":
+        n_tokens = shape.global_batch  # one token per stream per step
+    return mult * n_active * n_tokens

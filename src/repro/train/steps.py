@@ -1,0 +1,65 @@
+"""Step functions: training (loss + grad + AdamW) and serving steps.
+
+``make_train_step`` optionally accumulates gradients over microbatches
+(lax.scan) — one of the Sperf levers (memory term vs step latency).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import LM
+from repro.optim import AdamW, OptState
+
+
+def make_train_step(lm: LM, opt: AdamW, microbatches: int = 1,
+                    remat: bool = True):
+    def loss_fn(params, batch):
+        return lm.loss(params, batch, remat=remat)
+
+    if microbatches == 1:
+        def train_step(params, opt_state: OptState, batch: dict):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            params, opt_state, gnorm = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": loss, "gnorm": gnorm}
+        return train_step
+
+    def train_step(params, opt_state: OptState, batch: dict):
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def acc_step(acc, mb):
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            acc_loss, acc_g = acc
+            return (acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_g, grads)), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (tot_loss, grads), _ = jax.lax.scan(
+            acc_step, (jnp.float32(0.0), zeros), micro)
+        grads = jax.tree.map(lambda g: (g / microbatches).astype(jnp.float32),
+                             grads)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": tot_loss / microbatches,
+                                   "gnorm": gnorm}
+    return train_step
+
+
+def make_prefill_step(lm: LM, max_len: int):
+    def prefill_step(params, batch: dict):
+        return lm.prefill(params, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(lm: LM):
+    def decode_step(params, cache: dict, token: jax.Array):
+        return lm.decode_step(params, cache, token)
+    return decode_step

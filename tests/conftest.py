@@ -1,0 +1,5 @@
+import os
+
+# Smoke tests and benches must see the single real CPU device; the
+# 512-device XLA flag is set ONLY inside launch/dryrun.py.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

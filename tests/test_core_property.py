@@ -1,0 +1,153 @@
+"""Property-based tests: the runtime's defining invariant is that any
+schedule it produces is equivalent to the serial elision (paper [6]).
+
+Hypothesis generates random region trees + random task programs; we run
+them through the full distributed runtime under random hierarchy
+configurations and require bit-identical labelled storage vs the
+SerialRuntime oracle.
+"""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import In, InOut, Myrmics, Out, Safe, SerialRuntime
+
+MAX_REGIONS = 4
+MAX_OBJECTS = 6
+MAX_TASKS = 14
+
+
+@st.composite
+def programs(draw):
+    """A random well-formed Myrmics program description."""
+    n_regions = draw(st.integers(1, MAX_REGIONS))
+    # region parents: region i attaches to a previous region or root(-1)
+    parents = [draw(st.integers(-1, i - 1)) for i in range(n_regions)]
+    n_objects = draw(st.integers(1, MAX_OBJECTS))
+    obj_region = [draw(st.integers(0, n_regions - 1))
+                  for _ in range(n_objects)]
+    tasks = []
+    for t in range(draw(st.integers(1, MAX_TASKS))):
+        kind = draw(st.sampled_from(["obj_write", "obj_rmw", "region_reduce",
+                                     "region_scale"]))
+        if kind in ("obj_write", "obj_rmw"):
+            target = draw(st.integers(0, n_objects - 1))
+            val = draw(st.integers(0, 100))
+            tasks.append((kind, target, val))
+        else:
+            target = draw(st.integers(0, n_regions - 1))
+            val = draw(st.integers(1, 5))
+            tasks.append((kind, target, val))
+    duration = draw(st.sampled_from([0.0, 1e5, 1e6]))
+    return parents, obj_region, tasks, duration
+
+
+def build_app(desc):
+    parents, obj_region, tasks, duration = desc
+
+    def app(ctx, root):
+        rids = []
+        for i, p in enumerate(parents):
+            parent = root if p < 0 else rids[p]
+            rids.append(ctx.ralloc(parent, i % 3, label=f"r{i}"))
+        oids = [ctx.alloc(64, rids[r], label=f"o{j}")
+                for j, r in enumerate(obj_region)]
+        region_objs = {i: [o for o, r in zip(oids, obj_region)
+                           if descends(r, i, parents)]
+                       for i in range(len(parents))}
+        for j, o in enumerate(oids):
+            ctx.spawn(lambda c, oid, j=j: c.write(oid, j),
+                      [Out(o)], duration=duration)
+        for kind, target, val in tasks:
+            if kind == "obj_write":
+                ctx.spawn(lambda c, oid, v=val: c.write(oid, v),
+                          [Out(oids[target])], duration=duration)
+            elif kind == "obj_rmw":
+                ctx.spawn(
+                    lambda c, oid, v=val: c.write(oid, c.read(oid) * 3 + v),
+                    [InOut(oids[target])], duration=duration)
+            elif kind == "region_scale":
+                objs = region_objs[target]
+                ctx.spawn(
+                    lambda c, rid, os=list(objs), v=val: [
+                        c.write(o, c.read(o) * v) for o in os],
+                    [InOut(rids[target])], duration=duration)
+            else:  # region_reduce: read-only over the region
+                objs = region_objs[target]
+                out = ctx.alloc(64, root, label=f"red{len(rids)}_{target}_{val}")
+                ctx.spawn(
+                    lambda c, rid, so, os=list(objs): c.write(
+                        so, sum(c.read(o) or 0 for o in os)),
+                    [In(rids[target]), InOut(out)], duration=duration)
+        yield ctx.wait([InOut(root)])
+    return app
+
+
+def descends(r, anc, parents):
+    while r >= 0:
+        if r == anc:
+            return True
+        r = parents[r]
+    return False
+
+
+@settings(max_examples=40, deadline=None)
+@given(desc=programs(),
+       nw=st.sampled_from([1, 3, 8, 16]),
+       levels=st.sampled_from([[1], [1, 2], [1, 4], [1, 2, 4]]),
+       policy=st.sampled_from([0, 20, 100]))
+def test_random_programs_serial_equivalent(desc, nw, levels, policy):
+    app = build_app(desc)
+    sr = SerialRuntime()
+    sr.run(app)
+    rt = Myrmics(n_workers=nw, sched_levels=levels, policy_p=policy)
+    rep = rt.run(app)
+    assert rep["tasks_spawned"] == rep["tasks_done"], "program hung"
+    assert rt.labelled_storage() == sr.labelled_storage()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_children=st.integers(1, 4), depth=st.integers(1, 3),
+       nw=st.sampled_from([2, 8]))
+def test_recursive_spawn_trees(n_children, depth, nw):
+    """Nested parallelism (paper Fig. 1): tasks spawning tasks over a
+    region tree, with waits, equivalent to the serial elision."""
+
+    def process(ctx, rid, oids, sub, d):
+        for o in oids:
+            ctx.spawn(lambda c, oo: c.write(oo, c.read(oo) + d),
+                      [InOut(o)])
+        for srid, soids, ssub in sub:
+            ctx.spawn(process, [InOut(srid), Safe(soids), Safe(ssub),
+                                Safe(d + 1)])
+        yield ctx.wait([InOut(rid)])
+        for o in oids:
+            ctx.write(o, ctx.read(o) * 2)
+
+    def build(ctx, parent, d, tag):
+        rid = ctx.ralloc(parent, d, label=f"reg{tag}")
+        oids = ctx.balloc(32, rid, 2, label=f"obj{tag}")
+        sub = []
+        if d < depth:
+            for i in range(n_children):
+                sub.append(build(ctx, rid, d + 1, f"{tag}.{i}"))
+        return rid, list(oids), sub
+
+    def app(ctx, root):
+        rid, oids, sub = build(ctx, root, 1, "0")
+        for i, o in enumerate(all_objs(rid, oids, sub)):
+            ctx.spawn(lambda c, oo, i=i: c.write(oo, i), [Out(o)])
+        ctx.spawn(process, [InOut(rid), Safe(oids), Safe(sub), Safe(1)])
+        yield ctx.wait([InOut(root)])
+
+    def all_objs(rid, oids, sub):
+        out = list(oids)
+        for s in sub:
+            out.extend(all_objs(*s))
+        return out
+
+    sr = SerialRuntime()
+    sr.run(app)
+    rt = Myrmics(n_workers=nw, sched_levels=[1, 2])
+    rep = rt.run(app)
+    assert rep["tasks_spawned"] == rep["tasks_done"]
+    assert rt.labelled_storage() == sr.labelled_storage()

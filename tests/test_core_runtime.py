@@ -1,0 +1,232 @@
+"""Core Myrmics runtime: dependency semantics, calibration, scale-out."""
+
+import pytest
+
+from repro.core import In, InOut, Myrmics, Out, Safe, SerialRuntime
+from repro.core.sim import CostModel
+
+CONFIGS = [(1, [1]), (4, [1]), (8, [1, 2]), (16, [1, 4]), (32, [1, 2, 4])]
+
+
+def pipeline_app(ctx, root):
+    """init -> transform -> reduce chain over a region of objects."""
+    top = ctx.ralloc(root, 1, label="top")
+    oids = ctx.balloc(8, top, 6, label="x")
+    s = ctx.alloc(8, root, label="sum")
+
+    def init(c, oid, v):
+        c.compute(1000)
+        c.write(oid, v)
+
+    def bump(c, oid, dv):
+        c.compute(5000)
+        c.write(oid, c.read(oid) + dv)
+
+    def reduce_all(c, top_rid, s_oid, oids):
+        c.compute(2000)
+        c.write(s_oid, sum(c.read(o) for o in oids))
+
+    for i, o in enumerate(oids):
+        ctx.spawn(init, [Out(o), Safe(i)])
+    for o in oids:
+        ctx.spawn(bump, [InOut(o), Safe(10)])
+    for o in oids:
+        ctx.spawn(bump, [InOut(o), Safe(100)])
+    ctx.spawn(reduce_all, [In(top), InOut(s), Safe(list(oids))])
+    yield ctx.wait([InOut(root)])
+
+
+def nested_app(ctx, root):
+    """Paper Fig. 1 shape: hierarchical region tree with nested spawns."""
+    top = ctx.ralloc(root, 1, label="tree")
+    left = ctx.ralloc(top, 2, label="L")
+    right = ctx.ralloc(top, 2, label="R")
+    lo = ctx.balloc(8, left, 3, label="lo")
+    ro = ctx.balloc(8, right, 3, label="ro")
+    res = ctx.alloc(8, root, label="res")
+
+    def init(c, oid, v):
+        c.write(oid, v)
+
+    def process(c, rid, oids):
+        # spawns children operating on objects of its own region
+        for o in oids:
+            c.spawn(lambda cc, oo: cc.write(oo, cc.read(oo) * 2),
+                    [InOut(o)])
+        yield c.wait([InOut(rid)])
+        # after children: finishing touch
+        for o in oids:
+            c.write(o, c.read(o) + 1)
+
+    def collect(c, top_rid, res_oid, all_oids):
+        c.write(res_oid, sum(c.read(o) for o in all_oids))
+
+    for i, o in enumerate(list(lo) + list(ro)):
+        ctx.spawn(init, [Out(o), Safe(i + 1)])
+    ctx.spawn(process, [InOut(left), Safe(list(lo))])
+    ctx.spawn(process, [InOut(right), Safe(list(ro))])
+    ctx.spawn(collect, [In(top), InOut(res), Safe(list(lo) + list(ro))])
+    yield ctx.wait([InOut(root)])
+
+
+@pytest.mark.parametrize("nw,levels", CONFIGS)
+@pytest.mark.parametrize("app", [pipeline_app, nested_app])
+def test_serial_equivalence(app, nw, levels):
+    sr = SerialRuntime()
+    sr.run(app)
+    rt = Myrmics(n_workers=nw, sched_levels=levels)
+    rep = rt.run(app)
+    assert rep["tasks_spawned"] == rep["tasks_done"]
+    assert rt.labelled_storage() == sr.labelled_storage()
+
+
+@pytest.mark.parametrize("p", [0, 50, 100])
+def test_policy_preserves_semantics(p):
+    sr = SerialRuntime()
+    sr.run(pipeline_app)
+    rt = Myrmics(n_workers=8, sched_levels=[1, 2], policy_p=p)
+    rt.run(pipeline_app)
+    assert rt.labelled_storage() == sr.labelled_storage()
+
+
+def test_read_sharing_allows_concurrency():
+    """Multiple readers of one region run concurrently; a writer behind
+    them waits (paper SV-D read/write counter separation)."""
+    def app(ctx, root):
+        top = ctx.ralloc(root, 1, label="t")
+        o = ctx.alloc(8, top, label="o")
+        ctx.spawn(lambda c, oid: c.write(oid, 7), [Out(o)])
+        for _ in range(4):
+            ctx.spawn(None, [In(top)], duration=1e6)
+        ctx.spawn(lambda c, oid: c.write(oid, c.read(oid) + 1), [InOut(o)])
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=4, sched_levels=[1])
+    rep = rt.run(app)
+    assert rep["tasks_done"] == rep["tasks_spawned"]
+    assert rt.labelled_storage()["o"] == 8
+    # 4 x 1M cycle readers on 4 workers must overlap: well below 4M serial
+    assert rep["total_cycles"] < 2.5e6
+
+
+def test_write_ordering_is_program_order():
+    def app(ctx, root):
+        o = ctx.alloc(8, root, label="o")
+        ctx.spawn(lambda c, oid: c.write(oid, 1), [Out(o)])
+        for v in (2, 3, 4, 5):
+            ctx.spawn(lambda c, oid, v=v: c.write(oid, c.read(oid) * 10 + v),
+                      [InOut(o)])
+        yield ctx.wait([InOut(root)])
+
+    for nw, lv in CONFIGS:
+        rt = Myrmics(n_workers=nw, sched_levels=lv)
+        rt.run(app)
+        assert rt.labelled_storage()["o"] == 12345
+
+
+def test_permission_enforcement():
+    def bad(ctx, root):
+        a = ctx.alloc(8, root, label="a")
+        b = ctx.alloc(8, root, label="b")
+        ctx.spawn(lambda c, x: c.write(x, 0), [Out(a)])
+        # task gets read-only access but tries to write
+        ctx.spawn(lambda c, x: c.write(x, 1), [In(a)])
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=2, sched_levels=[1])
+    with pytest.raises(PermissionError):
+        rt.run(bad)
+
+
+def test_calibration_heterogeneous():
+    """Fig. 7a: spawn ~16.2K cycles, execute ~13.3K (pm 5%)."""
+    cm = CostModel.heterogeneous()
+    spawn = (cm.worker_spawn_call + cm.spawn_proc + cm.dep_enqueue_per_arg
+             + 2 * cm.msg_base_latency)
+    assert abs(spawn - 16200) / 16200 < 0.05
+
+    def app(ctx, root):
+        o = ctx.alloc(64, root, label="o")
+        ctx.spawn(lambda c, x: c.write(x, 0), [Out(o)])
+        for _ in range(300):
+            ctx.spawn(None, [InOut(o)])
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=1, sched_levels=[1], cost=cm)
+    rep = rt.run(app)
+    per_task = rep["total_cycles"] / 300
+    exec_cycles = per_task - (cm.worker_spawn_call - 8000) - 8200
+    # serialized per-task period ~ spawn-sched-path + exec path
+    assert 11_000 < exec_cycles < 16_000
+
+
+def test_calibration_microblaze():
+    cm = CostModel.microblaze()
+    spawn = (cm.worker_spawn_call + cm.spawn_proc + cm.dep_enqueue_per_arg
+             + 2 * cm.msg_base_latency)
+    assert abs(spawn - 37400) / 37400 < 0.05
+
+
+def test_kill_worker_reschedules():
+    def app(ctx, root):
+        oids = ctx.balloc(64, root, 20, label="x")
+        for i, o in enumerate(oids):
+            ctx.spawn(lambda c, oid, i=i: c.write(oid, i), [Out(o)],
+                      duration=2e6)
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=8, sched_levels=[1, 2])
+    rt.kill_worker("w1", at=3e6)
+    rep = rt.run(app)
+    assert rep["tasks_done"] == rep["tasks_spawned"]
+    vals = rt.labelled_storage()
+    assert all(vals[f"x[{i}]"] == i for i in range(20))
+    assert rt.tasks_rescheduled >= 1
+
+
+def test_backup_tasks_preserve_results():
+    def app(ctx, root):
+        oids = ctx.balloc(64, root, 24, label="x")
+        for i, o in enumerate(oids):
+            ctx.spawn(lambda c, oid, i=i: c.write(oid, i * i), [Out(o)],
+                      duration=1e6)
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=8, sched_levels=[1, 2])
+    rt.backup_factor = 2.0
+    rep = rt.run(app)
+    assert rep["tasks_done"] == rep["tasks_spawned"]
+    vals = rt.labelled_storage()
+    assert all(vals[f"x[{i}]"] == i * i for i in range(24))
+
+
+def test_elastic_join_speeds_up():
+    def app(ctx, root):
+        oids = ctx.balloc(64, root, 40, label="x")
+        for o in oids:
+            ctx.spawn(None, [Out(o)], duration=2e6)
+        yield ctx.wait([InOut(root)])
+
+    rt_small = Myrmics(n_workers=2, sched_levels=[1, 2])
+    t_small = rt_small.run(app)["total_cycles"]
+    rt = Myrmics(n_workers=2, sched_levels=[1, 2])
+    rt.engine.at(1e6, lambda: rt.add_worker("s1.0"))
+    rt.engine.at(1e6, lambda: rt.add_worker("s1.1"))
+    rep = rt.run(app)
+    assert rep["tasks_done"] == rep["tasks_spawned"]
+    assert rep["total_cycles"] < t_small * 0.7
+
+
+def test_hierarchy_beats_single_scheduler_under_load():
+    """Fig. 8/12 direction: many small tasks saturate one scheduler;
+    a 2-level hierarchy is faster."""
+    def app(ctx, root):
+        regions = [ctx.ralloc(root, 1, label=f"r{i}") for i in range(8)]
+        for r in regions:
+            for o in ctx.balloc(64, r, 16):
+                ctx.spawn(None, [Out(o)], duration=200_000)
+        yield ctx.wait([InOut(root)])
+
+    t_flat = Myrmics(n_workers=64, sched_levels=[1]).run(app)["total_cycles"]
+    t_hier = Myrmics(n_workers=64, sched_levels=[1, 8]).run(app)["total_cycles"]
+    assert t_hier < t_flat

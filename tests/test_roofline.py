@@ -1,0 +1,112 @@
+"""Roofline machinery: HLO cost parser, collectives parser, terms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.collectives import collective_bytes
+from repro.roofline.hlo_cost import HloCostModel, analyze
+from repro.roofline.model import Roofline
+
+
+def test_hlo_cost_counts_while_trip_counts():
+    def f(x, w):
+        def body(c, w1):
+            return jnp.tanh(c @ w1), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((8, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((5, 128, 128), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    res = analyze(c.as_text())
+    expected = 5 * (2 * 8 * 128 * 128 + 8 * 128) + 8 * 128
+    assert abs(res["flops"] - expected) / expected < 0.05
+    # XLA's own analysis undercounts (body once) — ours must not
+    xla = float(c.cost_analysis().get("flops", 0.0))
+    assert res["flops"] > 3 * xla
+
+
+def test_hlo_cost_scanned_weights_sliced_bytes():
+    """Layer-stacked weights inside a scan are read once per layer, not
+    the whole stack per iteration."""
+    L, D = 10, 64
+
+    def f(x, w):
+        def body(c, w1):
+            return c @ w1, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((4, D), jnp.float32)
+    w = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    res = analyze(c.as_text())
+    w_bytes = L * D * D * 4
+    # weight traffic ~1x the stack (plus loop-boundary copies), far
+    # below the naive L x stack = 10x overcount
+    assert res["bytes"] < 6 * w_bytes
+
+
+def test_collectives_parser():
+    mesh = jax.make_mesh((1,), ("d",))
+
+    hlo = """
+      %all-gather.1 = bf16[16,1024]{1,0} all-gather(%x)
+      %all-reduce.2 = f32[256]{0} all-reduce(%y)
+      %reduce-scatter.3 = f32[4,32]{1,0} reduce-scatter(%z)
+      %other.4 = f32[8]{0} add(%a, %b)
+    """
+    got = collective_bytes(hlo)
+    assert got["all-gather"] == 16 * 1024 * 2
+    assert got["all-reduce"] == 2 * 256 * 4
+    assert got["reduce-scatter"] == 4 * 32 * 4
+    assert got["total"] == (got["all-gather"] + got["all-reduce"]
+                            + got["reduce-scatter"])
+
+
+def test_collectives_from_real_psum():
+    import os
+    devs = jax.devices()
+    if len(devs) < 2:
+        # single device: psum compiles away; just assert parser is clean
+        f = jax.jit(lambda x: x * 2)
+        text = f.lower(jnp.ones(8)).compile().as_text()
+        assert collective_bytes(text)["total"] == 0
+        return
+
+
+def test_roofline_terms():
+    r = Roofline(flops_per_device=197e12, hbm_bytes_per_device=819e9,
+                 collective_bytes_per_device=50e9,
+                 model_flops_global=197e12 * 4, n_chips=4)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert abs(r.t_collective - 1.0) < 1e-9
+    assert r.useful_flops_fraction == 1.0
+    assert abs(r.roofline_fraction - 1.0) < 1e-9
+    r2 = Roofline(197e12, 819e9 * 2, 0, 197e12 * 4, 4)
+    assert r2.bound == "memory"
+
+
+def test_sharding_rules_divisibility():
+    from repro.configs import ARCH_IDS, get_config
+    from repro.models.sharding import opt_state_specs, param_specs
+    from repro.models.transformer import LM
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for arch in ARCH_IDS:
+        cfg = get_config(arch).smoke()
+        lm = LM(cfg)
+        shapes = lm.abstract_params()
+        for fsdp in (False, True):
+            specs = param_specs(cfg, shapes, mesh, fsdp=fsdp)
+            mspecs = opt_state_specs(specs, zero=True, mesh=mesh,
+                                     shapes=shapes)
+
+            def check(path, leaf, spec):
+                assert len(spec) <= len(leaf.shape), (path, leaf.shape, spec)
+                flat = [a for s in spec if s is not None
+                        for a in (s if isinstance(s, tuple) else (s,))]
+                assert len(flat) == len(set(flat)), (path, spec)
+            jax.tree_util.tree_map_with_path(check, shapes, specs)
+            jax.tree_util.tree_map_with_path(check, shapes, mspecs)

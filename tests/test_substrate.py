@@ -1,0 +1,169 @@
+"""Optimizer, data pipeline, checkpointing, train loop, serving."""
+
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.optim import AdamW, clip_by_global_norm, cosine_schedule
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0, warmup_steps=1, total_steps=200)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum((p["w"] - 1.0) ** 2)
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 20.0) < 1e-4
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-4
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert abs(float(lr(10)) - 1.0) < 1e-6
+    assert float(lr(100)) < 1e-6
+    assert float(lr(55)) < float(lr(20))
+
+
+def test_data_determinism_and_sharding():
+    from repro.data import TokenDataset
+    cfg = get_config("qwen2_0_5b").smoke()
+    ds = TokenDataset(cfg, seq_len=8, global_batch=4, seed=3)
+    a = ds.get_batch(5)
+    b = ds.get_batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.get_batch(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+    # restore
+    ds2, step = TokenDataset.restore(cfg, 8, 4, ds.state(5))
+    np.testing.assert_array_equal(ds2.get_batch(step)["tokens"], a["tokens"])
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore(str(tmp_path))
+    state = {"p": jnp.ones((3, 4), jnp.bfloat16) * 1.5,
+             "q": {"r": jnp.arange(5, dtype=jnp.int32)}}
+    store.save(7, state, extra={"note": "x"})
+    assert store.latest_step() == 7
+    out = store.restore(7, state)
+    np.testing.assert_array_equal(np.asarray(out["p"], np.float32),
+                                  np.asarray(state["p"], np.float32))
+    assert out["q"]["r"].dtype == jnp.int32
+    assert store.extra(7) == {"note": "x"}
+
+
+def test_checkpoint_gc_and_async(tmp_path):
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore(str(tmp_path), keep=2)
+    state = {"p": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        store.save_async(s, state)
+    store.wait()
+    assert store.steps() == [3, 4]
+
+
+def test_train_loop_failure_restart(tmp_path):
+    from repro.train.loop import FailurePlan, train
+    cfg = get_config("qwen2_0_5b").smoke()
+    rep = train(cfg, seq_len=8, global_batch=2, steps=10,
+                ckpt_dir=str(tmp_path), ckpt_every=3,
+                failure_plan=FailurePlan(fail_at_steps=(5,)))
+    assert rep.restarts == 1
+    assert rep.steps_run >= 10
+    # resumed run must replay steps 3,4 after restoring step-3 ckpt
+    assert len(rep.losses) == rep.steps_run
+
+
+def test_train_loop_deterministic_restart_equivalence(tmp_path):
+    """Failure + restart produces the same final loss trajectory as an
+    uninterrupted run (checkpoint + deterministic data)."""
+    from repro.train.loop import FailurePlan, train
+    cfg = get_config("qwen2_0_5b").smoke()
+    r1 = train(cfg, seq_len=8, global_batch=2, steps=8,
+               ckpt_dir=str(tmp_path / "a"), ckpt_every=2)
+    r2 = train(cfg, seq_len=8, global_batch=2, steps=8,
+               ckpt_dir=str(tmp_path / "b"), ckpt_every=2,
+               failure_plan=FailurePlan(fail_at_steps=(5,)))
+    assert abs(r1.losses[-1] - r2.losses[-1]) < 1e-4
+
+
+def test_serving_engine_completes_and_deterministic():
+    from repro.serving import Request, ServingEngine
+    cfg = get_config("qwen2_0_5b").smoke()
+    def run():
+        eng = ServingEngine(cfg, max_batch=2, max_len=32, prompt_len=6,
+                            seed=1)
+        reqs = [Request(rid=i, prompt=[1 + i, 2, 3, 4, 5, 6],
+                        max_new_tokens=4) for i in range(5)]
+        for r in reqs:
+            eng.submit(r)
+        stats = eng.run()
+        return stats, [tuple(r.out_tokens) for r in reqs]
+    s1, t1 = run()
+    s2, t2 = run()
+    assert s1["completed"] == 5
+    assert t1 == t2  # greedy decode is deterministic
+    assert all(len(t) >= 4 for t in t1)
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Checkpoint on one sharding layout, restore onto another (the
+    elastic-rescale path: state re-homed onto a new mesh)."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint import CheckpointStore
+    store = CheckpointStore(str(tmp_path))
+    state = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    store.save(1, state)
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = {"w": NamedSharding(mesh, P("data", None))}
+    out = store.restore(1, state, shardings=shardings)
+    assert out["w"].sharding.is_equivalent_to(shardings["w"], 2)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_gradient_compression_error_feedback():
+    """int8 + error feedback: 4x wire reduction; repeated compression of
+    a constant gradient converges to it on average (EF property)."""
+    import jax.numpy as jnp
+    from repro.optim.compression import GradCompressor
+    comp = GradCompressor()
+    g = {"w": jnp.linspace(-3.0, 5.0, 1024).reshape(32, 32)}
+    state = comp.init(g)
+    acc = jnp.zeros_like(g["w"])
+    n = 20
+    for _ in range(n):
+        q, state = comp.compress(g, state)
+        acc = acc + comp.decompress(q)["w"]
+    mean_err = float(jnp.abs(acc / n - g["w"]).max())
+    one_q, _ = comp.compress(g, comp.init(g))
+    one_err = float(jnp.abs(comp.decompress(one_q)["w"] - g["w"]).max())
+    assert mean_err < one_err  # feedback beats memoryless quantization
+    assert comp.wire_bytes(one_q) < 0.3 * g["w"].size * 4
+
+
+def test_orchestrator_locality_tradeoff():
+    """Paper Fig. 11 direction on the training workload: pure locality
+    minimizes DMA but hurts time; pure load-balance is fastest but
+    moves the most data."""
+    from repro.train.orchestrator import locality_sweep
+    res = locality_sweep(policy_points=(100, 0), n_domains=8,
+                         sched_levels=(1, 2), steps=2)
+    assert res[100]["dma_per_step"] <= res[0]["dma_per_step"]
+    assert res[0]["cycles_per_step"] < res[100]["cycles_per_step"]

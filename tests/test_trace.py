@@ -1,0 +1,30 @@
+"""Chrome-trace export for the runtime schedule."""
+
+import json
+
+from repro.core import InOut, Myrmics, Out
+from repro.core.trace import attach_tracer
+
+
+def test_trace_export(tmp_path):
+    def m(ctx, root):
+        oids = ctx.balloc(1024, root, 12, label="x")
+        for i, o in enumerate(oids):
+            ctx.spawn(None, [Out(o)], duration=5e5, name=f"t{i}")
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2])
+    tracer = attach_tracer(rt)
+    rep = rt.run(m)
+    path = tmp_path / "trace.json"
+    tracer.write(str(path))
+    doc = json.load(open(path))
+    tasks = [e for e in doc["traceEvents"] if e["cat"] == "task"]
+    sched = [e for e in doc["traceEvents"] if e["cat"] == "runtime"]
+    # every non-zero-duration task shows up on a worker lane
+    assert len(tasks) >= 12
+    assert all(e["tid"].startswith("w") for e in tasks)
+    assert len(sched) > 0
+    # events are well-formed chrome-trace complete events
+    for e in doc["traceEvents"]:
+        assert e["ph"] == "X" and e["dur"] > 0
