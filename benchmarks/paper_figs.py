@@ -1,4 +1,5 @@
-"""Paper-figure reproductions (Figs. 7-12) on the calibrated simulator.
+"""Paper-figure reproductions (Figs. 7-12) on the calibrated simulator,
+plus the SV-C region-ownership study on the sharded directory.
 
 Each function returns rows of dicts; run.py prints them as CSV and
 EXPERIMENTS.md records the validated numbers.
@@ -6,7 +7,9 @@ EXPERIMENTS.md records the validated numbers.
 
 from __future__ import annotations
 
-from repro.core import InOut, Myrmics, Out
+import math
+
+from repro.core import In, InOut, Myrmics, Out
 from repro.core.sim import CostModel
 
 from .apps import APPS, hier_levels, run_app
@@ -125,6 +128,61 @@ def locality_sweep(name: str = "matmul", workers: int = 32,
         rows.append({"bench": name, "policy_p": p,
                      "cycles": round(r.cycles),
                      "dma_mb": round(r.dma_bytes / 1e6, 1)})
+    return rows
+
+
+# -- SV-C: region-ownership distribution under the sharded directory ----------------
+
+
+def _ownership_app(n_groups: int, objs_per_group: int, task_size: float):
+    """Allocation-skewed program: one top region anchors every group
+    subtree, so without migration a single scheduler ends up owning the
+    whole directory (paper SV-C's motivating pattern)."""
+
+    def main(ctx, root):
+        top = ctx.ralloc(root, 1, label="top")
+        for g in range(n_groups):
+            sub = ctx.ralloc(top, 10**9, label=f"sub{g}")
+            oids = ctx.balloc(256, sub, objs_per_group, label=f"x{g}")
+            for o in oids:
+                ctx.spawn(None, [Out(o)], duration=task_size)
+            ctx.spawn(None, [In(sub)], duration=task_size)
+        yield ctx.wait([InOut(root)])
+
+    return main
+
+
+def region_ownership(workers=(16, 64, 128), n_groups: int = 24,
+                     objs_per_group: int = 8, task_size: float = 50e3,
+                     migrate_threshold: int = 8) -> list[dict]:
+    """Ownership distribution + scheduler-load breakdown, with SV-C
+    migration off vs on.  ``cv`` is the coefficient of variation of the
+    per-scheduler region_load (lower = more even ownership)."""
+    rows = []
+    for w in workers:
+        for mig, th in (("off", None), ("on", migrate_threshold)):
+            rt = Myrmics(n_workers=w, sched_levels=hier_levels(w),
+                         migrate_threshold=th)
+            rep = rt.run(_ownership_app(n_groups, objs_per_group, task_size))
+            assert rep["tasks_spawned"] == rep["tasks_done"]
+            loads = [rep["region_load"][s.core_id]
+                     for s in rt.hier.scheds if s.parent is not None]
+            mean = sum(loads) / max(len(loads), 1)
+            var = sum((x - mean) ** 2 for x in loads) / max(len(loads), 1)
+            cv = math.sqrt(var) / mean if mean else 0.0
+            total = rep["total_cycles"] or 1.0
+            sb = [s.busy_cycles / total for s in rep["scheds"].values()]
+            rows.append({
+                "workers": w, "migration": mig,
+                "region_loads": loads,
+                "cv": round(cv, 3),
+                "max_over_mean": round(max(loads) / mean, 2) if mean else 0.0,
+                "migrations": rep["migrations"],
+                "nodes_migrated": rep["nodes_migrated"],
+                "avg_sched_busy": round(sum(sb) / max(len(sb), 1), 3),
+                "max_sched_busy": round(max(sb), 3) if sb else 0.0,
+                "cycles": round(rep["total_cycles"]),
+            })
     return rows
 
 

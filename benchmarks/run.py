@@ -75,6 +75,12 @@ def main() -> None:
         rows = F.locality_sweep()
         _emit("fig11_locality_sweep", time.time() - t0, len(rows), rows)
 
+    if want("svc_region_ownership"):
+        t0 = time.time()
+        workers = (16, 64, 128, 256) if full else (16, 64, 128)
+        rows = F.region_ownership(workers=workers)
+        _emit("svc_region_ownership", time.time() - t0, len(rows), rows)
+
     if want("fig12b_hierarchy_depth"):
         t0 = time.time()
         workers = (32, 64, 128, 256) if full else (32, 64, 128)

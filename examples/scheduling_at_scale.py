@@ -1,6 +1,7 @@
 """The paper's scalability story on the training workload: schedule a
 data-parallel step DAG through the hierarchical Myrmics runtime at 512
-worker domains, with straggler backups and a killed domain.
+worker domains, with straggler backups, a killed domain, and SV-C
+region-ownership migration evening out the sharded directory.
 
     PYTHONPATH=src python examples/scheduling_at_scale.py
 """
@@ -63,3 +64,25 @@ if __name__ == "__main__":
                                steps=2).items():
         print(f"p={p:3d}  cycles/step={v['cycles_per_step']:12.0f}  "
               f"dma/step={v['dma_per_step']/1e6:8.1f} MB")
+
+    print("=== SV-C ownership migration: sharded-directory balance ===")
+
+    def nested_tree(ctx, root):
+        # one top region anchors every group subtree, so without
+        # migration a single scheduler owns the whole directory
+        top = ctx.ralloc(root, 1, label="top")
+        for g in range(24):
+            sub = ctx.ralloc(top, 10**9, label=f"sub{g}")
+            for o in ctx.balloc(256, sub, 8, label=f"x{g}"):
+                ctx.spawn(None, [Out(o)], duration=5e4)
+        yield ctx.wait([InOut(root)])
+
+    for label, th in (("migration off", None), ("migration on ", 8)):
+        rt = Myrmics(n_workers=64, sched_levels=[1, 4],
+                     migrate_threshold=th)
+        rep = rt.run(nested_tree)
+        loads = [rep["region_load"][s.core_id]
+                 for s in rt.hier.scheds if s.parent is not None]
+        print(f"{label}  region_load per scheduler={loads}  "
+              f"migrations={rep['migrations']}  "
+              f"cycles={rep['total_cycles']:.0f}")

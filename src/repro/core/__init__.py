@@ -1,10 +1,25 @@
 """Myrmics core runtime: hierarchical dependency-aware task scheduling.
 
 The paper's primary contribution (regions, dependency queues,
-hierarchical schedulers, locality/load-balance placement) lives here.
+hierarchical schedulers, locality/load-balance placement) lives here,
+split into role-scoped agents wired together by the ``runtime`` facade:
+
+* ``regions``      — sharded region directory (one shard per scheduler)
+* ``deps``         — per-node dependency state machine
+* ``sched``        — scheduler/worker tree + locality/balance scoring
+* ``sched_agent``  — scheduler-role handlers (spawn/descend/complete/migrate)
+* ``worker_agent`` — worker-role handlers (dispatch/DMA/exec/wait/backup)
+* ``alloc``        — memory API acting on the owning shard
+* ``serial``       — the serial-elision oracle
 """
 
-from .regions import MODE_READ, MODE_WRITE, ROOT_RID, Directory
+from .regions import (
+    MODE_READ,
+    MODE_WRITE,
+    ROOT_RID,
+    Directory,
+    DirectoryShard,
+)
 from .runtime import (
     Arg,
     In,
@@ -12,15 +27,15 @@ from .runtime import (
     Myrmics,
     Out,
     Safe,
-    SerialRuntime,
     Task,
     TaskContext,
 )
+from .serial import SerialContext, SerialRuntime
 from .sim import CostModel, Engine
 
 __all__ = [
     "Arg", "In", "InOut", "Out", "Safe",
-    "Myrmics", "SerialRuntime", "Task", "TaskContext",
-    "CostModel", "Engine", "Directory",
+    "Myrmics", "SerialRuntime", "SerialContext", "Task", "TaskContext",
+    "CostModel", "Engine", "Directory", "DirectoryShard",
     "MODE_READ", "MODE_WRITE", "ROOT_RID",
 ]

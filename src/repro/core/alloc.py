@@ -1,0 +1,101 @@
+"""Memory-allocation agent: sys_ralloc / sys_alloc / sys_balloc / free.
+
+Role-scoped slice of the runtime (paper SV-B): allocation requests are
+messages from the calling worker to the scheduler that owns the target
+region; the owner creates the node in its directory shard and charges
+the request processing on its core.  Mutations are applied
+synchronously (the simulation's usual convention) while the cycle costs
+travel through ``Hierarchy.send``.
+
+Region placement (paper SV-C): a new region is delegated down the
+scheduler tree toward ``level_hint``, choosing the least-loaded child at
+every step, so the region directory spreads over the hierarchy.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from .sched import SchedNode
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from .runtime import Myrmics, TaskContext
+
+
+class AllocAgent:
+    """Allocation/free handlers, acting on the owning scheduler."""
+
+    def __init__(self, rt: "Myrmics"):
+        self.rt = rt
+
+    def assign_region_owner(self, parent_rid: int, level_hint: int) -> SchedNode:
+        rt = self.rt
+        s = rt.sched_of(rt.dir.owner_of(parent_rid))
+        while s.depth < level_hint and s.children:
+            s = min(s.children, key=lambda c: (c.region_load, c.core_id))
+        return s
+
+    def sys_ralloc(self, parent_rid: int, level_hint: int,
+                   ctx: "TaskContext | None", label: str | None = None) -> int:
+        rt = self.rt
+        owner = self.assign_region_owner(parent_rid, level_hint)
+        owner.region_load += 1
+        owner.migrate_no_fit = False   # fresh region = fresh migration candidate
+        rid = rt.dir.new_region(parent_rid, owner.core_id, level_hint)
+        if label is not None:
+            rt.labels[rid] = label
+        if ctx is not None:
+            rt.hier.send(ctx.worker, owner, rt.cost.ralloc_proc,
+                         lambda: None, send_time=ctx.now)
+        rt.sched_agent.maybe_migrate(owner)
+        return rid
+
+    def sys_alloc(self, size: int, rid: int, ctx: "TaskContext | None",
+                  label: str | None = None) -> int:
+        rt = self.rt
+        owner = rt.sched_of(rt.dir.owner_of(rid))
+        owner.region_load += 1
+        oid = rt.dir.new_object(rid, owner.core_id, size)
+        if label is not None:
+            rt.labels[oid] = label
+        if ctx is not None:
+            rt.hier.send(ctx.worker, owner, rt.cost.alloc_proc,
+                         lambda: None, send_time=ctx.now)
+        rt.sched_agent.maybe_migrate(owner)
+        return oid
+
+    def sys_balloc(self, size: int, rid: int, num: int,
+                   ctx: "TaskContext | None", label: str | None = None) -> list[int]:
+        rt = self.rt
+        owner = rt.sched_of(rt.dir.owner_of(rid))
+        owner.region_load += num
+        oids = [rt.dir.new_object(rid, owner.core_id, size)
+                for _ in range(num)]
+        if label is not None:
+            for i, oid in enumerate(oids):
+                rt.labels[oid] = f"{label}[{i}]"
+        if ctx is not None:
+            rt.hier.send(
+                ctx.worker, owner,
+                rt.cost.alloc_proc + rt.cost.balloc_per_obj * num,
+                lambda: None, send_time=ctx.now)
+        rt.sched_agent.maybe_migrate(owner)
+        return oids
+
+    def sys_free(self, oid: int, ctx: "TaskContext | None") -> None:
+        self._free_common(oid, ctx)
+
+    def sys_rfree(self, rid: int, ctx: "TaskContext | None") -> None:
+        self._free_common(rid, ctx)
+
+    def _free_common(self, nid: int, ctx: "TaskContext | None") -> None:
+        rt = self.rt
+        owner = rt.sched_of(rt.dir.owner_of(nid))
+        for freed in rt.dir.free(nid):
+            node = rt.deps.nodes.pop(freed, None)
+            if node is not None and not node.idle():
+                raise RuntimeError(f"freeing busy node {freed}")
+            rt.storage.pop(freed, None)
+        if ctx is not None:
+            rt.hier.send(ctx.worker, owner, rt.cost.free_proc,
+                         lambda: None, send_time=ctx.now)

@@ -247,14 +247,16 @@ class DepEngine:
 
     def _maybe_quiesce(self, nid: int) -> None:
         node = self.node(nid)
-        meta = self.dir.nodes.get(nid)
-        if meta is None or meta.parent is None:
+        # dep state for nid lives on nid's owner, whose shard also holds
+        # the parent pointer — a local (already-charged) directory read.
+        parent = self.dir.parent_of(nid) if self.dir.has(nid) else None
+        if parent is None:
             return
         if node.idle():
             snap = (node.recv_r, node.recv_w)
             if snap != node.last_quiesce_sent and snap != (0, 0):
                 node.last_quiesce_sent = snap
-                self.fx.send_quiesce(nid, meta.parent, *snap)
+                self.fx.send_quiesce(nid, parent, *snap)
 
     def recv_quiesce(self, parent_nid: int, child_nid: int,
                      recv_r: int, recv_w: int) -> None:

@@ -1,10 +1,28 @@
-"""Region/object metadata: the global region tree directory.
+"""Region/object metadata: the sharded region-tree directory.
 
 A Myrmics *region* is a growable pool of objects and subregions
 (paper SII, SV-C).  Each region/object node is owned by exactly one
-scheduler; the owner performs all dependency analysis for the node.
-This module holds the logical tree structure; the distributed-protocol
-state (queues, counters) lives in ``deps.DepNode``.
+scheduler; the owner performs all dependency analysis for the node and
+holds the node's metadata in its :class:`DirectoryShard`.  This module
+holds the logical tree structure; the distributed-protocol state
+(queues, counters) lives in ``deps.DepNode``.
+
+Sharding model (paper SV-C):
+
+* ``DirectoryShard`` — one scheduler's slice of the tree.  All metadata
+  reads/writes for a node land in its owner's shard.
+* ``Directory`` — the coordinator: it routes a nid to its shard via the
+  owner table (in hardware Myrmics the owner is encoded in the id bits,
+  so this lookup is a free local decode; the table exists here so that
+  ownership *migration* can re-home subtrees, which the id encoding
+  alone cannot express).
+* Structural walks (``ancestors``, ``path_down``, ``covering_node``,
+  ``objects_under``) follow parent/children pointers across shards.
+  They are only ever executed inside a scheduler handler whose
+  processing cost is already charged by the runtime (spawn_proc,
+  pack_per_arg, traverse_hop, ...); modules outside this file never
+  touch shard contents directly — they go through the Directory API and
+  the runtime's forwarding path, which charges the owning scheduler.
 
 ``ROOT_RID`` (0) is the implicit top-level region owned by the root
 scheduler.
@@ -34,32 +52,99 @@ class NodeMeta:
     freed: bool = False
 
 
-class Directory:
-    """Global region-tree directory.
+class DirectoryShard:
+    """One scheduler's slice of the region directory (paper SV-C).
 
-    Logically this state is distributed across schedulers (each owns its
-    part); we keep it in one structure for implementability, while every
-    *access* in the runtime is performed by the owning scheduler's event
-    handler and charged accordingly.  The paper's footnote 4 applies: the
-    path between two nodes is discovered by walking parent pointers.
+    Holds the metadata of every node the scheduler owns.  ``served``
+    counts forwarded lookups answered on behalf of other schedulers —
+    the runtime charges those on this shard's core.
+    """
+
+    def __init__(self, owner_id: str):
+        self.owner_id = owner_id
+        self.nodes: dict[int, NodeMeta] = {}
+        self.served = 0    # forwarded lookups answered for other cores
+
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __contains__(self, nid: int) -> bool:
+        return nid in self.nodes
+
+    def live_regions(self) -> list[NodeMeta]:
+        """Owned, live region nodes (migration candidates)."""
+        return [m for m in self.nodes.values()
+                if m.is_region and not m.freed]
+
+
+class Directory:
+    """Sharded region-tree directory.
+
+    Every node's metadata lives in exactly one scheduler's shard; the
+    owner table maps nid -> shard.  All mutation helpers keep the global
+    id sequence and the per-node ``children`` sets identical to a
+    single-structure implementation, so virtual-time runs are
+    bit-reproducible regardless of how the tree is sharded.
     """
 
     def __init__(self, root_owner: str):
         self._ids = itertools.count(1)
-        self.nodes: dict[int, NodeMeta] = {
-            ROOT_RID: NodeMeta(ROOT_RID, None, True, root_owner)
-        }
+        self.shards: dict[str, DirectoryShard] = {}
+        self._owner: dict[int, str] = {}
+        self._place(NodeMeta(ROOT_RID, None, True, root_owner))
+
+    # -- shard plumbing -----------------------------------------------------
+
+    def shard(self, owner_id: str) -> DirectoryShard:
+        s = self.shards.get(owner_id)
+        if s is None:
+            s = self.shards[owner_id] = DirectoryShard(owner_id)
+        return s
+
+    def _place(self, meta: NodeMeta) -> None:
+        self.shard(meta.owner).nodes[meta.nid] = meta
+        self._owner[meta.nid] = meta.owner
+
+    def _meta(self, nid: int) -> NodeMeta:
+        return self.shards[self._owner[nid]].nodes[nid]
+
+    # -- routing / liveness (free: owner bits are part of the id) -----------
+
+    def owner_of(self, nid: int) -> str:
+        """Owning scheduler core_id (the id-encoded route, footnote 4)."""
+        return self._owner[nid]
+
+    def has(self, nid: int) -> bool:
+        return nid in self._owner
+
+    def is_live(self, nid: int) -> bool:
+        return nid in self._owner and not self._meta(nid).freed
+
+    def parent_of(self, nid: int) -> int | None:
+        return self._meta(nid).parent
+
+    def serve_lookup(self, nid: int, requester: str) -> NodeMeta:
+        """Answer a metadata lookup on behalf of ``requester``.  Local to
+        the owner's shard when the requester owns the node; otherwise the
+        owning shard serves (and counts) a forwarded lookup — the runtime
+        charges the corresponding processing on the owner's core."""
+        owner = self._owner[nid]
+        if owner != requester:
+            self.shards[owner].served += 1
+        return self.shards[owner].nodes[nid]
+
+    # -- mutation (performed inside the owner's charged handler) ------------
 
     def new_region(self, parent: int, owner: str, level_hint: int) -> int:
         nid = next(self._ids)
-        self.nodes[nid] = NodeMeta(nid, parent, True, owner, level_hint=level_hint)
-        self.nodes[parent].children.add(nid)
+        self._place(NodeMeta(nid, parent, True, owner, level_hint=level_hint))
+        self._meta(parent).children.add(nid)
         return nid
 
     def new_object(self, parent: int, owner: str, size: int) -> int:
         nid = next(self._ids)
-        self.nodes[nid] = NodeMeta(nid, parent, False, owner, size=size)
-        self.nodes[parent].children.add(nid)
+        self._place(NodeMeta(nid, parent, False, owner, size=size))
+        self._meta(parent).children.add(nid)
         return nid
 
     def free(self, nid: int) -> list[int]:
@@ -68,24 +153,68 @@ class Directory:
         stack = [nid]
         while stack:
             cur = stack.pop()
-            meta = self.nodes[cur]
+            meta = self._meta(cur)
             if meta.freed:
                 continue
             meta.freed = True
             freed.append(cur)
             stack.extend(meta.children)
-        parent = self.nodes[nid].parent
+        parent = self._meta(nid).parent
         if parent is not None:
-            self.nodes[parent].children.discard(nid)
+            self._meta(parent).children.discard(nid)
         return freed
+
+    # -- ownership migration (paper SV-C load balancing) ---------------------
+
+    def owned_subtree_size(self, rid: int) -> int:
+        """Number of live nodes in rid's subtree owned by rid's owner."""
+        owner = self._owner[rid]
+        n = 0
+        stack = [rid]
+        while stack:
+            cur = stack.pop()
+            meta = self._meta(cur)
+            if meta.freed:
+                continue
+            if self._owner[cur] == owner:
+                n += 1
+                stack.extend(meta.children)
+        return n
+
+    def migrate_subtree(self, rid: int, new_owner: str) -> list[int]:
+        """Re-home rid's subtree: every live node currently owned by
+        rid's owner moves to ``new_owner``'s shard.  Nodes inside the
+        subtree already delegated elsewhere stay put (their owners keep
+        serving them).  Returns the migrated nids."""
+        old = self._owner[rid]
+        if old == new_owner:
+            return []
+        src, dst = self.shard(old), self.shard(new_owner)
+        moved = []
+        stack = [rid]
+        while stack:
+            cur = stack.pop()
+            meta = self._meta(cur)
+            if meta.freed:
+                continue
+            if self._owner[cur] == old:
+                del src.nodes[cur]
+                dst.nodes[cur] = meta
+                meta.owner = new_owner
+                self._owner[cur] = new_owner
+                moved.append(cur)
+                stack.extend(meta.children)
+        return moved
+
+    # -- structural walks (cost subsumed by the calling handler's charge) ----
 
     def ancestors(self, nid: int) -> list[int]:
         """nid's ancestor chain [parent, ..., root]."""
         out = []
-        cur = self.nodes[nid].parent
+        cur = self._meta(nid).parent
         while cur is not None:
             out.append(cur)
-            cur = self.nodes[cur].parent
+            cur = self._meta(cur).parent
         return out
 
     def path_down(self, origin: int, target: int) -> list[int]:
@@ -95,22 +224,22 @@ class Directory:
         if origin == target:
             return [origin]
         chain = [target]
-        cur = self.nodes[target].parent
+        cur = self._meta(target).parent
         while cur is not None:
             chain.append(cur)
             if cur == origin:
                 return list(reversed(chain))
-            cur = self.nodes[cur].parent
+            cur = self._meta(cur).parent
         raise ValueError(f"node {origin} is not an ancestor of {target}")
 
     def is_ancestor_or_self(self, anc: int, nid: int) -> bool:
         if anc == nid:
             return True
-        cur = self.nodes[nid].parent
+        cur = self._meta(nid).parent
         while cur is not None:
             if cur == anc:
                 return True
-            cur = self.nodes[cur].parent
+            cur = self._meta(cur).parent
         return False
 
     def covering_node(self, parent_arg_nids: list[int], target: int) -> int:
@@ -124,16 +253,23 @@ class Directory:
                     best, best_depth = nid, d
         return best
 
-    def objects_under(self, nid: int) -> list[NodeMeta]:
+    def objects_under(self, nid: int, requester: str | None = None) -> list[NodeMeta]:
         """All live objects in the subtree rooted at nid (nid included if
-        it is an object)."""
+        it is an object), in deterministic tree order.
+
+        When ``requester`` is given, shards other than the requester's
+        count a served forwarded lookup — the runtime charges the
+        corresponding owner-side processing (paper Fig. 6a: S2 packs
+        region A via S0 and S1)."""
         out = []
         stack = [nid]
         while stack:
             cur = stack.pop()
-            meta = self.nodes[cur]
+            meta = self._meta(cur)
             if meta.freed:
                 continue
+            if requester is not None and self._owner[cur] != requester:
+                self.shards[self._owner[cur]].served += 1
             if meta.is_region:
                 stack.extend(meta.children)
             else:

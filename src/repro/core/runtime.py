@@ -1,8 +1,21 @@
 """The Myrmics runtime facade (paper SV).
 
-Ties together the discrete-event engine, the region directory, the
-dependency engine and the scheduler hierarchy.  Two execution modes run
-the *same* scheduler/dependency code:
+Ties together the discrete-event engine, the sharded region directory,
+the dependency engine and the scheduler hierarchy.  The runtime logic
+itself lives in role-scoped agents:
+
+* :mod:`.sched_agent` — scheduler-core work: spawn handling, dependency
+  traversal, packing + hierarchical descent, completion/quiesce effects
+  and region-ownership migration;
+* :mod:`.worker_agent` — worker-core work: dispatch intake, DMA, task
+  execution, sys_wait suspend/resume, straggler backups, failures;
+* :mod:`.alloc` — the memory API (sys_ralloc/alloc/balloc/free) acting
+  on the owning scheduler's directory shard.
+
+This module only defines the public programming surface (``Arg``
+helpers, ``Task``, ``TaskContext``, ``Myrmics``) and wires the agents
+together.  Two execution modes run the *same* scheduler/dependency
+code:
 
 * **real mode** — tasks are Python/JAX callables over the object store;
   used for example applications and the serial-equivalence property
@@ -19,12 +32,12 @@ task until the waited arguments quiesce (sys_wait).
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
-from .deps import ARG, TRAVERSE, WAIT, DepEngine, Entry
+from .deps import DepEngine
 from .regions import MODE_READ, MODE_WRITE, ROOT_RID, Directory
-from .sched import Hierarchy, SchedNode, WorkerNode, score_candidates
+from .sched import Hierarchy, SchedNode, WorkerNode
 from .sim import CostModel, Engine
 
 # -- task argument specs -------------------------------------------------------
@@ -101,17 +114,6 @@ class WaitSpec:
     args: list[Arg]
 
 
-@dataclass
-class _Exec:
-    """Worker-side record of a dispatched task."""
-
-    task: Task
-    dma_done: float = 0.0
-    start: float = 0.0
-    ctx: "TaskContext | None" = None
-    idle_counted: bool = False
-
-
 # -- task context ---------------------------------------------------------------
 
 
@@ -142,25 +144,25 @@ class TaskContext:
     def ralloc(self, parent_rid: int = ROOT_RID, level_hint: int = 10**9,
                label: str | None = None) -> int:
         self.cursor += self.rt.cost.worker_alloc_call
-        return self.rt.sys_ralloc(parent_rid, level_hint, self, label)
+        return self.rt.alloc_agent.sys_ralloc(parent_rid, level_hint, self, label)
 
     def alloc(self, size: int, rid: int = ROOT_RID,
               label: str | None = None) -> int:
         self.cursor += self.rt.cost.worker_alloc_call
-        return self.rt.sys_alloc(size, rid, self, label)
+        return self.rt.alloc_agent.sys_alloc(size, rid, self, label)
 
     def balloc(self, size: int, rid: int, num: int,
                label: str | None = None) -> list[int]:
         self.cursor += self.rt.cost.worker_alloc_call
-        return self.rt.sys_balloc(size, rid, num, self, label)
+        return self.rt.alloc_agent.sys_balloc(size, rid, num, self, label)
 
     def free(self, oid: int) -> None:
         self.cursor += self.rt.cost.worker_alloc_call
-        self.rt.sys_free(oid, self)
+        self.rt.alloc_agent.sys_free(oid, self)
 
     def rfree(self, rid: int) -> None:
         self.cursor += self.rt.cost.worker_alloc_call
-        self.rt.sys_rfree(rid, self)
+        self.rt.alloc_agent.sys_rfree(rid, self)
 
     # --- object store (real mode) -----------------------------------------------
     def read(self, oid: int) -> Any:
@@ -183,43 +185,65 @@ class TaskContext:
         return WaitSpec(args)
 
 
-# -- the runtime -----------------------------------------------------------------
+# -- the runtime facade ----------------------------------------------------------
 
 
 class Myrmics:
-    """One runtime instance = one simulated machine + one application run."""
+    """One runtime instance = one simulated machine + one application run.
+
+    The facade owns the shared state (engine, hierarchy, sharded
+    directory, dependency engine, object store, counters) and delegates
+    all behaviour to the role-scoped agents it wires together.
+    ``migrate_threshold`` opts in to SV-C region-ownership migration:
+    a scheduler owning more than that many directory nodes offers
+    subtrees to underloaded siblings (default off — virtual-time results
+    are then identical to the pre-sharding runtime).
+    """
 
     def __init__(self, n_workers: int = 4, sched_levels: list[int] | None = None,
                  cost: CostModel | None = None, policy_p: int = 20,
-                 max_events: int | None = 50_000_000):
+                 max_events: int | None = 50_000_000,
+                 migrate_threshold: int | None = None):
+        from .alloc import AllocAgent
+        from .sched_agent import DepEffects, SchedAgent
+        from .worker_agent import WorkerAgent
+
         self.engine = Engine()
         self.cost = cost or CostModel.heterogeneous()
         self.hier = Hierarchy.build(
             self.engine, self.cost, n_workers, sched_levels or [1]
         )
         self.dir = Directory(root_owner=self.hier.root.core_id)
-        self.deps = DepEngine(self.dir, _Fx(self))
         self.storage: dict[int, Any] = {}
         self.labels: dict[int, str] = {}   # nid -> app label (for oracles)
         self.policy_p = policy_p
         self.max_events = max_events
         self.tasks_spawned = 0
         self.tasks_done = 0
-        self._main: Task | None = None
+        self.main_task: Task | None = None
         # -- scale-out features (straggler backup / failure / elastic) --
         self.backup_factor: float | None = None   # e.g. 3.0 enables backups
         self.backups_spawned = 0
-        self._service_ewma: float | None = None
+        self.service_ewma: float | None = None
         self.dead_workers: set[str] = set()
         self.tasks_rescheduled = 0
-        # subtree membership cache: scheduler core_id -> set of sched ids
-        self._subtree: dict[str, set[str]] = {
+        # -- SV-C ownership migration (opt-in) --
+        self.migrate_threshold = migrate_threshold
+        self.migrations = 0
+        self.nodes_migrated = 0
+        # subtree membership caches: scheduler core_id -> ids below it
+        self.subtree_ids: dict[str, set[str]] = {
             s.core_id: {x.core_id for x in s.subtree_scheds()}
             for s in self.hier.scheds
         }
-        self._subtree_workers: dict[str, set[str]] = {
+        self.subtree_workers: dict[str, set[str]] = {
             s.core_id: s.subtree_worker_ids() for s in self.hier.scheds
         }
+        # -- role-scoped agents --
+        self.alloc_agent = AllocAgent(self)
+        self.sched_agent = SchedAgent(self)
+        self.worker_agent = WorkerAgent(self)
+        self.deps = DepEngine(self.dir, DepEffects(self))
 
     # ---- helpers -------------------------------------------------------------
 
@@ -227,7 +251,7 @@ class Myrmics:
         return self.hier.by_id[core_id]
 
     def node_owner(self, nid: int) -> SchedNode:
-        return self.hier.by_id[self.dir.nodes[nid].owner]
+        return self.hier.by_id[self.dir.owner_of(nid)]
 
     def check_access(self, task: Task, oid: int, mode: str) -> None:
         """A task may touch an object only if one of its (non-safe,
@@ -243,6 +267,20 @@ class Myrmics:
             f"{task} has no {mode}-covering argument for node {oid}"
         )
 
+    # ---- delegated API (stable surface; behaviour lives in the agents) -------
+
+    def sys_spawn(self, fn: Callable | None, args: list[Arg],
+                  ctx: TaskContext, duration: float, name: str | None) -> Task:
+        task = Task(fn, args, parent=ctx.task, duration=duration, name=name)
+        self.sched_agent.sys_spawn(task, ctx)
+        return task
+
+    def kill_worker(self, worker_id: str, at: float | None = None) -> None:
+        self.worker_agent.kill_worker(worker_id, at)
+
+    def add_worker(self, leaf_sched_id: str) -> str:
+        return self.worker_agent.add_worker(leaf_sched_id)
+
     # ---- program entry ----------------------------------------------------------
 
     def run(self, main_fn: Callable, *main_extra: Any,
@@ -250,13 +288,13 @@ class Myrmics:
         main = Task(main_fn, [InOut(ROOT_RID)], parent=None, name="main")
         main.owner = self.hier.root
         main.extra = main_extra
-        self._main = main
+        self.main_task = main
         self.tasks_spawned += 1
         # main implicitly holds the root region (no queueing).
         self.deps.node(ROOT_RID).holders[main] = MODE_WRITE
         main.satisfied = len(main.dep_args)
         main.state = READY
-        self._begin_packing(main.owner, main)
+        self.sched_agent.begin_packing(main.owner, main)
         self.engine.run(until=until, max_events=self.max_events)
         return self.report()
 
@@ -280,604 +318,17 @@ class Myrmics:
             "events": self.engine.events_processed,
             "workers": workers,
             "scheds": scheds,
+            "region_load": {s.core_id: s.region_load
+                            for s in self.hier.scheds},
+            "migrations": self.migrations,
+            "nodes_migrated": self.nodes_migrated,
         }
 
-    # ---- memory API (mutations synchronous; costs charged as messages) -----------
 
-    def _assign_region_owner(self, parent_rid: int, level_hint: int) -> SchedNode:
-        s = self.node_owner(parent_rid)
-        while s.depth < level_hint and s.children:
-            s = min(s.children, key=lambda c: (c.region_load, c.core_id))
-        return s
-
-    def sys_ralloc(self, parent_rid: int, level_hint: int,
-                   ctx: TaskContext | None, label: str | None = None) -> int:
-        owner = self._assign_region_owner(parent_rid, level_hint)
-        owner.region_load += 1
-        rid = self.dir.new_region(parent_rid, owner.core_id, level_hint)
-        if label is not None:
-            self.labels[rid] = label
-        if ctx is not None:
-            self.hier.send(ctx.worker, owner, self.cost.ralloc_proc,
-                           lambda: None, send_time=ctx.now)
-        return rid
-
-    def sys_alloc(self, size: int, rid: int, ctx: TaskContext | None,
-                  label: str | None = None) -> int:
-        owner = self.node_owner(rid)
-        owner.region_load += 1
-        oid = self.dir.new_object(rid, owner.core_id, size)
-        if label is not None:
-            self.labels[oid] = label
-        if ctx is not None:
-            self.hier.send(ctx.worker, owner, self.cost.alloc_proc,
-                           lambda: None, send_time=ctx.now)
-        return oid
-
-    def sys_balloc(self, size: int, rid: int, num: int,
-                   ctx: TaskContext | None, label: str | None = None) -> list[int]:
-        owner = self.node_owner(rid)
-        owner.region_load += num
-        oids = [self.dir.new_object(rid, owner.core_id, size)
-                for _ in range(num)]
-        if label is not None:
-            for i, oid in enumerate(oids):
-                self.labels[oid] = f"{label}[{i}]"
-        if ctx is not None:
-            self.hier.send(
-                ctx.worker, owner,
-                self.cost.alloc_proc + self.cost.balloc_per_obj * num,
-                lambda: None, send_time=ctx.now)
-        return oids
-
-    def sys_free(self, oid: int, ctx: TaskContext | None) -> None:
-        self._free_common(oid, ctx)
-
-    def sys_rfree(self, rid: int, ctx: TaskContext | None) -> None:
-        self._free_common(rid, ctx)
-
-    def _free_common(self, nid: int, ctx: TaskContext | None) -> None:
-        owner = self.node_owner(nid)
-        for freed in self.dir.free(nid):
-            node = self.deps.nodes.pop(freed, None)
-            if node is not None and not node.idle():
-                raise RuntimeError(f"freeing busy node {freed}")
-            self.storage.pop(freed, None)
-        if ctx is not None:
-            self.hier.send(ctx.worker, owner, self.cost.free_proc,
-                           lambda: None, send_time=ctx.now)
-
-    # ---- spawn path ---------------------------------------------------------------
-
-    def sys_spawn(self, fn: Callable | None, args: list[Arg],
-                  ctx: TaskContext, duration: float, name: str | None) -> Task:
-        task = Task(fn, args, parent=ctx.task, duration=duration, name=name)
-        # well-formedness (the programming model's footprint rule [6]):
-        # every child argument must lie inside the spawner's footprint.
-        parent_nids = ctx.task.arg_nids()
-        for a in task.dep_args:
-            if not any(self.dir.is_ancestor_or_self(p, a.nid)
-                       for p in parent_nids):
-                raise ValueError(
-                    f"{ctx.task} spawns {task} with arg node {a.nid} "
-                    "outside the parent's declared footprint")
-        self.tasks_spawned += 1
-        # SPAWN message: worker -> owner of the parent task (routed via tree)
-        self.hier.send(ctx.worker, ctx.task.owner, self.cost.spawn_proc,
-                       self._h_spawn, ctx.task.owner, task,
-                       send_time=ctx.now)
-        return task
-
-    def _h_spawn(self, sched: SchedNode, task: Task) -> None:
-        """Spawn handling at the parent task's owner.
-
-        Ownership is delegated downward while a single child subtree owns
-        every argument (paper SV-E); the delegation messages are charged
-        but the walk is resolved here so that the *dependency enqueues*
-        for successive spawns of one parent leave this scheduler in spawn
-        order — the origin node's FIFO queue then reflects program order.
-        """
-        arg_owners = {self.dir.nodes[a.nid].owner for a in task.dep_args}
-        owner = sched
-        hop_src = sched
-        while True:
-            nxt = None
-            for c in owner.children:
-                if arg_owners and arg_owners <= self._subtree[c.core_id]:
-                    nxt = c
-                    break
-            if nxt is None:
-                break
-            # charge the delegation message (accounting only)
-            self.hier.send(hop_src, nxt, self.cost.spawn_proc, lambda: None)
-            hop_src = nxt
-            owner = nxt
-        task.owner = owner
-        if not task.dep_args:
-            task.state = READY
-            self.hier.local(owner, 0.0, self._mark_ready, task)
-            return
-        parent_nids = task.parent.arg_nids() if task.parent else [ROOT_RID]
-        for i, a in enumerate(task.dep_args):
-            origin = self.dir.covering_node(parent_nids, a.nid)
-            path = self.dir.path_down(origin, a.nid)
-            if len(path) == 1:
-                entry = Entry(ARG, task, a.mode, (), i)
-            else:
-                entry = Entry(TRAVERSE, task, a.mode, tuple(path[1:]), i)
-            self.hier.send(sched, self.node_owner(origin),
-                           self.cost.dep_enqueue_per_arg,
-                           self._h_enqueue, origin, entry, None)
-
-    def _mark_ready(self, task: Task) -> None:
-        task.state = READY
-        self._begin_packing(task.owner, task)
-
-    def _h_enqueue(self, nid: int, entry: Entry, via_parent: int | None) -> None:
-        self.deps.enqueue(nid, entry, via_parent)
-
-    # ---- packing + hierarchical scheduling descent -----------------------------------
-
-    def _begin_packing(self, sched: SchedNode, task: Task) -> None:
-        """Coalesce the task footprint by last producer (paper SV-E)."""
-        pack: dict[str, int] = {}
-        remote_owners: set[str] = set()
-        for a in task.dep_args:
-            if a.notransfer or not a.fetch:
-                continue
-            for meta in self.dir.objects_under(a.nid):
-                if meta.owner != sched.core_id:
-                    remote_owners.add(meta.owner)
-                key = meta.last_producer or "_unborn"
-                pack[key] = pack.get(key, 0) + meta.size
-        task.pack_by_worker = {
-            k: v for k, v in pack.items() if k != "_unborn"
-        }
-        cost = self.cost.schedule_base + self.cost.pack_per_arg * max(
-            1, len(task.dep_args))
-        # packing may require messages to the schedulers owning parts of
-        # the footprint (paper Fig. 6a: S2 packs region A via S0 and S1)
-        for ro in sorted(remote_owners):
-            self.hier.send(sched, self.sched_of(ro), self.cost.pack_per_arg,
-                           lambda: None)
-        self.hier.local(sched, cost, self._h_descend, sched, task)
-
-    def _live_workers(self, sched: SchedNode) -> set[str]:
-        return {w for w in self._subtree_workers[sched.core_id]
-                if w not in self.dead_workers}
-
-    def _h_descend(self, sched: SchedNode, task: Task) -> None:
-        if sched.is_leaf and not sched.workers and sched.parent is not None:
-            self.hier.send(sched, sched.parent, self.cost.dispatch_proc,
-                           self._h_descend, sched.parent, task)
-            return
-        if sched.is_leaf:
-            cands = [
-                (w, {w.core_id}, sched.load[w.core_id]) for w in sched.workers
-            ]
-            w = score_candidates(task.pack_by_worker, cands, self.policy_p)
-            sched.load[w.core_id] += 1
-            task.worker = w
-            task.state = DISPATCHED
-            # from now on the chosen worker is the last producer of all
-            # write arguments (paper SV-E); NOTRANSFER tasks never touch
-            # the data, so they leave producers unchanged
-            for a in task.dep_args:
-                if a.mode == MODE_WRITE and not a.notransfer:
-                    for meta in self.dir.objects_under(a.nid):
-                        meta.last_producer = w.core_id
-            self.hier.send(sched, w, self.cost.worker_dispatch_recv,
-                           self._h_worker_dispatch, w, task)
-            self._maybe_backup(task)
-            return
-        cands = [
-            (c, self._subtree_workers[c.core_id], sched.load[c.core_id])
-            for c in sched.children
-            if self._live_workers(c)
-        ]
-        if not cands:
-            # no live workers below: bounce back up to the parent
-            target = sched.parent or sched
-            self.hier.send(sched, target, self.cost.dispatch_proc,
-                           self._h_descend, target, task)
-            return
-        c = score_candidates(task.pack_by_worker, cands, self.policy_p)
-        sched.load[c.core_id] += 1
-        self.hier.send(sched, c, self.cost.dispatch_proc,
-                       self._h_descend, c, task)
-
-    # ---- worker side -------------------------------------------------------------------
-
-    # ---- scale-out: straggler backups, worker failure, elastic join ---------
-
-    def kill_worker(self, worker_id: str, at: float | None = None) -> None:
-        """Simulate losing a worker domain: queued and running tasks are
-        re-dispatched by their owners (the dependency queues define the
-        exact re-execution set); subsequent placement avoids the corpse.
-        """
-        def do_kill():
-            w = self.hier.by_id[worker_id]
-            self.dead_workers.add(worker_id)
-            victims = [r.task for r in w.queue]
-            if w.running is not None:
-                victims.append(w.running.task)
-            if w.suspended:
-                # a suspended (mid-wait) task has visible side effects
-                # (spawned children); blind re-execution would duplicate
-                # them — surface instead of corrupting the run.
-                raise RuntimeError(
-                    f"kill_worker({worker_id}): suspended tasks present; "
-                    "re-execution of mid-wait tasks is not supported")
-            w.queue.clear()
-            w.running = None
-            w.parent.workers = [x for x in w.parent.workers
-                                if x.core_id != worker_id]
-            w.parent.load.pop(worker_id, None)
-            for t in victims:
-                if t.state in (DISPATCHED, RUNNING, WAITING):
-                    self.tasks_rescheduled += 1
-                    t.state = READY
-                    t.gen = None
-                    self.hier.local(t.owner, self.cost.schedule_base,
-                                    self._h_descend, t.owner, t)
-        if at is None:
-            do_kill()
-        else:
-            self.engine.at(at, do_kill)
-
-    def add_worker(self, leaf_sched_id: str) -> str:
-        """Elastic join: attach a fresh worker under a leaf scheduler."""
-        leaf = self.hier.by_id[leaf_sched_id]
-        wid = f"w{len(self.hier.workers)}"
-        w = WorkerNode(self.engine, wid, leaf)
-        leaf.workers.append(w)
-        leaf.load[wid] = 0
-        self.hier.workers.append(w)
-        self.hier.by_id[wid] = w
-        for s in self.hier.scheds:
-            self._subtree_workers[s.core_id] = s.subtree_worker_ids()
-        return wid
-
-    def _note_service_time(self, dt: float) -> None:
-        if self._service_ewma is None:
-            self._service_ewma = dt
-        else:
-            self._service_ewma = 0.9 * self._service_ewma + 0.1 * dt
-
-    def _maybe_backup(self, task: Task) -> None:
-        """Straggler watchdog: if the task has not completed within
-        factor x EWMA service time, re-dispatch a backup copy to another
-        worker; the first completion wins (tasks are pure)."""
-        if self.backup_factor is None or self._service_ewma is None:
-            return
-        deadline = self.engine.now + self.backup_factor * self._service_ewma
-
-        def check():
-            if not task.completed and not task.backup_spawned and \
-                    task.state in (DISPATCHED, RUNNING) and \
-                    task.worker is not None and \
-                    task.worker.core_id not in self.dead_workers:
-                task.backup_spawned = True
-                self.backups_spawned += 1
-                self.hier.local(task.owner, self.cost.schedule_base,
-                                self._h_descend, task.owner, task)
-        self.engine.at(deadline, check)
-
-    def _h_worker_dispatch(self, w: WorkerNode, task: Task) -> None:
-        if w.core_id in self.dead_workers:
-            # dispatch raced with the failure: owner re-schedules
-            self.tasks_rescheduled += 1
-            self.hier.local(task.owner, self.cost.schedule_base,
-                            self._h_descend, task.owner, task)
-            return
-        rec = _Exec(task)
-        dma_bytes = sum(
-            b for wid, b in task.pack_by_worker.items() if wid != w.core_id
-        )
-        n_xfers = sum(
-            1 for wid, b in task.pack_by_worker.items()
-            if wid != w.core_id and b > 0
-        )
-        if dma_bytes > 0:
-            dur = (self.cost.dma_startup * max(1, n_xfers)
-                   + dma_bytes / self.cost.dma_bytes_per_cycle)
-            start = max(self.engine.now, w.dma_free)
-            w.dma_free = start + dur
-            rec.dma_done = w.dma_free
-            w.core.stats.dma_bytes += dma_bytes
-        w.queue.append(rec)
-        self._worker_try_start(w)
-
-    def _worker_try_start(self, w: WorkerNode) -> None:
-        if w.running is not None or not w.queue:
-            return
-        rec = w.queue[0]
-        if rec.dma_done > self.engine.now:
-            if not rec.idle_counted:
-                rec.idle_counted = True
-                w.core.stats.idle_wait_dma += rec.dma_done - self.engine.now
-            self.engine.at(rec.dma_done, self._worker_try_start, w)
-            return
-        w.queue.pop(0)
-        w.running = rec
-        rec.start = max(self.engine.now, w.core.next_free)
-        self.engine.at(rec.start, self._worker_exec, w, rec)
-
-    def _worker_exec(self, w: WorkerNode, rec: _Exec) -> None:
-        task = rec.task
-        if task.completed:
-            # a backup copy already finished; drop this duplicate
-            w.running = None
-            self._worker_try_start(w)
-            return
-        task.state = RUNNING
-        ctx = TaskContext(self, task, w, rec.start)
-        rec.ctx = ctx
-        if task.fn is None:
-            ctx.cursor += task.duration
-            self._finish_exec(w, rec)
-            return
-        result = task.fn(ctx, *self._resolve_args(task))
-        if hasattr(result, "__next__"):
-            task.gen = result
-            self._drive_gen(w, rec)
-        else:
-            ctx.cursor += task.duration
-            self._finish_exec(w, rec)
-
-    def _resolve_args(self, task: Task) -> list[Any]:
-        vals = [a.value if a.safe else a.nid for a in task.args]
-        return vals + list(task.extra)
-
-    def _drive_gen(self, w: WorkerNode, rec: _Exec) -> None:
-        try:
-            yielded = next(rec.task.gen)
-        except StopIteration:
-            self._finish_exec(w, rec)
-            return
-        if not isinstance(yielded, WaitSpec):
-            raise TypeError(f"task yielded {yielded!r}; expected ctx.wait(...)")
-        self._suspend_for_wait(w, rec, yielded)
-
-    def _suspend_for_wait(self, w: WorkerNode, rec: _Exec,
-                          spec: WaitSpec) -> None:
-        task = rec.task
-        ctx = rec.ctx
-        task.state = WAITING
-        task.wait_remaining = len(spec.args)
-        w.core.occupy(rec.start, ctx.cursor)
-        w.core.stats.task_cycles += ctx.cursor
-        w.running = None
-        w.suspended[task.tid] = rec
-        # WAIT message to the owner, which enqueues WAIT entries at the
-        # waited nodes (sys_wait, paper SV-A)
-        self.hier.send(w, task.owner, self.cost.complete_proc_base,
-                       self._h_wait, task, list(spec.args),
-                       send_time=ctx.now)
-        self._worker_try_start(w)
-
-    def _h_wait(self, task: Task, args: list[Arg]) -> None:
-        for a in args:
-            entry = Entry(WAIT, task, a.mode, (), -1)
-            self.hier.send(task.owner, self.node_owner(a.nid),
-                           self.cost.dep_enqueue_per_arg,
-                           self._h_enqueue, a.nid, entry, None)
-
-    def _resume_task(self, task: Task) -> None:
-        w = task.worker
-        self.hier.send(task.owner, w, self.cost.worker_dispatch_recv,
-                       self._h_worker_resume, w, task)
-
-    def _h_worker_resume(self, w: WorkerNode, task: Task) -> None:
-        rec = w.suspended.pop(task.tid)
-        if w.running is not None:
-            # run after the current task; keep FIFO order ahead of queue
-            self.engine.at(w.core.next_free, self._h_worker_resume_retry,
-                           w, rec)
-            w.suspended[task.tid] = rec
-            return
-        self._continue_gen(w, rec)
-
-    def _h_worker_resume_retry(self, w: WorkerNode, rec: _Exec) -> None:
-        if w.running is not None:
-            self.engine.at(w.core.next_free, self._h_worker_resume_retry,
-                           w, rec)
-            return
-        if rec.task.tid in w.suspended:
-            w.suspended.pop(rec.task.tid)
-            self._continue_gen(w, rec)
-
-    def _continue_gen(self, w: WorkerNode, rec: _Exec) -> None:
-        task = rec.task
-        task.state = RUNNING
-        w.running = rec
-        rec.start = max(self.engine.now, w.core.next_free)
-        # the generator closed over rec.ctx: rebase it for this activation
-        rec.ctx.t0 = rec.start
-        rec.ctx.cursor = 0.0
-        self._drive_gen(w, rec)
-
-    def _finish_exec(self, w: WorkerNode, rec: _Exec) -> None:
-        task = rec.task
-        ctx = rec.ctx
-        task.last_exec_cycles = ctx.cursor
-        end = rec.start + ctx.cursor
-        w.core.occupy(rec.start, ctx.cursor)
-        w.core.stats.task_cycles += ctx.cursor
-        w.core.stats.tasks_executed += 1
-        w.running = None
-        cost = (self.cost.complete_proc_base
-                + self.cost.complete_per_arg * len(task.dep_args))
-        self.hier.send(w, task.owner, cost, self._h_complete, task,
-                       send_time=end)
-        # completion send cost on the worker
-        w.core.occupy(end, self.cost.worker_complete_send)
-        self.engine.at(w.core.next_free, self._worker_try_start, w)
-
-    def _h_complete(self, task: Task) -> None:
-        if task.completed:
-            return  # backup copy finished second; first completion won
-        task.completed = True
-        task.state = DONE
-        self.tasks_done += 1
-        self._note_service_time(getattr(task, "last_exec_cycles", 1.0))
-        # load decrements piggyback on the completion route (worker -> owner)
-        if task.worker is not None:
-            node: Any = task.worker
-            while node is not task.owner and node.parent is not None:
-                if node.core_id in node.parent.load:
-                    node.parent.load[node.core_id] = max(
-                        0, node.parent.load[node.core_id] - 1)
-                node = node.parent
-        owner = task.owner
-        for a in task.dep_args:
-            self.hier.send(owner, self.node_owner(a.nid),
-                           self.cost.traverse_hop,
-                           self._h_release, a.nid, task)
-        if task is self._main:
-            self.deps.release(ROOT_RID, task)
-
-    def _h_release(self, nid: int, task: Task) -> None:
-        if nid in self.dir.nodes and not self.dir.nodes[nid].freed:
-            self.deps.release(nid, task)
-
-    # ---- dep-engine effects, routed + charged --------------------------------------
-
-
-class _Fx:
-    """DepEngine effects: every callback is work on the owner of the
-    destination node; route + charge accordingly."""
-
-    def __init__(self, rt: Myrmics):
-        self.rt = rt
-
-    def forward_traverse(self, from_nid: int, entry: Entry) -> None:
-        rt = self.rt
-        nxt = entry.path[0]
-        rest = entry.path[1:]
-        if rest:
-            new = Entry(TRAVERSE, entry.task, entry.mode, rest, entry.arg_index)
-            cost = rt.cost.traverse_hop
-        else:
-            new = Entry(ARG, entry.task, entry.mode, (), entry.arg_index)
-            cost = rt.cost.dep_enqueue_per_arg
-        rt.hier.send(rt.node_owner(from_nid), rt.node_owner(nxt), cost,
-                     rt._h_enqueue, nxt, new, from_nid)
-
-    def arg_activated(self, task: Task, arg_index: int, nid: int) -> None:
-        rt = self.rt
-        rt.hier.send(rt.node_owner(nid), task.owner, rt.cost.arg_ready_proc,
-                     self._h_arg_ready, task)
-
-    def _h_arg_ready(self, task: Task) -> None:
-        task.satisfied += 1
-        if task.satisfied == len(task.dep_args) and task.state == SPAWNED:
-            task.state = READY
-            self.rt._begin_packing(task.owner, task)
-
-    def wait_activated(self, task: Task, nid: int) -> None:
-        rt = self.rt
-        rt.hier.send(rt.node_owner(nid), task.owner, rt.cost.arg_ready_proc,
-                     self._h_wait_ready, task)
-
-    def _h_wait_ready(self, task: Task) -> None:
-        task.wait_remaining -= 1
-        if task.wait_remaining == 0:
-            self.rt._resume_task(task)
-
-    def send_quiesce(self, child_nid: int, parent_nid: int,
-                     recv_r: int, recv_w: int) -> None:
-        rt = self.rt
-        rt.hier.send(rt.node_owner(child_nid), rt.node_owner(parent_nid),
-                     rt.cost.quiesce_proc, rt.deps.recv_quiesce,
-                     parent_nid, child_nid, recv_r, recv_w)
-
-
-# -- serial oracle ----------------------------------------------------------------
-
-
-class SerialContext:
-    """Inline (depth-first) execution context: the model's serial
-    semantics.  Used as the determinism oracle in property tests."""
-
-    def __init__(self, rt: "SerialRuntime", depth: int = 0):
-        self.rt = rt
-        self.depth = depth
-        self.cursor = 0.0
-        self.worker_id = "serial"
-        self.now = 0.0
-
-    def compute(self, cycles: float) -> None:
-        pass
-
-    def ralloc(self, parent_rid: int = ROOT_RID, level_hint: int = 10**9,
-               label: str | None = None) -> int:
-        rid = self.rt.dir.new_region(parent_rid, "serial", level_hint)
-        if label is not None:
-            self.rt.labels[rid] = label
-        return rid
-
-    def alloc(self, size: int, rid: int = ROOT_RID,
-              label: str | None = None) -> int:
-        oid = self.rt.dir.new_object(rid, "serial", size)
-        if label is not None:
-            self.rt.labels[oid] = label
-        return oid
-
-    def balloc(self, size: int, rid: int, num: int,
-               label: str | None = None) -> list[int]:
-        oids = [self.alloc(size, rid) for _ in range(num)]
-        if label is not None:
-            for i, oid in enumerate(oids):
-                self.rt.labels[oid] = f"{label}[{i}]"
-        return oids
-
-    def free(self, oid: int) -> None:
-        for nid in self.rt.dir.free(oid):
-            self.rt.storage.pop(nid, None)
-
-    rfree = free
-
-    def read(self, oid: int) -> Any:
-        return self.rt.storage.get(oid)
-
-    def write(self, oid: int, value: Any) -> None:
-        self.rt.storage[oid] = value
-
-    def spawn(self, fn: Callable | None, args: list[Arg] | None = None,
-              duration: float = 0.0, name: str | None = None) -> None:
-        if fn is None:
-            return
-        sub = SerialContext(self.rt, self.depth + 1)
-        resolved = [a.value if a.safe else a.nid for a in (args or [])]
-        result = fn(sub, *resolved)
-        if hasattr(result, "__next__"):
-            for _ in result:
-                pass
-
-    def wait(self, args: list[Arg]) -> WaitSpec:
-        return WaitSpec(args or [])
-
-
-class SerialRuntime:
-    """Serial elision of the Myrmics program: every spawn runs inline at
-    the spawn point (the programming model's defining semantics [6])."""
-
-    def __init__(self) -> None:
-        self.dir = Directory(root_owner="serial")
-        self.storage: dict[int, Any] = {}
-        self.labels: dict[int, str] = {}
-
-    def run(self, main_fn: Callable, *extra: Any) -> dict[int, Any]:
-        ctx = SerialContext(self)
-        result = main_fn(ctx, ROOT_RID, *extra)
-        if hasattr(result, "__next__"):
-            for _ in result:
-                pass
-        return self.storage
-
-    def labelled_storage(self) -> dict[str, Any]:
-        return {
-            self.labels[nid]: v for nid, v in self.storage.items()
-            if nid in self.labels
-        }
+def __getattr__(name: str):
+    # API compatibility: the serial oracle moved to .serial but remains
+    # importable from here (lazily, to avoid a circular import).
+    if name in ("SerialRuntime", "SerialContext"):
+        from . import serial
+        return getattr(serial, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

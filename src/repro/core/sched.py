@@ -32,6 +32,7 @@ class SchedNode:
         self.children: list[SchedNode] = []
         self.workers: list[WorkerNode] = []          # leaf schedulers only
         self.region_load = 0                          # owned regions/objects
+        self.migrate_no_fit = False                   # no migratable subtree
         # outstanding dispatched tasks per direct child (core_id -> count);
         # incremented during descent, decremented as completions route back.
         self.load: dict[str, int] = {}
@@ -40,6 +41,12 @@ class SchedNode:
     @property
     def is_leaf(self) -> bool:
         return not self.children
+
+    def siblings(self) -> list["SchedNode"]:
+        """Same-parent schedulers (migration candidates, paper SV-C)."""
+        if self.parent is None:
+            return []
+        return [c for c in self.parent.children if c is not self]
 
     def subtree_scheds(self) -> list["SchedNode"]:
         out, stack = [], [self]

@@ -1,0 +1,359 @@
+"""Scheduler-role agent: spawn, dependency traversal, descent, complete,
+quiesce, and region-ownership migration.
+
+Every handler in this module is work performed *on a scheduler core*:
+it is entered through ``Hierarchy.send``/``local`` with the processing
+cost charged to that core.  Directory metadata is only read for nodes
+the handling scheduler owns (its :class:`~.regions.DirectoryShard`);
+reads that cross shard boundaries go through the forwarding helpers
+(``forward_lookup``, the packing walk) and are charged to the owning
+scheduler, mirroring paper Fig. 6a where S2 packs region A via S0/S1.
+
+Ownership migration (paper SV-C): when a scheduler's ``region_load``
+exceeds the opt-in threshold, the agent picks its largest owned region
+subtree that fits inside half the load gap to the least-loaded sibling
+and re-homes it there.  The request is parent-routed — owner -> parent
+-> sibling — and the grant message is charged per migrated node, so
+rebalancing is visible in the virtual-time accounting.  With the
+feature disabled (default) no handler, message or charge differs from
+the unsharded runtime.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from .deps import ARG, TRAVERSE, WAIT, Entry
+from .regions import MODE_WRITE, ROOT_RID, NodeMeta
+from .runtime import DISPATCHED, DONE, READY, SPAWNED
+from .sched import SchedNode, score_candidates
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from .runtime import Myrmics, Task, TaskContext
+
+
+class SchedAgent:
+    """Spawn / traverse / descend / complete / quiesce effects."""
+
+    def __init__(self, rt: "Myrmics"):
+        self.rt = rt
+
+    # ---- shard forwarding ---------------------------------------------------
+
+    def forward_lookup(self, requester: SchedNode, nid: int) -> NodeMeta:
+        """Standalone forwarded-lookup primitive: resolve a node's
+        metadata, charged on the owning scheduler's core when the
+        requester does not own it (free locally).
+
+        The hot paths do not call this — their cross-shard reads ride
+        messages they already charge (pack_per_arg during packing,
+        dep_enqueue/traverse during traversal).  This is the explicit
+        primitive for reads outside those flows (extensions, tooling),
+        and pins down the forwarding cost model under test."""
+        rt = self.rt
+        owner_id = rt.dir.owner_of(nid)
+        meta = rt.dir.serve_lookup(nid, requester.core_id)
+        if owner_id != requester.core_id:
+            rt.hier.send(requester, rt.sched_of(owner_id),
+                         rt.cost.shard_lookup_proc, lambda: None)
+        return meta
+
+    # ---- spawn path ---------------------------------------------------------
+
+    def sys_spawn(self, task: "Task", ctx: "TaskContext") -> None:
+        rt = self.rt
+        # well-formedness (the programming model's footprint rule [6]):
+        # every child argument must lie inside the spawner's footprint.
+        parent_nids = ctx.task.arg_nids()
+        for a in task.dep_args:
+            if not any(rt.dir.is_ancestor_or_self(p, a.nid)
+                       for p in parent_nids):
+                raise ValueError(
+                    f"{ctx.task} spawns {task} with arg node {a.nid} "
+                    "outside the parent's declared footprint")
+        rt.tasks_spawned += 1
+        # SPAWN message: worker -> owner of the parent task (routed via tree)
+        rt.hier.send(ctx.worker, ctx.task.owner, rt.cost.spawn_proc,
+                     self.h_spawn, ctx.task.owner, task,
+                     send_time=ctx.now)
+
+    def h_spawn(self, sched: SchedNode, task: "Task") -> None:
+        """Spawn handling at the parent task's owner.
+
+        Ownership is delegated downward while a single child subtree owns
+        every argument (paper SV-E); the delegation messages are charged
+        but the walk is resolved here so that the *dependency enqueues*
+        for successive spawns of one parent leave this scheduler in spawn
+        order — the origin node's FIFO queue then reflects program order.
+        """
+        rt = self.rt
+        arg_owners = {rt.dir.owner_of(a.nid) for a in task.dep_args}
+        owner = sched
+        hop_src = sched
+        while True:
+            nxt = None
+            for c in owner.children:
+                if arg_owners and arg_owners <= rt.subtree_ids[c.core_id]:
+                    nxt = c
+                    break
+            if nxt is None:
+                break
+            # charge the delegation message (accounting only)
+            rt.hier.send(hop_src, nxt, rt.cost.spawn_proc, lambda: None)
+            hop_src = nxt
+            owner = nxt
+        task.owner = owner
+        if not task.dep_args:
+            task.state = READY
+            rt.hier.local(owner, 0.0, self.mark_ready, task)
+            return
+        parent_nids = task.parent.arg_nids() if task.parent else [ROOT_RID]
+        for i, a in enumerate(task.dep_args):
+            origin = rt.dir.covering_node(parent_nids, a.nid)
+            path = rt.dir.path_down(origin, a.nid)
+            if len(path) == 1:
+                entry = Entry(ARG, task, a.mode, (), i)
+            else:
+                entry = Entry(TRAVERSE, task, a.mode, tuple(path[1:]), i)
+            rt.hier.send(sched, rt.node_owner(origin),
+                         rt.cost.dep_enqueue_per_arg,
+                         self.h_enqueue, origin, entry, None)
+
+    def mark_ready(self, task: "Task") -> None:
+        task.state = READY
+        self.begin_packing(task.owner, task)
+
+    def h_enqueue(self, nid: int, entry: Entry, via_parent: int | None) -> None:
+        self.rt.deps.enqueue(nid, entry, via_parent)
+
+    # ---- packing + hierarchical scheduling descent --------------------------
+
+    def begin_packing(self, sched: SchedNode, task: "Task") -> None:
+        """Coalesce the task footprint by last producer (paper SV-E).
+
+        The footprint walk is a sharded-directory read: object metadata
+        owned by other schedulers is served by their shards, and each
+        remote owner is charged for answering (the pack_per_arg message
+        below), replacing any free global-structure read."""
+        rt = self.rt
+        pack: dict[str, int] = {}
+        remote_owners: set[str] = set()
+        for a in task.dep_args:
+            if a.notransfer or not a.fetch:
+                continue
+            for meta in rt.dir.objects_under(a.nid, requester=sched.core_id):
+                if meta.owner != sched.core_id:
+                    remote_owners.add(meta.owner)
+                key = meta.last_producer or "_unborn"
+                pack[key] = pack.get(key, 0) + meta.size
+        task.pack_by_worker = {
+            k: v for k, v in pack.items() if k != "_unborn"
+        }
+        cost = rt.cost.schedule_base + rt.cost.pack_per_arg * max(
+            1, len(task.dep_args))
+        # packing requires messages to the schedulers owning parts of
+        # the footprint (paper Fig. 6a: S2 packs region A via S0 and S1)
+        for ro in sorted(remote_owners):
+            rt.hier.send(sched, rt.sched_of(ro), rt.cost.pack_per_arg,
+                         lambda: None)
+        rt.hier.local(sched, cost, self.h_descend, sched, task)
+
+    def live_workers(self, sched: SchedNode) -> set[str]:
+        rt = self.rt
+        return {w for w in rt.subtree_workers[sched.core_id]
+                if w not in rt.dead_workers}
+
+    def h_descend(self, sched: SchedNode, task: "Task") -> None:
+        rt = self.rt
+        if sched.is_leaf and not sched.workers and sched.parent is not None:
+            rt.hier.send(sched, sched.parent, rt.cost.dispatch_proc,
+                         self.h_descend, sched.parent, task)
+            return
+        if sched.is_leaf:
+            cands = [
+                (w, {w.core_id}, sched.load[w.core_id]) for w in sched.workers
+            ]
+            w = score_candidates(task.pack_by_worker, cands, rt.policy_p)
+            sched.load[w.core_id] += 1
+            task.worker = w
+            task.state = DISPATCHED
+            # from now on the chosen worker is the last producer of all
+            # write arguments (paper SV-E); NOTRANSFER tasks never touch
+            # the data, so they leave producers unchanged.  The updates
+            # land in the owning shards, piggybacked on the dispatch
+            # message (fixed 64-byte messages have spare payload).
+            for a in task.dep_args:
+                if a.mode == MODE_WRITE and not a.notransfer:
+                    for meta in rt.dir.objects_under(
+                            a.nid, requester=sched.core_id):
+                        meta.last_producer = w.core_id
+            rt.hier.send(sched, w, rt.cost.worker_dispatch_recv,
+                         rt.worker_agent.h_dispatch, w, task)
+            rt.worker_agent.maybe_backup(task)
+            return
+        cands = [
+            (c, rt.subtree_workers[c.core_id], sched.load[c.core_id])
+            for c in sched.children
+            if self.live_workers(c)
+        ]
+        if not cands:
+            # no live workers below: bounce back up to the parent
+            target = sched.parent or sched
+            rt.hier.send(sched, target, rt.cost.dispatch_proc,
+                         self.h_descend, target, task)
+            return
+        c = score_candidates(task.pack_by_worker, cands, rt.policy_p)
+        sched.load[c.core_id] += 1
+        rt.hier.send(sched, c, rt.cost.dispatch_proc,
+                     self.h_descend, c, task)
+
+    # ---- sys_wait -----------------------------------------------------------
+
+    def h_wait(self, task: "Task", args: list) -> None:
+        rt = self.rt
+        for a in args:
+            entry = Entry(WAIT, task, a.mode, (), -1)
+            rt.hier.send(task.owner, rt.node_owner(a.nid),
+                         rt.cost.dep_enqueue_per_arg,
+                         self.h_enqueue, a.nid, entry, None)
+
+    def resume_task(self, task: "Task") -> None:
+        rt = self.rt
+        w = task.worker
+        rt.hier.send(task.owner, w, rt.cost.worker_dispatch_recv,
+                     rt.worker_agent.h_resume, w, task)
+
+    # ---- completion ---------------------------------------------------------
+
+    def h_complete(self, task: "Task") -> None:
+        rt = self.rt
+        if task.completed:
+            return  # backup copy finished second; first completion won
+        task.completed = True
+        task.state = DONE
+        rt.tasks_done += 1
+        rt.worker_agent.note_service_time(
+            getattr(task, "last_exec_cycles", 1.0))
+        # load decrements piggyback on the completion route (worker -> owner)
+        if task.worker is not None:
+            node = task.worker
+            while node is not task.owner and node.parent is not None:
+                if node.core_id in node.parent.load:
+                    node.parent.load[node.core_id] = max(
+                        0, node.parent.load[node.core_id] - 1)
+                node = node.parent
+        owner = task.owner
+        for a in task.dep_args:
+            rt.hier.send(owner, rt.node_owner(a.nid),
+                         rt.cost.traverse_hop,
+                         self.h_release, a.nid, task)
+        if task is rt.main_task:
+            rt.deps.release(ROOT_RID, task)
+
+    def h_release(self, nid: int, task: "Task") -> None:
+        rt = self.rt
+        if rt.dir.is_live(nid):
+            rt.deps.release(nid, task)
+
+    # ---- ownership migration (paper SV-C) -----------------------------------
+
+    def maybe_migrate(self, owner: SchedNode) -> None:
+        """Opt-in load balancing: if ``owner`` holds more directory nodes
+        than ``rt.migrate_threshold``, hand its largest fitting region
+        subtree to the least-loaded sibling.
+
+        Following the simulation's convention (mutations synchronous,
+        cycle costs travel as messages), the shard hand-off is applied
+        immediately while the parent-routed protocol — owner -> parent
+        request, parent -> sibling grant carrying the subtree metadata —
+        is charged through ``Hierarchy.send`` with a per-node transfer
+        cost."""
+        rt = self.rt
+        th = rt.migrate_threshold
+        if th is None or owner.parent is None or owner.migrate_no_fit:
+            return
+        if owner.region_load <= th:
+            return
+        sibs = owner.siblings()
+        if not sibs:
+            return
+        target = min(sibs, key=lambda c: (c.region_load, c.core_id))
+        gap = owner.region_load - target.region_load
+        if gap <= 1:
+            return
+        # largest owned region subtree that still narrows the gap
+        best, best_n = None, 0
+        for m in rt.dir.shard(owner.core_id).live_regions():
+            if m.nid == ROOT_RID:
+                continue
+            n = rt.dir.owned_subtree_size(m.nid)
+            if best_n < n <= gap // 2 + 1:
+                best, best_n = m, n
+        if best is None:
+            # nothing fits (e.g. one monolithic region): object allocs
+            # only widen it, so stop rescanning until a new region owned
+            # by this scheduler appears (cleared in AllocAgent.sys_ralloc)
+            owner.migrate_no_fit = True
+            return
+        moved = rt.dir.migrate_subtree(best.nid, target.core_id)
+        if not moved:
+            return
+        owner.region_load -= len(moved)
+        target.region_load += len(moved)
+        rt.migrations += 1
+        rt.nodes_migrated += len(moved)
+        # parent-routed hand-off: request, then grant + metadata transfer
+        rt.hier.send(owner, owner.parent, rt.cost.migrate_proc, lambda: None)
+        rt.hier.send(owner.parent, target,
+                     rt.cost.migrate_proc
+                     + rt.cost.migrate_per_node * len(moved),
+                     lambda: None)
+
+
+class DepEffects:
+    """DepEngine effects: every callback is work on the owner of the
+    destination node; route + charge accordingly."""
+
+    def __init__(self, rt: "Myrmics"):
+        self.rt = rt
+
+    def forward_traverse(self, from_nid: int, entry: Entry) -> None:
+        rt = self.rt
+        nxt = entry.path[0]
+        rest = entry.path[1:]
+        if rest:
+            new = Entry(TRAVERSE, entry.task, entry.mode, rest, entry.arg_index)
+            cost = rt.cost.traverse_hop
+        else:
+            new = Entry(ARG, entry.task, entry.mode, (), entry.arg_index)
+            cost = rt.cost.dep_enqueue_per_arg
+        rt.hier.send(rt.node_owner(from_nid), rt.node_owner(nxt), cost,
+                     rt.sched_agent.h_enqueue, nxt, new, from_nid)
+
+    def arg_activated(self, task, arg_index: int, nid: int) -> None:
+        rt = self.rt
+        rt.hier.send(rt.node_owner(nid), task.owner, rt.cost.arg_ready_proc,
+                     self._h_arg_ready, task)
+
+    def _h_arg_ready(self, task) -> None:
+        task.satisfied += 1
+        if task.satisfied == len(task.dep_args) and task.state == SPAWNED:
+            task.state = READY
+            self.rt.sched_agent.begin_packing(task.owner, task)
+
+    def wait_activated(self, task, nid: int) -> None:
+        rt = self.rt
+        rt.hier.send(rt.node_owner(nid), task.owner, rt.cost.arg_ready_proc,
+                     self._h_wait_ready, task)
+
+    def _h_wait_ready(self, task) -> None:
+        task.wait_remaining -= 1
+        if task.wait_remaining == 0:
+            self.rt.sched_agent.resume_task(task)
+
+    def send_quiesce(self, child_nid: int, parent_nid: int,
+                     recv_r: int, recv_w: int) -> None:
+        rt = self.rt
+        rt.hier.send(rt.node_owner(child_nid), rt.node_owner(parent_nid),
+                     rt.cost.quiesce_proc, rt.deps.recv_quiesce,
+                     parent_nid, child_nid, recv_r, recv_w)

@@ -1,0 +1,100 @@
+"""Serial elision of the Myrmics programming model.
+
+Every spawn runs inline (depth-first) at the spawn point — the model's
+defining semantics [6].  The property tests compare the distributed
+runtime's labelled storage against this oracle bit-for-bit.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from .regions import ROOT_RID, Directory
+from .runtime import Arg, WaitSpec
+
+
+class SerialContext:
+    """Inline (depth-first) execution context: the model's serial
+    semantics.  Used as the determinism oracle in property tests."""
+
+    def __init__(self, rt: "SerialRuntime", depth: int = 0):
+        self.rt = rt
+        self.depth = depth
+        self.cursor = 0.0
+        self.worker_id = "serial"
+        self.now = 0.0
+
+    def compute(self, cycles: float) -> None:
+        pass
+
+    def ralloc(self, parent_rid: int = ROOT_RID, level_hint: int = 10**9,
+               label: str | None = None) -> int:
+        rid = self.rt.dir.new_region(parent_rid, "serial", level_hint)
+        if label is not None:
+            self.rt.labels[rid] = label
+        return rid
+
+    def alloc(self, size: int, rid: int = ROOT_RID,
+              label: str | None = None) -> int:
+        oid = self.rt.dir.new_object(rid, "serial", size)
+        if label is not None:
+            self.rt.labels[oid] = label
+        return oid
+
+    def balloc(self, size: int, rid: int, num: int,
+               label: str | None = None) -> list[int]:
+        oids = [self.alloc(size, rid) for _ in range(num)]
+        if label is not None:
+            for i, oid in enumerate(oids):
+                self.rt.labels[oid] = f"{label}[{i}]"
+        return oids
+
+    def free(self, oid: int) -> None:
+        for nid in self.rt.dir.free(oid):
+            self.rt.storage.pop(nid, None)
+
+    rfree = free
+
+    def read(self, oid: int) -> Any:
+        return self.rt.storage.get(oid)
+
+    def write(self, oid: int, value: Any) -> None:
+        self.rt.storage[oid] = value
+
+    def spawn(self, fn: Callable | None, args: list[Arg] | None = None,
+              duration: float = 0.0, name: str | None = None) -> None:
+        if fn is None:
+            return
+        sub = SerialContext(self.rt, self.depth + 1)
+        resolved = [a.value if a.safe else a.nid for a in (args or [])]
+        result = fn(sub, *resolved)
+        if hasattr(result, "__next__"):
+            for _ in result:
+                pass
+
+    def wait(self, args: list[Arg]) -> WaitSpec:
+        return WaitSpec(args or [])
+
+
+class SerialRuntime:
+    """Serial elision of the Myrmics program: every spawn runs inline at
+    the spawn point (the programming model's defining semantics [6])."""
+
+    def __init__(self) -> None:
+        self.dir = Directory(root_owner="serial")
+        self.storage: dict[int, Any] = {}
+        self.labels: dict[int, str] = {}
+
+    def run(self, main_fn: Callable, *extra: Any) -> dict[int, Any]:
+        ctx = SerialContext(self)
+        result = main_fn(ctx, ROOT_RID, *extra)
+        if hasattr(result, "__next__"):
+            for _ in result:
+                pass
+        return self.storage
+
+    def labelled_storage(self) -> dict[str, Any]:
+        return {
+            self.labels[nid]: v for nid, v in self.storage.items()
+            if nid in self.labels
+        }

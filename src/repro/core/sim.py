@@ -110,6 +110,10 @@ class CostModel:
     alloc_proc: float = 1200.0
     balloc_per_obj: float = 150.0
     free_proc: float = 900.0
+    # --- sharded directory (SV-C): forwarded lookups + ownership migration ---
+    shard_lookup_proc: float = 650.0   # answer a cross-shard metadata read
+    migrate_proc: float = 2500.0       # migration request/grant bookkeeping
+    migrate_per_node: float = 150.0    # per directory node handed over
 
     # --- DMA engine (paper SIII: a DMA can be started in 24 cycles) ---
     dma_startup: float = 24.0
@@ -152,6 +156,9 @@ class CostModel:
             alloc_proc=h.alloc_proc * f,
             balloc_per_obj=h.balloc_per_obj * f,
             free_proc=h.free_proc * f,
+            shard_lookup_proc=h.shard_lookup_proc * f,
+            migrate_proc=h.migrate_proc * f,
+            migrate_per_node=h.migrate_per_node * f,
             dma_startup=h.dma_startup,
             dma_bytes_per_cycle=h.dma_bytes_per_cycle,
         )

@@ -49,10 +49,11 @@ class Tracer:
 
 def attach_tracer(rt) -> Tracer:
     """Instrument a Myrmics runtime instance (monkey-patch the two
-    choke points: core occupancy and task execution)."""
+    choke points: worker-agent task completion and core occupancy)."""
     tracer = Tracer()
 
-    orig_finish = rt._finish_exec
+    wa = rt.worker_agent
+    orig_finish = wa.finish_exec
 
     def finish_exec(w, rec):
         t = rec.task
@@ -60,7 +61,7 @@ def attach_tracer(rt) -> Tracer:
                    cat="task", args={"tid": t.tid})
         return orig_finish(w, rec)
 
-    rt._finish_exec = finish_exec
+    wa.finish_exec = finish_exec
 
     # wrap every core's occupy for scheduler/message lanes
     def make(orig, cid):

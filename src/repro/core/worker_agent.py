@@ -1,0 +1,274 @@
+"""Worker-role agent: dispatch intake, DMA, task execution, sys_wait
+suspend/resume, straggler backups and worker fault handling.
+
+Every handler here is work performed on (or about) a *worker core*.
+The agent owns the per-worker execution records; scheduler-side effects
+(completion processing, wait enqueues) are messages back to the task's
+owning scheduler, charged through ``Hierarchy.send``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .runtime import (
+    DISPATCHED,
+    READY,
+    RUNNING,
+    WAITING,
+    Task,
+    TaskContext,
+    WaitSpec,
+)
+from .sched import WorkerNode
+
+
+@dataclass
+class ExecRecord:
+    """Worker-side record of a dispatched task."""
+
+    task: Task
+    dma_done: float = 0.0
+    start: float = 0.0
+    ctx: "TaskContext | None" = None
+    idle_counted: bool = False
+
+
+class WorkerAgent:
+    """Dispatch, DMA, exec, wait/resume, backup (paper SV-B/SV-E)."""
+
+    def __init__(self, rt):
+        self.rt = rt
+
+    # ---- scale-out: straggler backups, worker failure, elastic join ---------
+
+    def kill_worker(self, worker_id: str, at: float | None = None) -> None:
+        """Simulate losing a worker domain: queued and running tasks are
+        re-dispatched by their owners (the dependency queues define the
+        exact re-execution set); subsequent placement avoids the corpse.
+        """
+        rt = self.rt
+
+        def do_kill():
+            w = rt.hier.by_id[worker_id]
+            rt.dead_workers.add(worker_id)
+            victims = [r.task for r in w.queue]
+            if w.running is not None:
+                victims.append(w.running.task)
+            if w.suspended:
+                # a suspended (mid-wait) task has visible side effects
+                # (spawned children); blind re-execution would duplicate
+                # them — surface instead of corrupting the run.
+                raise RuntimeError(
+                    f"kill_worker({worker_id}): suspended tasks present; "
+                    "re-execution of mid-wait tasks is not supported")
+            w.queue.clear()
+            w.running = None
+            w.parent.workers = [x for x in w.parent.workers
+                                if x.core_id != worker_id]
+            w.parent.load.pop(worker_id, None)
+            for t in victims:
+                if t.state in (DISPATCHED, RUNNING, WAITING):
+                    rt.tasks_rescheduled += 1
+                    t.state = READY
+                    t.gen = None
+                    rt.hier.local(t.owner, rt.cost.schedule_base,
+                                  rt.sched_agent.h_descend, t.owner, t)
+        if at is None:
+            do_kill()
+        else:
+            rt.engine.at(at, do_kill)
+
+    def add_worker(self, leaf_sched_id: str) -> str:
+        """Elastic join: attach a fresh worker under a leaf scheduler."""
+        rt = self.rt
+        leaf = rt.hier.by_id[leaf_sched_id]
+        wid = f"w{len(rt.hier.workers)}"
+        w = WorkerNode(rt.engine, wid, leaf)
+        leaf.workers.append(w)
+        leaf.load[wid] = 0
+        rt.hier.workers.append(w)
+        rt.hier.by_id[wid] = w
+        for s in rt.hier.scheds:
+            rt.subtree_workers[s.core_id] = s.subtree_worker_ids()
+        return wid
+
+    def note_service_time(self, dt: float) -> None:
+        rt = self.rt
+        if rt.service_ewma is None:
+            rt.service_ewma = dt
+        else:
+            rt.service_ewma = 0.9 * rt.service_ewma + 0.1 * dt
+
+    def maybe_backup(self, task: Task) -> None:
+        """Straggler watchdog: if the task has not completed within
+        factor x EWMA service time, re-dispatch a backup copy to another
+        worker; the first completion wins (tasks are pure)."""
+        rt = self.rt
+        if rt.backup_factor is None or rt.service_ewma is None:
+            return
+        deadline = rt.engine.now + rt.backup_factor * rt.service_ewma
+
+        def check():
+            if not task.completed and not task.backup_spawned and \
+                    task.state in (DISPATCHED, RUNNING) and \
+                    task.worker is not None and \
+                    task.worker.core_id not in rt.dead_workers:
+                task.backup_spawned = True
+                rt.backups_spawned += 1
+                rt.hier.local(task.owner, rt.cost.schedule_base,
+                              rt.sched_agent.h_descend, task.owner, task)
+        rt.engine.at(deadline, check)
+
+    # ---- dispatch intake + DMA ----------------------------------------------
+
+    def h_dispatch(self, w: WorkerNode, task: Task) -> None:
+        rt = self.rt
+        if w.core_id in rt.dead_workers:
+            # dispatch raced with the failure: owner re-schedules
+            rt.tasks_rescheduled += 1
+            rt.hier.local(task.owner, rt.cost.schedule_base,
+                          rt.sched_agent.h_descend, task.owner, task)
+            return
+        rec = ExecRecord(task)
+        dma_bytes = sum(
+            b for wid, b in task.pack_by_worker.items() if wid != w.core_id
+        )
+        n_xfers = sum(
+            1 for wid, b in task.pack_by_worker.items()
+            if wid != w.core_id and b > 0
+        )
+        if dma_bytes > 0:
+            dur = (rt.cost.dma_startup * max(1, n_xfers)
+                   + dma_bytes / rt.cost.dma_bytes_per_cycle)
+            start = max(rt.engine.now, w.dma_free)
+            w.dma_free = start + dur
+            rec.dma_done = w.dma_free
+            w.core.stats.dma_bytes += dma_bytes
+        w.queue.append(rec)
+        self.try_start(w)
+
+    def try_start(self, w: WorkerNode) -> None:
+        rt = self.rt
+        if w.running is not None or not w.queue:
+            return
+        rec = w.queue[0]
+        if rec.dma_done > rt.engine.now:
+            if not rec.idle_counted:
+                rec.idle_counted = True
+                w.core.stats.idle_wait_dma += rec.dma_done - rt.engine.now
+            rt.engine.at(rec.dma_done, self.try_start, w)
+            return
+        w.queue.pop(0)
+        w.running = rec
+        rec.start = max(rt.engine.now, w.core.next_free)
+        rt.engine.at(rec.start, self.exec_task, w, rec)
+
+    # ---- execution ----------------------------------------------------------
+
+    def exec_task(self, w: WorkerNode, rec: ExecRecord) -> None:
+        rt = self.rt
+        task = rec.task
+        if task.completed:
+            # a backup copy already finished; drop this duplicate
+            w.running = None
+            self.try_start(w)
+            return
+        task.state = RUNNING
+        ctx = TaskContext(rt, task, w, rec.start)
+        rec.ctx = ctx
+        if task.fn is None:
+            ctx.cursor += task.duration
+            self.finish_exec(w, rec)
+            return
+        result = task.fn(ctx, *self.resolve_args(task))
+        if hasattr(result, "__next__"):
+            task.gen = result
+            self.drive_gen(w, rec)
+        else:
+            ctx.cursor += task.duration
+            self.finish_exec(w, rec)
+
+    def resolve_args(self, task: Task) -> list:
+        vals = [a.value if a.safe else a.nid for a in task.args]
+        return vals + list(task.extra)
+
+    def drive_gen(self, w: WorkerNode, rec: ExecRecord) -> None:
+        try:
+            yielded = next(rec.task.gen)
+        except StopIteration:
+            self.finish_exec(w, rec)
+            return
+        if not isinstance(yielded, WaitSpec):
+            raise TypeError(f"task yielded {yielded!r}; expected ctx.wait(...)")
+        self.suspend_for_wait(w, rec, yielded)
+
+    # ---- sys_wait suspend / resume ------------------------------------------
+
+    def suspend_for_wait(self, w: WorkerNode, rec: ExecRecord,
+                         spec: WaitSpec) -> None:
+        rt = self.rt
+        task = rec.task
+        ctx = rec.ctx
+        task.state = WAITING
+        task.wait_remaining = len(spec.args)
+        w.core.occupy(rec.start, ctx.cursor)
+        w.core.stats.task_cycles += ctx.cursor
+        w.running = None
+        w.suspended[task.tid] = rec
+        # WAIT message to the owner, which enqueues WAIT entries at the
+        # waited nodes (sys_wait, paper SV-A)
+        rt.hier.send(w, task.owner, rt.cost.complete_proc_base,
+                     rt.sched_agent.h_wait, task, list(spec.args),
+                     send_time=ctx.now)
+        self.try_start(w)
+
+    def h_resume(self, w: WorkerNode, task: Task) -> None:
+        rt = self.rt
+        rec = w.suspended.pop(task.tid)
+        if w.running is not None:
+            # run after the current task; keep FIFO order ahead of queue
+            rt.engine.at(w.core.next_free, self.resume_retry, w, rec)
+            w.suspended[task.tid] = rec
+            return
+        self.continue_gen(w, rec)
+
+    def resume_retry(self, w: WorkerNode, rec: ExecRecord) -> None:
+        rt = self.rt
+        if w.running is not None:
+            rt.engine.at(w.core.next_free, self.resume_retry, w, rec)
+            return
+        if rec.task.tid in w.suspended:
+            w.suspended.pop(rec.task.tid)
+            self.continue_gen(w, rec)
+
+    def continue_gen(self, w: WorkerNode, rec: ExecRecord) -> None:
+        rt = self.rt
+        task = rec.task
+        task.state = RUNNING
+        w.running = rec
+        rec.start = max(rt.engine.now, w.core.next_free)
+        # the generator closed over rec.ctx: rebase it for this activation
+        rec.ctx.t0 = rec.start
+        rec.ctx.cursor = 0.0
+        self.drive_gen(w, rec)
+
+    # ---- completion ---------------------------------------------------------
+
+    def finish_exec(self, w: WorkerNode, rec: ExecRecord) -> None:
+        rt = self.rt
+        task = rec.task
+        ctx = rec.ctx
+        task.last_exec_cycles = ctx.cursor
+        end = rec.start + ctx.cursor
+        w.core.occupy(rec.start, ctx.cursor)
+        w.core.stats.task_cycles += ctx.cursor
+        w.core.stats.tasks_executed += 1
+        w.running = None
+        cost = (rt.cost.complete_proc_base
+                + rt.cost.complete_per_arg * len(task.dep_args))
+        rt.hier.send(w, task.owner, cost, rt.sched_agent.h_complete, task,
+                     send_time=end)
+        # completion send cost on the worker
+        w.core.occupy(end, rt.cost.worker_complete_send)
+        rt.engine.at(w.core.next_free, self.try_start, w)

@@ -7,9 +7,12 @@ configurations and require bit-identical labelled storage vs the
 SerialRuntime oracle.
 """
 
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import In, InOut, Myrmics, Out, Safe, SerialRuntime
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import In, InOut, Myrmics, Out, Safe, SerialRuntime  # noqa: E402
 
 MAX_REGIONS = 4
 MAX_OBJECTS = 6

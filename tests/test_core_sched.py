@@ -1,0 +1,99 @@
+"""Hierarchy routing (LCA paths) and placement-score tie-breaking."""
+
+from repro.core.sched import Hierarchy, score_candidates
+from repro.core.sim import CostModel, Engine
+
+
+def build(n_workers, levels):
+    return Hierarchy.build(Engine(), CostModel.heterogeneous(),
+                           n_workers, levels)
+
+
+def ids(path):
+    return [n.core_id for n in path]
+
+
+class TestRoutePath:
+    def test_same_node_is_empty(self):
+        h = build(4, [1, 2])
+        assert h.route_path(h.by_id["w0"], h.by_id["w0"]) == []
+        assert h.route_path(h.by_id["s1.0"], h.by_id["s1.0"]) == []
+
+    def test_upward_leg_includes_the_lca(self):
+        # routing upward, the LCA itself processes the message before
+        # handing it over — so a worker -> own-leaf send costs one
+        # forwarding stop while the reverse (leaf -> worker) is direct
+        h = build(4, [1, 2])
+        assert ids(h.route_path(h.by_id["w0"], h.by_id["s1.0"])) == ["s1.0"]
+        assert ids(h.route_path(h.by_id["s1.0"], h.by_id["w0"])) == []
+
+    def test_worker_to_worker_same_leaf(self):
+        h = build(4, [1, 2])
+        # w0 and w1 hang off s1.0: one intermediate hop
+        assert ids(h.route_path(h.by_id["w0"], h.by_id["w1"])) == ["s1.0"]
+
+    def test_worker_to_worker_across_subtrees(self):
+        h = build(4, [1, 2])
+        # w0 (under s1.0) -> w3 (under s1.1): via both leaves + the root LCA
+        assert ids(h.route_path(h.by_id["w0"], h.by_id["w3"])) == [
+            "s1.0", "s0.0", "s1.1"]
+
+    def test_src_is_ancestor_of_dst(self):
+        h = build(4, [1, 2])
+        # root -> w2: the only intermediate core is w2's leaf scheduler
+        assert ids(h.route_path(h.by_id["s0.0"], h.by_id["w2"])) == ["s1.1"]
+        # the reverse climbs through the leaf and ends at the LCA (=dst)
+        assert ids(h.route_path(h.by_id["w2"], h.by_id["s0.0"])) == [
+            "s1.1", "s0.0"]
+
+    def test_three_level_cross_route(self):
+        h = build(8, [1, 2, 4])
+        w0, w7 = h.by_id["w0"], h.by_id["w7"]
+        path = ids(h.route_path(w0, w7))
+        # up w0's spine, over the root, down w7's spine
+        assert path == ["s2.0", "s1.0", "s0.0", "s1.1", "s2.3"]
+        # routing is symmetric in length
+        assert len(h.route_path(w7, w0)) == len(path)
+
+    def test_forwarding_charges_intermediates(self):
+        h = build(4, [1, 2])
+        w0, w3 = h.by_id["w0"], h.by_id["w3"]
+        fired = []
+        h.send(w0, w3, 100.0, lambda: fired.append(True))
+        h.engine.run()
+        assert fired == [True]
+        # every intermediate (s1.0, s0.0, s1.1) charged msg_proc
+        for cid in ("s1.0", "s0.0", "s1.1"):
+            assert h.by_id[cid].core.stats.busy_cycles == h.cost.msg_proc
+            assert h.by_id[cid].core.stats.msgs_sent == 1
+        assert w0.core.stats.msgs_sent == 1
+        # destination charged the processing cost
+        assert w3.core.stats.busy_cycles == 100.0
+
+
+class TestScoreCandidates:
+    def test_pure_locality_picks_producing_subtree(self):
+        cands = [("a", {"w0"}, 0), ("b", {"w1"}, 0)]
+        pack = {"w1": 4096}
+        assert score_candidates(pack, cands, policy_p=100) == "b"
+
+    def test_pure_balance_picks_least_loaded(self):
+        cands = [("a", {"w0"}, 5), ("b", {"w1"}, 1)]
+        assert score_candidates({}, cands, policy_p=0) == "b"
+
+    def test_tie_breaks_on_first_candidate(self):
+        # identical scores: the earliest candidate in list order wins,
+        # deterministically, regardless of node identity
+        cands = [("x", {"w0"}, 2), ("y", {"w1"}, 2), ("z", {"w2"}, 2)]
+        assert score_candidates({}, cands, policy_p=50) == "x"
+        assert score_candidates({}, list(reversed(cands)), policy_p=50) == "z"
+
+    def test_tie_break_is_stable_under_equal_split(self):
+        # two candidates each produced half the footprint, equal load
+        cands = [("a", {"w0"}, 3), ("b", {"w1"}, 3)]
+        pack = {"w0": 512, "w1": 512}
+        assert score_candidates(pack, cands, policy_p=20) == "a"
+
+    def test_zero_footprint_zero_load_defaults_first(self):
+        cands = [("a", {"w0"}, 0), ("b", {"w1"}, 0)]
+        assert score_candidates({}, cands, policy_p=20) == "a"

@@ -121,7 +121,8 @@ def test_layers_selective_scan_matches_ref():
                                atol=5e-5, rtol=5e-4)
 
 
-@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize(
+    "causal", [pytest.param(True, marks=pytest.mark.slow), False])
 @pytest.mark.parametrize("shape", [(2, 64, 64, 4, 2, 32),
                                    (1, 96, 96, 8, 8, 64)])
 def test_flash_bwd_kernel(shape, causal):
@@ -148,6 +149,7 @@ def test_flash_bwd_kernel(shape, causal):
                                    atol=5e-4, rtol=5e-4)
 
 
+@pytest.mark.slow
 def test_flash_vjp_matches_naive_grad():
     from repro.models.layers import blocked_attention
     b, s, hq, hkv, d = 2, 33, 4, 2, 16

@@ -10,6 +10,15 @@ from repro.models.transformer import LM
 
 RNG = jax.random.PRNGKey(0)
 
+# One cheap representative arch stays in the fast tier-1 run; the
+# expensive architectures (vision/MoE/mamba hybrids dominate suite wall
+# time) run under `pytest -m slow`.
+FAST_ARCHS = ("qwen2_0_5b",)
+ARCH_PARAMS = [
+    a if a in FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+    for a in ARCH_IDS
+]
+
 
 def make_batch(cfg, b=2, s=16, with_labels=True):
     batch = {"tokens": jax.random.randint(RNG, (b, s), 0, cfg.vocab)}
@@ -25,7 +34,7 @@ def make_batch(cfg, b=2, s=16, with_labels=True):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_forward_and_train_step(arch):
     """Reduced same-family config: one forward/train step on CPU,
     asserting output shapes and no NaNs (deliverable (f))."""
@@ -43,7 +52,7 @@ def test_smoke_forward_and_train_step(arch):
         assert np.isfinite(np.asarray(leaf, np.float32)).all()
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_train_step_reduces_loss(arch):
     from repro.optim import AdamW
     from repro.train.steps import make_train_step
@@ -61,7 +70,7 @@ def test_train_step_reduces_loss(arch):
     assert losses[-1] < losses[0], losses
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_matches_forward(arch):
     """prefill(S) + decode(token S) == forward(S+1) last logits."""
     cfg = get_config(arch).smoke()
@@ -83,7 +92,7 @@ def test_decode_matches_forward(arch):
     assert rel < 5e-2, rel
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_microbatched_grads_match(arch):
     """Gradient accumulation (2 microbatches) ~= full-batch step."""
     from repro.optim import AdamW

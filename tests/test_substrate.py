@@ -77,6 +77,7 @@ def test_checkpoint_gc_and_async(tmp_path):
     assert store.steps() == [3, 4]
 
 
+@pytest.mark.slow
 def test_train_loop_failure_restart(tmp_path):
     from repro.train.loop import FailurePlan, train
     cfg = get_config("qwen2_0_5b").smoke()
@@ -89,6 +90,7 @@ def test_train_loop_failure_restart(tmp_path):
     assert len(rep.losses) == rep.steps_run
 
 
+@pytest.mark.slow
 def test_train_loop_deterministic_restart_equivalence(tmp_path):
     """Failure + restart produces the same final loss trajectory as an
     uninterrupted run (checkpoint + deterministic data)."""
@@ -102,6 +104,7 @@ def test_train_loop_deterministic_restart_equivalence(tmp_path):
     assert abs(r1.losses[-1] - r2.losses[-1]) < 1e-4
 
 
+@pytest.mark.slow
 def test_serving_engine_completes_and_deterministic():
     from repro.serving import Request, ServingEngine
     cfg = get_config("qwen2_0_5b").smoke()
