@@ -1,5 +1,11 @@
 """The paper's six benchmarks as Myrmics task programs (virtual mode).
 
+Every task is written against the declarative API: a ``@task``-decorated
+function whose signature carries the access annotations (paper Fig. 4),
+spawned by passing the region/object handles positionally — the runtime
+derives the dependency footprint from the signature.  Virtual-mode tasks
+have empty bodies; their compute is the ``duration=`` virtual cycles.
+
 Each app has a *flat* variant (main spawns every fine-grained task) and
 a *hierarchical* variant (main spawns coarse per-group tasks with
 region arguments; those spawn the fine tasks from worker cores, so
@@ -22,11 +28,10 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-from repro.core import In, InOut, Myrmics, Out, Safe
+from repro.core import In, InOut, Myrmics, Out, Safe, task
 from repro.core.sim import CostModel
 
 BARRIER = 459.0   # paper SIII: 512-worker barrier
-
 
 @dataclass
 class AppResult:
@@ -44,17 +49,17 @@ def _run(main, n_workers, levels, policy_p=20, cost=None) -> AppResult:
     rt = Myrmics(n_workers=n_workers, sched_levels=levels,
                  cost=cost or CostModel.heterogeneous(), policy_p=policy_p)
     rep = rt.run(main)
-    assert rep["tasks_spawned"] == rep["tasks_done"], "benchmark app hung"
-    total = rep["total_cycles"] or 1.0
-    wb = [w.busy_cycles / total for w in rep["workers"].values()]
-    wt = [w.task_cycles / total for w in rep["workers"].values()]
-    sb = [s.busy_cycles / total for s in rep["scheds"].values()]
+    assert rep.tasks_spawned == rep.tasks_done, "benchmark app hung"
+    total = rep.total_cycles or 1.0
+    wb = [w.busy_cycles / total for w in rep.workers.values()]
+    wt = [w.task_cycles / total for w in rep.workers.values()]
+    sb = [s.busy_cycles / total for s in rep.scheds.values()]
     return AppResult(
-        cycles=rep["total_cycles"],
-        tasks=rep["tasks_done"],
-        dma_bytes=sum(w.dma_bytes for w in rep["workers"].values()),
-        msg_bytes=sum(w.msg_bytes_sent for w in rep["workers"].values())
-        + sum(s.msg_bytes_sent for s in rep["scheds"].values()),
+        cycles=rep.total_cycles,
+        tasks=rep.tasks_done,
+        dma_bytes=sum(w.dma_bytes for w in rep.workers.values()),
+        msg_bytes=sum(w.msg_bytes_sent for w in rep.workers.values())
+        + sum(s.msg_bytes_sent for s in rep.scheds.values()),
         worker_busy_frac=sum(wb) / max(len(wb), 1),
         worker_task_frac=sum(wt) / max(len(wt), 1),
         sched_busy_frac=sum(sb) / max(len(sb), 1),
@@ -86,6 +91,10 @@ def jacobi(n_workers: int, *, total_work: float = 256e6, steps: int = 6,
     P = n_workers * chunks_per_worker
     work = total_work / steps / P
 
+    @task
+    def j_update(ctx, blk: InOut, top: Out, bot: Out, *nbrs: In):
+        """Relax one block; emit fresh border rows (virtual compute)."""
+
     def main(ctx, root):
         G = n_groups(P) if hier else 1
         grp = lambda i: i * G // P
@@ -101,40 +110,40 @@ def jacobi(n_workers: int, *, total_work: float = 256e6, steps: int = 6,
             bots.append([ctx.alloc(row_bytes, b_rids[grp(i)][par])
                          for par in range(2)])
 
-        def fine_args(i, t):
+        def spawn_fine(c, i, t):
             pb, cb = (t + 1) % 2, t % 2
-            args = [InOut(blocks[i]), Out(tops[i][cb]), Out(bots[i][cb])]
+            nbrs = []
             if t > 0:
                 if i > 0:
-                    args.append(In(bots[i - 1][pb]))
+                    nbrs.append(bots[i - 1][pb])
                 if i < P - 1:
-                    args.append(In(tops[i + 1][pb]))
-            return args
+                    nbrs.append(tops[i + 1][pb])
+            c.spawn(j_update, blocks[i], tops[i][cb], bots[i][cb], *nbrs,
+                    duration=work, name=f"j{t}.{i}")
 
         if not hier:
             for t in range(steps):
                 for i in range(P):
-                    ctx.spawn(None, fine_args(i, t), duration=work,
-                              name=f"j{t}.{i}")
+                    spawn_fine(ctx, i, t)
         else:
-            def coarse(c, *args):
-                g, t = args[-2], args[-1]
+            @task
+            def j_group(c, g_rid: InOut.nt, b_out: Out.nt, b_in: In.nt,
+                        *nbr: In.nt, g: Safe, t: Safe):
                 lo, hi = g * P // G, (g + 1) * P // G
                 for i in range(lo, hi):
-                    c.spawn(None, fine_args(i, t), duration=work)
+                    spawn_fine(c, i, t)
 
             for t in range(steps):
                 pb, cb = (t + 1) % 2, t % 2
                 for g in range(G):
-                    args = [InOut(g_rids[g], notransfer=True),
-                            Out(b_rids[g][cb], notransfer=True),
-                            In(b_rids[g][pb], notransfer=True)]
+                    nbr = []
                     if g > 0:
-                        args.append(In(b_rids[g - 1][pb], notransfer=True))
+                        nbr.append(b_rids[g - 1][pb])
                     if g < G - 1:
-                        args.append(In(b_rids[g + 1][pb], notransfer=True))
-                    args += [Safe(g), Safe(t)]
-                    ctx.spawn(coarse, args, name=f"J{t}.{g}")
+                        nbr.append(b_rids[g + 1][pb])
+                    ctx.spawn(j_group, g_rids[g], b_rids[g][cb],
+                              b_rids[g][pb], *nbr, g=g, t=t,
+                              name=f"J{t}.{g}")
         yield ctx.wait([InOut(root)])
 
     return main
@@ -160,27 +169,35 @@ def raytrace(n_workers: int, *, total_work: float = 256e6,
     def imbalance(i):
         return 0.6 + 0.8 * ((i * 2654435761) % 1000) / 1000.0
 
+    @task
+    def load_scene(ctx, scene: Out):
+        """Read the scene description into memory (virtual compute)."""
+
+    @task
+    def trace_lines(ctx, scene: In, out: Out):
+        """Trace one bundle of scanlines (virtual compute)."""
+
     def main(ctx, root):
         G = n_groups(P) if hier else 1
         grp = lambda i: i * G // P
         scene = ctx.alloc(scene_bytes, root, label="scene")
-        ctx.spawn(None, [Out(scene)], duration=1e5, name="load_scene")
+        ctx.spawn(load_scene, scene, duration=1e5)
         g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
         outs = [ctx.alloc(lines_bytes, g_rids[grp(i)]) for i in range(P)]
 
         if not hier:
             for i in range(P):
-                ctx.spawn(None, [In(scene), Out(outs[i])],
+                ctx.spawn(trace_lines, scene, outs[i],
                           duration=base * imbalance(i), name=f"rt{i}")
         else:
-            def coarse(c, g_rid, scene_o, g):
+            @task
+            def trace_group(c, g_rid: InOut.nt, scene_o: In.nt, *, g: Safe):
                 for i in range(g * P // G, (g + 1) * P // G):
-                    c.spawn(None, [In(scene_o), Out(outs[i])],
+                    c.spawn(trace_lines, scene_o, outs[i],
                             duration=base * imbalance(i))
+
             for g in range(G):
-                ctx.spawn(coarse, [InOut(g_rids[g], notransfer=True),
-                                   In(scene, notransfer=True), Safe(g)],
-                          name=f"RT{g}")
+                ctx.spawn(trace_group, g_rids[g], scene, g=g, name=f"RT{g}")
         yield ctx.wait([InOut(root)])
 
     return main
@@ -205,6 +222,14 @@ def bitonic(n_workers: int, *, total_elems_work: float = 256e6,
               for j in range(k - 1, -1, -1)]
     work = total_elems_work / (P * (len(stages) + 1))
 
+    @task
+    def local_sort(ctx, buf: Out):
+        """Sort one chunk locally (virtual compute)."""
+
+    @task
+    def exchange(ctx, mine: In, partner: In, out: Out):
+        """Butterfly compare-exchange into the next parity buffer."""
+
     def main(ctx, root):
         G = n_groups(P) if hier else 1
         cpg = P // G
@@ -215,34 +240,33 @@ def bitonic(n_workers: int, *, total_elems_work: float = 256e6,
                  for par in range(2)] for i in range(P)]
 
         for i in range(P):
-            ctx.spawn(None, [Out(bufs[i][0])], duration=work,
+            ctx.spawn(local_sort, bufs[i][0], duration=work,
                       name=f"sort{i}")
 
-        def fine(c, s, lo, hi):
+        def spawn_fine(c, s, lo, hi):
             _, j = stages[s]
             src, dst = s % 2, (s + 1) % 2
             for i in range(lo, hi):
                 p = i ^ (1 << j)
-                c.spawn(None, [In(bufs[i][src]), In(bufs[p][src]),
-                               Out(bufs[i][dst])], duration=work)
+                c.spawn(exchange, bufs[i][src], bufs[p][src], bufs[i][dst],
+                        duration=work)
 
         if not hier:
             for s in range(len(stages)):
-                fine(ctx, s, 0, P)
+                spawn_fine(ctx, s, 0, P)
         else:
-            def coarse(c, *args):
-                s, g = args[-2], args[-1]
-                fine(c, s, g * cpg, (g + 1) * cpg)
+            @task
+            def exchange_group(c, src_r: In.nt, dst_r: Out.nt,
+                               *partner: In.nt, s: Safe, g: Safe):
+                spawn_fine(c, s, g * cpg, (g + 1) * cpg)
+
             for s, (_, j) in enumerate(stages):
                 src, dst = s % 2, (s + 1) % 2
                 for g in range(G):
                     pg = grp((g * cpg) ^ (1 << j))  # partner group
-                    args = [In(r_bufs[g][src], notransfer=True),
-                            Out(r_bufs[g][dst], notransfer=True)]
-                    if pg != g:
-                        args.append(In(r_bufs[pg][src], notransfer=True))
-                    args += [Safe(s), Safe(g)]
-                    ctx.spawn(coarse, args, name=f"B{s}.{g}")
+                    partner = [r_bufs[pg][src]] if pg != g else []
+                    ctx.spawn(exchange_group, r_bufs[g][src], r_bufs[g][dst],
+                              *partner, s=s, g=g, name=f"B{s}.{g}")
         yield ctx.wait([InOut(root)])
 
     return main
@@ -269,13 +293,29 @@ def kmeans(n_workers: int, *, total_work: float = 256e6, steps: int = 4,
     work = total_work / steps / P
     red_work = work / 8
 
+    @task
+    def init_centroids(ctx, c0: Out):
+        """Pick the initial centroids (virtual compute)."""
+
+    @task
+    def assign(ctx, cent: In, chunk: InOut, partial: Out):
+        """Assign one chunk's points; emit partial centroid sums."""
+
+    @task
+    def reduce_pair(ctx, a: In, b: In, out: Out):
+        """Merge two partial centroid sums."""
+
+    @task
+    def new_centroids(ctx, last: In, cent: Out):
+        """Normalize the reduced sums into the next centroids."""
+
     def main(ctx, root):
         G = n_groups(P) if hier else 1
         grp = lambda i: i * G // P
         g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
         chunks = [ctx.alloc(chunk_bytes, g_rids[grp(i)]) for i in range(P)]
         cents = [ctx.alloc(cent_bytes, root) for _ in range(steps + 1)]
-        ctx.spawn(None, [Out(cents[0])], duration=1e5, name="init_c")
+        ctx.spawn(init_centroids, cents[0], duration=1e5)
 
         for t in range(steps):
             tmp = ctx.ralloc(root, 1, label=f"tmp{t}")
@@ -283,23 +323,23 @@ def kmeans(n_workers: int, *, total_work: float = 256e6, steps: int = 4,
             partials = [ctx.alloc(cent_bytes, tmp_sub[grp(i)])
                         for i in range(P)]
 
-            def fine(c, lo, hi, t=t, partials=partials):
+            def spawn_fine(c, lo, hi, t=t, partials=partials):
                 for i in range(lo, hi):
-                    c.spawn(None, [In(cents[t]), InOut(chunks[i]),
-                                   Out(partials[i])], duration=work)
+                    c.spawn(assign, cents[t], chunks[i], partials[i],
+                            duration=work)
 
             if not hier:
-                fine(ctx, 0, P)
+                spawn_fine(ctx, 0, P)
             else:
-                def coarse(c, *args, fine_fn=fine):
-                    g = args[-1]
+                @task
+                def assign_group(c, g_rid: InOut.nt, tmp_r: Out.nt,
+                                 cent: In.nt, *, g: Safe,
+                                 fine_fn: Safe = spawn_fine):
                     fine_fn(c, g * P // G, (g + 1) * P // G)
+
                 for g in range(G):
-                    ctx.spawn(coarse,
-                              [InOut(g_rids[g], notransfer=True),
-                               Out(tmp_sub[g], notransfer=True),
-                               In(cents[t], notransfer=True), Safe(g)],
-                              name=f"K{t}.{g}")
+                    ctx.spawn(assign_group, g_rids[g], tmp_sub[g], cents[t],
+                              g=g, name=f"K{t}.{g}")
             # tree reduction over partials (spawned by main: object args)
             level = list(partials)
             r = 0
@@ -307,14 +347,14 @@ def kmeans(n_workers: int, *, total_work: float = 256e6, steps: int = 4,
                 nxt = []
                 for a in range(0, len(level) - 1, 2):
                     o = ctx.alloc(cent_bytes, tmp)
-                    ctx.spawn(None, [In(level[a]), In(level[a + 1]), Out(o)],
+                    ctx.spawn(reduce_pair, level[a], level[a + 1], o,
                               duration=red_work, name=f"red{t}.{r}")
                     nxt.append(o)
                     r += 1
                 if len(level) % 2:
                     nxt.append(level[-1])
                 level = nxt
-            ctx.spawn(None, [In(level[0]), Out(cents[t + 1])],
+            ctx.spawn(new_centroids, level[0], cents[t + 1],
                       duration=red_work, name=f"newc{t}")
         yield ctx.wait([InOut(root)])
 
@@ -340,6 +380,14 @@ def matmul(n_workers: int, *, total_work: float = 512e6, hier: bool = False,
     P = p * p
     work = total_work / (P * p)
 
+    @task
+    def init_block(ctx, blk: Out):
+        """Fill one matrix block (virtual compute)."""
+
+    @task
+    def block_mul(ctx, c_blk: InOut, a_blk: In, b_blk: In):
+        """C[i][j] += A[i][k] * B[k][j] (virtual compute)."""
+
     def main(ctx, root):
         G = n_groups(P) if hier else 1
         grp = lambda cell: cell * G // P
@@ -356,26 +404,24 @@ def matmul(n_workers: int, *, total_work: float = 512e6, hier: bool = False,
         for i in range(p):
             for j in range(p):
                 for M in (A, B, C):
-                    ctx.spawn(None, [Out(M[i][j])], duration=1e4)
+                    ctx.spawn(init_block, M[i][j], duration=1e4)
 
-        def fine(c, cells):
+        def spawn_fine(c, cells):
             for cell in cells:
                 i, j = cell // p, cell % p
                 for k in range(p):
-                    c.spawn(None, [InOut(C[i][j]), In(A[i][k]), In(B[k][j])],
+                    c.spawn(block_mul, C[i][j], A[i][k], B[k][j],
                             duration=work)
 
         if not hier:
-            fine(ctx, range(P))
+            spawn_fine(ctx, range(P))
         else:
-            def coarse(c, *args):
-                g = args[-1]
-                fine(c, range(g * P // G, (g + 1) * P // G))
+            @task
+            def mul_group(c, g_rid: InOut.nt, *ab: In.nt, g: Safe):
+                spawn_fine(c, range(g * P // G, (g + 1) * P // G))
+
             for g in range(G):
-                args = [InOut(g_rids[g], notransfer=True)]
-                args += [In(ab_rids[x], notransfer=True) for x in range(G)]
-                args.append(Safe(g))
-                ctx.spawn(coarse, args, name=f"M{g}")
+                ctx.spawn(mul_group, g_rids[g], *ab_rids, g=g, name=f"M{g}")
         yield ctx.wait([InOut(root)])
 
     return main
@@ -400,56 +446,71 @@ def barnes_hut(n_workers: int, *, total_work: float = 256e6, steps: int = 3,
     build_work = 0.2 * total_work / steps / P
     force_work = 0.8 * total_work / steps / (P * 4)
 
+    @task
+    def init_bodies(ctx, body: Out):
+        """Initial body positions for one partition (virtual compute)."""
+
+    @task
+    def build_tree(ctx, body: In, tree: Out):
+        """Build this partition's octree (virtual compute)."""
+
+    @task
+    def compute_forces(ctx, body: InOut, own_tree: In, far_tree: In):
+        """Walk two trees, accumulate forces (virtual compute)."""
+
+    @task
+    def rebalance(ctx, step: In, *bodies: InOut):
+        """All-to-all load-balance exchange over the body partitions."""
+
     def main(ctx, root):
         G = n_groups(P) if hier else 1
         grp = lambda i: i * G // P
         g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
         bodies = [ctx.alloc(tree_bytes, g_rids[grp(i)]) for i in range(P)]
         for i in range(P):
-            ctx.spawn(None, [Out(bodies[i])], duration=1e4)
+            ctx.spawn(init_bodies, bodies[i], duration=1e4)
 
         for t in range(steps):
             step_r = ctx.ralloc(root, 1, label=f"s{t}")
             sub = [ctx.ralloc(step_r, 2) for _ in range(G)]
             trees = [ctx.alloc(tree_bytes, sub[grp(i)]) for i in range(P)]
 
-            def builds(c, lo, hi):
+            def spawn_builds(c, lo, hi):
                 for i in range(lo, hi):
-                    c.spawn(None, [In(bodies[i]), Out(trees[i])],
+                    c.spawn(build_tree, bodies[i], trees[i],
                             duration=build_work)
 
-            def forces(c, lo, hi):
+            def spawn_forces(c, lo, hi):
                 for i in range(lo, hi):
                     for krel in range(4):
                         j = (i + 1 + (krel * krel * 7 + i)
                              % max(P - 1, 1)) % P
                         imb = 0.5 + 1.5 * ((i * 31 + krel) % 100) / 100.0
-                        c.spawn(None, [InOut(bodies[i]), In(trees[i]),
-                                       In(trees[j])],
+                        c.spawn(compute_forces, bodies[i], trees[i], trees[j],
                                 duration=force_work * imb)
 
             if not hier:
-                builds(ctx, 0, P)
-                forces(ctx, 0, P)
+                spawn_builds(ctx, 0, P)
+                spawn_forces(ctx, 0, P)
             else:
-                def c_build(c, *args, fn=builds):
-                    g = args[-1]
+                @task
+                def build_group(c, g_rid: In.nt, sub_r: Out.nt, *, g: Safe,
+                                fn: Safe = spawn_builds):
                     fn(c, g * P // G, (g + 1) * P // G)
 
-                def c_force(c, *args, fn=forces):
-                    g = args[-1]
+                @task
+                def force_group(c, g_rid: InOut.nt, step: In.nt, *, g: Safe,
+                                fn: Safe = spawn_forces):
                     fn(c, g * P // G, (g + 1) * P // G)
+
                 for g in range(G):
-                    ctx.spawn(c_build,
-                              [In(g_rids[g], notransfer=True),
-                               Out(sub[g], notransfer=True), Safe(g)],
+                    ctx.spawn(build_group, g_rids[g], sub[g], g=g,
                               name=f"BH_b{t}.{g}")
                 for g in range(G):
-                    args = [InOut(g_rids[g], notransfer=True),
-                            In(step_r, notransfer=True), Safe(g)]
-                    ctx.spawn(c_force, args, name=f"BH_f{t}.{g}")
+                    ctx.spawn(force_group, g_rids[g], step_r, g=g,
+                              name=f"BH_f{t}.{g}")
             # all-to-all load-balance exchange
-            ctx.spawn(None, [In(step_r)] + [InOut(b) for b in bodies[:8]],
+            ctx.spawn(rebalance, step_r, *bodies[:8],
                       duration=1e5, name=f"rebal{t}")
             yield ctx.wait([InOut(root)])
             ctx.rfree(step_r)

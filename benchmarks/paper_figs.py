@@ -9,10 +9,27 @@ from __future__ import annotations
 
 import math
 
-from repro.core import In, InOut, Myrmics, Out
+from repro.core import In, InOut, Myrmics, Out, task
 from repro.core.sim import CostModel
 
 from .apps import APPS, hier_levels, run_app
+
+
+# -- shared virtual-mode tasks (declarative API; compute is duration=) ---------
+
+@task
+def produce(ctx, o: Out):
+    """Produce one object (virtual compute)."""
+
+
+@task
+def update(ctx, o: InOut):
+    """Read-modify-write one object (virtual compute)."""
+
+
+@task
+def scan(ctx, r: In):
+    """Read-only pass over a region (virtual compute)."""
 
 
 # -- Fig. 7a: intrinsic overhead ------------------------------------------------
@@ -23,16 +40,16 @@ def intrinsic_overhead(n_tasks: int = 500) -> list[dict]:
                       ("microblaze", CostModel.microblaze())):
         def app(ctx, root):
             o = ctx.alloc(64, root, label="o")
-            ctx.spawn(None, [Out(o)])
+            ctx.spawn(produce, o)
             for _ in range(n_tasks):
-                ctx.spawn(None, [InOut(o)])
+                ctx.spawn(update, o)
             yield ctx.wait([InOut(root)])
 
         rt = Myrmics(n_workers=1, sched_levels=[1], cost=cm)
         rep = rt.run(app)
         spawn = (cm.worker_spawn_call + cm.spawn_proc
                  + cm.dep_enqueue_per_arg + 2 * cm.msg_base_latency)
-        per_task = rep["total_cycles"] / n_tasks
+        per_task = rep.total_cycles / n_tasks
         exec_c = per_task - spawn + cm.worker_spawn_call
         rows.append({
             "mode": label,
@@ -58,15 +75,15 @@ def granularity(task_sizes=(100e3, 1e6, 10e6),
             def app(ctx, root, size=size):
                 oids = ctx.balloc(64, root, n_tasks)
                 for o in oids:
-                    ctx.spawn(None, [Out(o)], duration=size)
+                    ctx.spawn(produce, o, duration=size)
                 yield ctx.wait([InOut(root)])
 
             rt = Myrmics(n_workers=w, sched_levels=[1], cost=cost)
             rep = rt.run(app)
             if base is None:
-                base = rep["total_cycles"]
+                base = rep.total_cycles
             rows.append({"task_size": size, "workers": w,
-                         "speedup": round(base / rep["total_cycles"], 2)})
+                         "speedup": round(base / rep.total_cycles, 2)})
     return rows
 
 
@@ -145,8 +162,8 @@ def _ownership_app(n_groups: int, objs_per_group: int, task_size: float):
             sub = ctx.ralloc(top, 10**9, label=f"sub{g}")
             oids = ctx.balloc(256, sub, objs_per_group, label=f"x{g}")
             for o in oids:
-                ctx.spawn(None, [Out(o)], duration=task_size)
-            ctx.spawn(None, [In(sub)], duration=task_size)
+                ctx.spawn(produce, o, duration=task_size)
+            ctx.spawn(scan, sub, duration=task_size)
         yield ctx.wait([InOut(root)])
 
     return main
@@ -164,24 +181,24 @@ def region_ownership(workers=(16, 64, 128), n_groups: int = 24,
             rt = Myrmics(n_workers=w, sched_levels=hier_levels(w),
                          migrate_threshold=th)
             rep = rt.run(_ownership_app(n_groups, objs_per_group, task_size))
-            assert rep["tasks_spawned"] == rep["tasks_done"]
-            loads = [rep["region_load"][s.core_id]
+            assert rep.tasks_spawned == rep.tasks_done
+            loads = [rep.region_load[s.core_id]
                      for s in rt.hier.scheds if s.parent is not None]
             mean = sum(loads) / max(len(loads), 1)
             var = sum((x - mean) ** 2 for x in loads) / max(len(loads), 1)
             cv = math.sqrt(var) / mean if mean else 0.0
-            total = rep["total_cycles"] or 1.0
-            sb = [s.busy_cycles / total for s in rep["scheds"].values()]
+            total = rep.total_cycles or 1.0
+            sb = [s.busy_cycles / total for s in rep.scheds.values()]
             rows.append({
                 "workers": w, "migration": mig,
                 "region_loads": loads,
                 "cv": round(cv, 3),
                 "max_over_mean": round(max(loads) / mean, 2) if mean else 0.0,
-                "migrations": rep["migrations"],
-                "nodes_migrated": rep["nodes_migrated"],
+                "migrations": rep.migrations,
+                "nodes_migrated": rep.nodes_migrated,
                 "avg_sched_busy": round(sum(sb) / max(len(sb), 1), 3),
                 "max_sched_busy": round(max(sb), 3) if sb else 0.0,
-                "cycles": round(rep["total_cycles"]),
+                "cycles": round(rep.total_cycles),
             })
     return rows
 
@@ -206,12 +223,12 @@ def hierarchy_depth(workers=(32, 64, 128, 256),
                 rids = [ctx.ralloc(root, len(levels) - 1) for _ in range(G)]
                 for i in range(n_tasks):
                     o = ctx.alloc(64, rids[i % G])
-                    ctx.spawn(None, [Out(o)], duration=task_size)
+                    ctx.spawn(produce, o, duration=task_size)
                 yield ctx.wait([InOut(root)])
 
             rt = Myrmics(n_workers=w, sched_levels=levels, cost=cm)
             rep = rt.run(app)
-            per = rep["total_cycles"] / n_tasks
+            per = rep.total_cycles / n_tasks
             rows.append({"workers": w, "config": label,
                          "cycles_per_task": round(per),
                          "slowdown_vs_size": round(per / task_size, 2)})

@@ -1,12 +1,14 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only ROW]
 
 Prints ``name,us_per_call,derived`` CSV rows: ``us_per_call`` is the
 harness wall time per simulated run; ``derived`` carries the
 figure-specific quantity (virtual cycles, speedups, fractions).
 Default is a reduced grid that finishes in a few minutes on one CPU
-core; ``--full`` runs the paper-sized grids.
+core; ``--full`` runs the paper-sized grids.  ``--only`` must name one
+of the known benchmark rows (see ``--help``); an unknown name is an
+error, not a silent no-op.
 """
 
 from __future__ import annotations
@@ -16,6 +18,19 @@ import json
 import os
 import sys
 import time
+
+#: Every benchmark row this harness can emit, in emission order.
+ROWS = (
+    "fig7a_intrinsic_overhead",
+    "fig7b_granularity",
+    "fig12a_granularity_microblaze",
+    "fig8_scaling",
+    "fig9_breakdown",
+    "fig11_locality_sweep",
+    "svc_region_ownership",
+    "fig12b_hierarchy_depth",
+    "roofline_table",
+)
 
 
 def _emit(name: str, wall_s: float, n_runs: int, rows: list[dict]) -> None:
@@ -28,9 +43,16 @@ def _emit(name: str, wall_s: float, n_runs: int, rows: list[dict]) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, metavar="ROW",
+                    help="run a single benchmark row; one of: "
+                    + ", ".join(ROWS))
     args = ap.parse_args()
     full = args.full
+
+    if args.only is not None and args.only not in ROWS:
+        print(f"error: unknown benchmark row {args.only!r}; known rows:\n  "
+              + "\n  ".join(ROWS), file=sys.stderr)
+        sys.exit(2)
 
     from . import paper_figs as F
 

@@ -1,48 +1,52 @@
 """Quickstart: the Myrmics programming model in 30 lines.
 
-A region holds objects; tasks declare In/Out/InOut footprints; the
-runtime extracts all parallelism and guarantees serial equivalence.
+A region holds objects; a ``@task`` signature declares each argument's
+access (In/Out/InOut/Safe); the runtime derives the dependency
+footprint from the signature, extracts all parallelism and guarantees
+serial equivalence.  Inside a task, calling another task spawns it.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import In, InOut, Myrmics, Out, Safe, SerialRuntime
+from repro.core import In, InOut, Myrmics, Out, Safe, SerialRuntime, task
 
 
-def initialize(ctx, oid, value):
+@task
+def initialize(ctx, o: Out, value: Safe):
     ctx.compute(50_000)          # model 50K cycles of work
-    ctx.write(oid, value)
+    o.write(value)
 
 
-def square(ctx, oid):
+@task
+def square(ctx, o: InOut):
     ctx.compute(100_000)
-    ctx.write(oid, ctx.read(oid) ** 2)
+    o.write(o.read() ** 2)
 
 
-def reduce_sum(ctx, region, out_oid, oids):
-    total = sum(ctx.read(o) for o in oids)
-    ctx.write(out_oid, total)
+@task
+def reduce_sum(ctx, region: In, out: InOut, oids: Safe):
+    out.write(sum(o.read() for o in oids))
 
 
 def main(ctx, root):
-    data = ctx.ralloc(root, 1, label="data")           # a region
-    oids = ctx.balloc(8, data, 16, label="x")          # 16 objects in it
+    data = ctx.ralloc(root, 1, label="data")           # a region handle
+    oids = ctx.balloc(8, data, 16, label="x")          # 16 object handles
     result = ctx.alloc(8, root, label="sum")
     for i, o in enumerate(oids):
-        ctx.spawn(initialize, [Out(o), Safe(i)])       # 16 parallel inits
+        initialize(o, i)                               # 16 parallel inits
     for o in oids:
-        ctx.spawn(square, [InOut(o)])                  # 16 parallel squares
+        square(o)                                      # 16 parallel squares
     # depends on the WHOLE region: runs after every object settles
-    ctx.spawn(reduce_sum, [In(data), InOut(result), Safe(list(oids))])
+    reduce_sum(data, result, list(oids))
     yield ctx.wait([InOut(root)])                      # sys_wait
-    print("sum of squares 0..15 =", ctx.read(result))
+    print("sum of squares 0..15 =", result.read())
 
 
 if __name__ == "__main__":
     rt = Myrmics(n_workers=8, sched_levels=[1, 2])
     report = rt.run(main)
-    print(f"tasks: {report['tasks_done']}, "
-          f"virtual cycles: {report['total_cycles']:.0f}")
+    print(f"tasks: {report.tasks_done}, "
+          f"virtual cycles: {report.total_cycles:.0f}")
 
     serial = SerialRuntime()
     serial.run(main)

@@ -4,6 +4,9 @@ The paper's primary contribution (regions, dependency queues,
 hierarchical schedulers, locality/load-balance placement) lives here,
 split into role-scoped agents wired together by the ``runtime`` facade:
 
+* ``api``          — declarative programming surface: ``@task``
+  signatures, ``In/Out/InOut/Safe`` access annotations, typed
+  ``RegionRef``/``ObjRef`` handles, ``RunReport``
 * ``regions``      — sharded region directory (one shard per scheduler)
 * ``deps``         — per-node dependency state machine
 * ``sched``        — scheduler/worker tree + locality/balance scoring
@@ -13,6 +16,20 @@ split into role-scoped agents wired together by the ``runtime`` facade:
 * ``serial``       — the serial-elision oracle
 """
 
+from .api import (
+    NOTRANSFER,
+    Arg,
+    In,
+    InOut,
+    ObjRef,
+    Out,
+    RegionRef,
+    RunReport,
+    Safe,
+    TaskFn,
+    current_ctx,
+    task,
+)
 from .regions import (
     MODE_READ,
     MODE_WRITE,
@@ -21,12 +38,7 @@ from .regions import (
     DirectoryShard,
 )
 from .runtime import (
-    Arg,
-    In,
-    InOut,
     Myrmics,
-    Out,
-    Safe,
     Task,
     TaskContext,
 )
@@ -34,7 +46,8 @@ from .serial import SerialContext, SerialRuntime
 from .sim import CostModel, Engine
 
 __all__ = [
-    "Arg", "In", "InOut", "Out", "Safe",
+    "Arg", "In", "InOut", "Out", "Safe", "NOTRANSFER",
+    "task", "TaskFn", "RegionRef", "ObjRef", "RunReport", "current_ctx",
     "Myrmics", "SerialRuntime", "SerialContext", "Task", "TaskContext",
     "CostModel", "Engine", "Directory", "DirectoryShard",
     "MODE_READ", "MODE_WRITE", "ROOT_RID",

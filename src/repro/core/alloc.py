@@ -28,6 +28,15 @@ class AllocAgent:
     def __init__(self, rt: "Myrmics"):
         self.rt = rt
 
+    def _require_region(self, nid: int, call: str) -> None:
+        """Allocation targets must be regions — objects cannot contain
+        allocations.  Enforced here so both the typed-handle API and the
+        legacy raw-nid shim get the same check."""
+        if not self.rt.dir.is_region(nid):
+            raise TypeError(
+                f"{call}: node {nid} is an object, not a region — "
+                "objects cannot contain allocations")
+
     def assign_region_owner(self, parent_rid: int, level_hint: int) -> SchedNode:
         rt = self.rt
         s = rt.sched_of(rt.dir.owner_of(parent_rid))
@@ -38,6 +47,7 @@ class AllocAgent:
     def sys_ralloc(self, parent_rid: int, level_hint: int,
                    ctx: "TaskContext | None", label: str | None = None) -> int:
         rt = self.rt
+        self._require_region(parent_rid, "ralloc")
         owner = self.assign_region_owner(parent_rid, level_hint)
         owner.region_load += 1
         owner.migrate_no_fit = False   # fresh region = fresh migration candidate
@@ -53,6 +63,7 @@ class AllocAgent:
     def sys_alloc(self, size: int, rid: int, ctx: "TaskContext | None",
                   label: str | None = None) -> int:
         rt = self.rt
+        self._require_region(rid, "alloc")
         owner = rt.sched_of(rt.dir.owner_of(rid))
         owner.region_load += 1
         oid = rt.dir.new_object(rid, owner.core_id, size)
@@ -67,6 +78,7 @@ class AllocAgent:
     def sys_balloc(self, size: int, rid: int, num: int,
                    ctx: "TaskContext | None", label: str | None = None) -> list[int]:
         rt = self.rt
+        self._require_region(rid, "balloc")
         owner = rt.sched_of(rt.dir.owner_of(rid))
         owner.region_load += num
         oids = [rt.dir.new_object(rid, owner.core_id, size)

@@ -123,6 +123,9 @@ class Directory:
     def parent_of(self, nid: int) -> int | None:
         return self._meta(nid).parent
 
+    def is_region(self, nid: int) -> bool:
+        return self._meta(nid).is_region
+
     def serve_lookup(self, nid: int, requester: str) -> NodeMeta:
         """Answer a metadata lookup on behalf of ``requester``.  Local to
         the owner's shard when the requester owns the node; otherwise the

@@ -12,10 +12,13 @@ itself lives in role-scoped agents:
 * :mod:`.alloc` — the memory API (sys_ralloc/alloc/balloc/free) acting
   on the owning scheduler's directory shard.
 
-This module only defines the public programming surface (``Arg``
-helpers, ``Task``, ``TaskContext``, ``Myrmics``) and wires the agents
-together.  Two execution modes run the *same* scheduler/dependency
-code:
+The *programming surface* lives in :mod:`.api`: access annotations
+(``In``/``Out``/``InOut``/``Safe``), the ``@task`` decorator that
+derives a spawn's dependency footprint from the task signature, the
+typed ``RegionRef``/``ObjRef`` handles, and the ``RunReport`` returned
+by :meth:`Myrmics.run`.  This module defines the execution-side surface
+(``Task``, ``TaskContext``, ``Myrmics``) and wires the agents together.
+Two execution modes run the *same* scheduler/dependency code:
 
 * **real mode** — tasks are Python/JAX callables over the object store;
   used for example applications and the serial-equivalence property
@@ -23,10 +26,12 @@ code:
 * **virtual mode** — tasks model compute with ``ctx.compute(cycles)``;
   used for the 512-worker scaling studies in virtual time.
 
-A task function has signature ``fn(ctx, *args)`` where each arg is the
-nid of the region/object (or the raw value for SAFE args).  Functions
-may be generators, in which case ``yield ctx.wait([...])`` suspends the
-task until the waited arguments quiesce (sys_wait).
+A task function has signature ``fn(ctx, *args)``.  Under the
+declarative API each argument arrives as the handle the spawner passed
+(so ``ref.read()`` works); under the legacy ``list[Arg]`` shim it is
+the raw nid (or the value, for SAFE args).  Functions may be
+generators, in which case ``yield ctx.wait([...])`` suspends the task
+until the waited arguments quiesce (sys_wait).
 """
 
 from __future__ import annotations
@@ -35,43 +40,31 @@ import itertools
 from dataclasses import dataclass
 from typing import Any, Callable
 
+from .api import (
+    Arg,
+    In,
+    InOut,
+    ObjRef,
+    Out,
+    RegionRef,
+    RunReport,
+    Safe,
+    TaskFn,
+    free_nid,
+    nid_of,
+    task,
+    value_nid,
+)
 from .deps import DepEngine
 from .regions import MODE_READ, MODE_WRITE, ROOT_RID, Directory
 from .sched import Hierarchy, SchedNode, WorkerNode
 from .sim import CostModel, Engine
 
-# -- task argument specs -------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class Arg:
-    """One task argument (paper Fig. 4 type bits)."""
-
-    nid: int | None          # region/object id; None for SAFE by-value args
-    mode: str | None         # MODE_READ / MODE_WRITE; None for SAFE
-    safe: bool = False
-    notransfer: bool = False
-    fetch: bool = True       # False for OUT-only args: no DMA-in needed
-    value: Any = None        # SAFE only
-
-
-def In(nid: int, notransfer: bool = False) -> Arg:
-    return Arg(nid, MODE_READ, notransfer=notransfer)
-
-
-def Out(nid: int, notransfer: bool = False) -> Arg:
-    """Write-only: dependency-ordered but the previous contents are not
-    transferred to the consumer."""
-    return Arg(nid, MODE_WRITE, notransfer=notransfer, fetch=False)
-
-
-def InOut(nid: int, notransfer: bool = False) -> Arg:
-    return Arg(nid, MODE_WRITE, notransfer=notransfer)
-
-
-def Safe(value: Any) -> Arg:
-    return Arg(None, None, safe=True, value=value)
-
+__all__ = [
+    "Arg", "In", "Out", "InOut", "Safe", "task", "TaskFn",
+    "RegionRef", "ObjRef", "RunReport",
+    "Task", "TaskContext", "WaitSpec", "Myrmics",
+]
 
 # -- task ----------------------------------------------------------------------
 
@@ -83,10 +76,11 @@ class Task:
 
     def __init__(self, fn: Callable | None, args: list[Arg],
                  parent: "Task | None", duration: float = 0.0,
-                 name: str | None = None):
+                 name: str | None = None, call: tuple | None = None):
         self.tid = next(Task._ids)
         self.fn = fn
         self.args = args
+        self.call = call        # declarative spawns: (pos values, kw values)
         self.parent = parent
         self.duration = duration
         self.name = name or (fn.__name__ if fn is not None else f"t{self.tid}")
@@ -141,48 +135,107 @@ class TaskContext:
         return self.worker.core_id
 
     # --- memory ----------------------------------------------------------------
-    def ralloc(self, parent_rid: int = ROOT_RID, level_hint: int = 10**9,
-               label: str | None = None) -> int:
+    def ralloc(self, parent_rid: int | RegionRef = ROOT_RID,
+               level_hint: int = 10**9,
+               label: str | None = None) -> RegionRef:
         self.cursor += self.rt.cost.worker_alloc_call
-        return self.rt.alloc_agent.sys_ralloc(parent_rid, level_hint, self, label)
+        rid = self.rt.alloc_agent.sys_ralloc(nid_of(parent_rid), level_hint,
+                                             self, label)
+        return RegionRef(rid, label, self.rt.dir)
 
-    def alloc(self, size: int, rid: int = ROOT_RID,
-              label: str | None = None) -> int:
+    def alloc(self, size: int, rid: int | RegionRef = ROOT_RID,
+              label: str | None = None) -> ObjRef:
         self.cursor += self.rt.cost.worker_alloc_call
-        return self.rt.alloc_agent.sys_alloc(size, rid, self, label)
+        oid = self.rt.alloc_agent.sys_alloc(size, nid_of(rid), self, label)
+        return ObjRef(oid, label, self.rt.dir)
 
-    def balloc(self, size: int, rid: int, num: int,
-               label: str | None = None) -> list[int]:
+    def balloc(self, size: int, rid: int | RegionRef, num: int,
+               label: str | None = None) -> list[ObjRef]:
         self.cursor += self.rt.cost.worker_alloc_call
-        return self.rt.alloc_agent.sys_balloc(size, rid, num, self, label)
+        oids = self.rt.alloc_agent.sys_balloc(size, nid_of(rid), num, self,
+                                              label)
+        return [ObjRef(o, f"{label}[{i}]" if label else None, self.rt.dir)
+                for i, o in enumerate(oids)]
 
-    def free(self, oid: int) -> None:
+    def free(self, oid: int | ObjRef) -> None:
         self.cursor += self.rt.cost.worker_alloc_call
-        self.rt.alloc_agent.sys_free(oid, self)
+        self.rt.alloc_agent.sys_free(free_nid(oid, False, "free"), self)
 
-    def rfree(self, rid: int) -> None:
+    def rfree(self, rid: int | RegionRef) -> None:
         self.cursor += self.rt.cost.worker_alloc_call
-        self.rt.alloc_agent.sys_rfree(rid, self)
+        self.rt.alloc_agent.sys_rfree(free_nid(rid, True, "rfree"), self)
 
     # --- object store (real mode) -----------------------------------------------
-    def read(self, oid: int) -> Any:
-        self.rt.check_access(self.task, oid, MODE_READ)
-        return self.rt.storage.get(oid)
+    def read(self, oid: int | ObjRef) -> Any:
+        nid = value_nid(oid, self.rt.dir, "read")
+        self.rt.check_access(self.task, nid, MODE_READ)
+        return self.rt.storage.get(nid)
 
-    def write(self, oid: int, value: Any) -> None:
-        self.rt.check_access(self.task, oid, MODE_WRITE)
-        self.rt.storage[oid] = value
+    def write(self, oid: int | ObjRef, value: Any) -> None:
+        nid = value_nid(oid, self.rt.dir, "write")
+        self.rt.check_access(self.task, nid, MODE_WRITE)
+        self.rt.storage[nid] = value
 
     # --- tasking ------------------------------------------------------------------
-    def spawn(self, fn: Callable | None, args: list[Arg] | None = None,
-              duration: float = 0.0, name: str | None = None) -> Task:
+    def spawn(self, fn: "TaskFn | Callable | None", *args,
+              duration: float = 0.0, name: str | None = None,
+              **kwargs) -> Task:
+        """Spawn a child task.
+
+        Declarative form: ``fn`` is ``@task``-decorated and ``*args`` /
+        ``**kwargs`` are the handles (and SAFE values) its signature
+        declares — the dependency footprint is derived from the access
+        annotations.  Legacy shim: ``fn`` is a plain callable (or None
+        for pure-duration virtual tasks) and the single positional
+        argument is the hand-assembled ``list[Arg]`` footprint.
+        """
         self.cursor += self.rt.cost.worker_spawn_call
-        return self.rt.sys_spawn(fn, args or [], self, duration, name)
+        fn, largs, call = _lower_spawn(fn, args, kwargs)
+        return self.rt.sys_spawn(fn, largs, self, duration, name, call)
 
     def wait(self, args: list[Arg]) -> WaitSpec:
         """Use as ``yield ctx.wait([...])`` inside a generator task."""
         self.cursor += self.rt.cost.worker_wait_call
         return WaitSpec(args)
+
+
+def _lower_spawn(fn, args: tuple, kwargs: dict):
+    """Shared spawn-argument lowering for the parallel and serial
+    contexts: returns ``(plain_fn, footprint, call)`` where ``call`` is
+    the ``(pos, kw)`` values the task body is invoked with (None for
+    the legacy shim, which reconstructs them from the footprint)."""
+    if isinstance(fn, TaskFn):
+        largs, pos, kw = fn.lower(args, kwargs)
+        return fn.fn, largs, (pos, kw)
+    if kwargs:
+        raise TypeError(
+            "spawn with keyword task arguments requires a @task-decorated "
+            f"function, got {fn!r}")
+    if not args:
+        return fn, [], None
+    if len(args) == 1 and isinstance(args[0], (list, tuple)):
+        largs = list(args[0])
+        for a in largs:
+            if not isinstance(a, Arg):
+                raise TypeError(
+                    f"legacy spawn footprint entries must be In/Out/InOut/"
+                    f"Safe specs, got {a!r}")
+        return fn, largs, None
+    raise TypeError(
+        "spawn with positional handle arguments requires a @task-decorated "
+        f"function, got {fn!r} (or pass a legacy [In(..)/Out(..)] list)")
+
+
+def resolve_call(task: Task) -> tuple[list, dict]:
+    """The values a task function receives: the bound call values for
+    declarative spawns, or — for the legacy shim — the SAFE value, the
+    originating handle when the spawner passed one, or the raw nid."""
+    if task.call is not None:
+        pos, kw = task.call
+        return list(pos) + list(task.extra), dict(kw)
+    vals = [a.value if a.safe else (a.ref if a.ref is not None else a.nid)
+            for a in task.args]
+    return vals + list(task.extra), {}
 
 
 # -- the runtime facade ----------------------------------------------------------
@@ -214,6 +267,7 @@ class Myrmics:
             self.engine, self.cost, n_workers, sched_levels or [1]
         )
         self.dir = Directory(root_owner=self.hier.root.core_id)
+        self.root = RegionRef(ROOT_RID, "root", self.dir)
         self.storage: dict[int, Any] = {}
         self.labels: dict[int, str] = {}   # nid -> app label (for oracles)
         self.policy_p = policy_p
@@ -253,9 +307,10 @@ class Myrmics:
     def node_owner(self, nid: int) -> SchedNode:
         return self.hier.by_id[self.dir.owner_of(nid)]
 
-    def check_access(self, task: Task, oid: int, mode: str) -> None:
+    def check_access(self, task: Task, oid: int | ObjRef, mode: str) -> None:
         """A task may touch an object only if one of its (non-safe,
         transferable) arguments covers it with sufficient permissions."""
+        oid = nid_of(oid)
         for a in task.dep_args:
             if a.notransfer:
                 continue
@@ -270,8 +325,10 @@ class Myrmics:
     # ---- delegated API (stable surface; behaviour lives in the agents) -------
 
     def sys_spawn(self, fn: Callable | None, args: list[Arg],
-                  ctx: TaskContext, duration: float, name: str | None) -> Task:
-        task = Task(fn, args, parent=ctx.task, duration=duration, name=name)
+                  ctx: TaskContext, duration: float, name: str | None,
+                  call: tuple | None = None) -> Task:
+        task = Task(fn, args, parent=ctx.task, duration=duration, name=name,
+                    call=call)
         self.sched_agent.sys_spawn(task, ctx)
         return task
 
@@ -283,9 +340,11 @@ class Myrmics:
 
     # ---- program entry ----------------------------------------------------------
 
-    def run(self, main_fn: Callable, *main_extra: Any,
-            until: float | None = None) -> dict:
-        main = Task(main_fn, [InOut(ROOT_RID)], parent=None, name="main")
+    def run(self, main_fn: TaskFn | Callable, *main_extra: Any,
+            until: float | None = None) -> RunReport:
+        if isinstance(main_fn, TaskFn):
+            main_fn = main_fn.fn
+        main = Task(main_fn, [InOut(self.root)], parent=None, name="main")
         main.owner = self.hier.root
         main.extra = main_extra
         self.main_task = main
@@ -306,23 +365,23 @@ class Myrmics:
             if nid in self.labels
         }
 
-    def report(self) -> dict:
+    def report(self) -> RunReport:
         workers = {
             w.core_id: w.core.stats for w in self.hier.workers
         }
         scheds = {s.core_id: s.core.stats for s in self.hier.scheds}
-        return {
-            "total_cycles": self.engine.now,
-            "tasks_spawned": self.tasks_spawned,
-            "tasks_done": self.tasks_done,
-            "events": self.engine.events_processed,
-            "workers": workers,
-            "scheds": scheds,
-            "region_load": {s.core_id: s.region_load
-                            for s in self.hier.scheds},
-            "migrations": self.migrations,
-            "nodes_migrated": self.nodes_migrated,
-        }
+        return RunReport(
+            total_cycles=self.engine.now,
+            tasks_spawned=self.tasks_spawned,
+            tasks_done=self.tasks_done,
+            events=self.engine.events_processed,
+            workers=workers,
+            scheds=scheds,
+            region_load={s.core_id: s.region_load
+                         for s in self.hier.scheds},
+            migrations=self.migrations,
+            nodes_migrated=self.nodes_migrated,
+        )
 
 
 def __getattr__(name: str):

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 from typing import TYPE_CHECKING
 
+from .api import nid_of
 from .deps import ARG, TRAVERSE, WAIT, Entry
 from .regions import MODE_WRITE, ROOT_RID, NodeMeta
 from .runtime import DISPATCHED, DONE, READY, SPAWNED
@@ -51,6 +52,7 @@ class SchedAgent:
         primitive for reads outside those flows (extensions, tooling),
         and pins down the forwarding cost model under test."""
         rt = self.rt
+        nid = nid_of(nid)   # accept RegionRef/ObjRef handles
         owner_id = rt.dir.owner_of(nid)
         meta = rt.dir.serve_lookup(nid, requester.core_id)
         if owner_id != requester.core_id:

@@ -3,14 +3,21 @@
 Every spawn runs inline (depth-first) at the spawn point — the model's
 defining semantics [6].  The property tests compare the distributed
 runtime's labelled storage against this oracle bit-for-bit.
+
+Both programming surfaces are supported, lowered exactly as the
+distributed runtime lowers them: ``@task``-decorated functions with
+annotated signatures (declarative API) and plain callables with
+hand-assembled ``list[Arg]`` footprints (legacy shim) — so the
+serial-equivalence property covers both front ends.
 """
 
 from __future__ import annotations
 
 from typing import Any, Callable
 
+from .api import ObjRef, RegionRef, active_ctx, free_nid, nid_of, value_nid
 from .regions import ROOT_RID, Directory
-from .runtime import Arg, WaitSpec
+from .runtime import Arg, WaitSpec, _lower_spawn
 
 
 class SerialContext:
@@ -27,50 +34,62 @@ class SerialContext:
     def compute(self, cycles: float) -> None:
         pass
 
-    def ralloc(self, parent_rid: int = ROOT_RID, level_hint: int = 10**9,
-               label: str | None = None) -> int:
-        rid = self.rt.dir.new_region(parent_rid, "serial", level_hint)
+    def ralloc(self, parent_rid: int | RegionRef = ROOT_RID,
+               level_hint: int = 10**9,
+               label: str | None = None) -> RegionRef:
+        rid = self.rt.dir.new_region(nid_of(parent_rid), "serial", level_hint)
         if label is not None:
             self.rt.labels[rid] = label
-        return rid
+        return RegionRef(rid, label, self.rt.dir)
 
-    def alloc(self, size: int, rid: int = ROOT_RID,
-              label: str | None = None) -> int:
-        oid = self.rt.dir.new_object(rid, "serial", size)
+    def alloc(self, size: int, rid: int | RegionRef = ROOT_RID,
+              label: str | None = None) -> ObjRef:
+        oid = self.rt.dir.new_object(nid_of(rid), "serial", size)
         if label is not None:
             self.rt.labels[oid] = label
-        return oid
+        return ObjRef(oid, label, self.rt.dir)
 
-    def balloc(self, size: int, rid: int, num: int,
-               label: str | None = None) -> list[int]:
-        oids = [self.alloc(size, rid) for _ in range(num)]
-        if label is not None:
-            for i, oid in enumerate(oids):
-                self.rt.labels[oid] = f"{label}[{i}]"
-        return oids
+    def balloc(self, size: int, rid: int | RegionRef, num: int,
+               label: str | None = None) -> list[ObjRef]:
+        refs = []
+        for i in range(num):
+            ref = self.alloc(size, rid,
+                             f"{label}[{i}]" if label is not None else None)
+            refs.append(ref)
+        return refs
 
-    def free(self, oid: int) -> None:
-        for nid in self.rt.dir.free(oid):
+    def free(self, oid: int | ObjRef) -> None:
+        for nid in self.rt.dir.free(free_nid(oid, False, "free")):
             self.rt.storage.pop(nid, None)
 
-    rfree = free
+    def rfree(self, rid: int | RegionRef) -> None:
+        for nid in self.rt.dir.free(free_nid(rid, True, "rfree")):
+            self.rt.storage.pop(nid, None)
 
-    def read(self, oid: int) -> Any:
-        return self.rt.storage.get(oid)
+    def read(self, oid: int | ObjRef) -> Any:
+        return self.rt.storage.get(value_nid(oid, self.rt.dir, "read"))
 
-    def write(self, oid: int, value: Any) -> None:
-        self.rt.storage[oid] = value
+    def write(self, oid: int | ObjRef, value: Any) -> None:
+        self.rt.storage[value_nid(oid, self.rt.dir, "write")] = value
 
-    def spawn(self, fn: Callable | None, args: list[Arg] | None = None,
-              duration: float = 0.0, name: str | None = None) -> None:
+    def spawn(self, fn: Callable | None, *args, duration: float = 0.0,
+              name: str | None = None, **kwargs) -> None:
+        fn, largs, call = _lower_spawn(fn, args, kwargs)
         if fn is None:
             return
         sub = SerialContext(self.rt, self.depth + 1)
-        resolved = [a.value if a.safe else a.nid for a in (args or [])]
-        result = fn(sub, *resolved)
-        if hasattr(result, "__next__"):
-            for _ in result:
-                pass
+        if call is not None:
+            pos, kw = call
+        else:
+            pos = [a.value if a.safe
+                   else (a.ref if a.ref is not None else a.nid)
+                   for a in largs]
+            kw = {}
+        with active_ctx(sub):
+            result = fn(sub, *pos, **kw)
+            if hasattr(result, "__next__"):
+                for _ in result:
+                    pass
 
     def wait(self, args: list[Arg]) -> WaitSpec:
         return WaitSpec(args or [])
@@ -82,15 +101,20 @@ class SerialRuntime:
 
     def __init__(self) -> None:
         self.dir = Directory(root_owner="serial")
+        self.root = RegionRef(ROOT_RID, "root", self.dir)
         self.storage: dict[int, Any] = {}
         self.labels: dict[int, str] = {}
 
     def run(self, main_fn: Callable, *extra: Any) -> dict[int, Any]:
+        from .api import TaskFn
+        if isinstance(main_fn, TaskFn):
+            main_fn = main_fn.fn
         ctx = SerialContext(self)
-        result = main_fn(ctx, ROOT_RID, *extra)
-        if hasattr(result, "__next__"):
-            for _ in result:
-                pass
+        with active_ctx(ctx):
+            result = main_fn(ctx, self.root, *extra)
+            if hasattr(result, "__next__"):
+                for _ in result:
+                    pass
         return self.storage
 
     def labelled_storage(self) -> dict[str, Any]:

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from .api import active_ctx
 from .runtime import (
     DISPATCHED,
     READY,
@@ -19,6 +20,7 @@ from .runtime import (
     Task,
     TaskContext,
     WaitSpec,
+    resolve_call,
 )
 from .sched import WorkerNode
 
@@ -181,7 +183,9 @@ class WorkerAgent:
             ctx.cursor += task.duration
             self.finish_exec(w, rec)
             return
-        result = task.fn(ctx, *self.resolve_args(task))
+        pos, kw = resolve_call(task)
+        with active_ctx(ctx):
+            result = task.fn(ctx, *pos, **kw)
         if hasattr(result, "__next__"):
             task.gen = result
             self.drive_gen(w, rec)
@@ -189,13 +193,12 @@ class WorkerAgent:
             ctx.cursor += task.duration
             self.finish_exec(w, rec)
 
-    def resolve_args(self, task: Task) -> list:
-        vals = [a.value if a.safe else a.nid for a in task.args]
-        return vals + list(task.extra)
-
     def drive_gen(self, w: WorkerNode, rec: ExecRecord) -> None:
         try:
-            yielded = next(rec.task.gen)
+            # each generator activation runs with its context ambient, so
+            # ref.read()/direct task calls resolve across suspensions
+            with active_ctx(rec.ctx):
+                yielded = next(rec.task.gen)
         except StopIteration:
             self.finish_exec(w, rec)
             return

@@ -32,7 +32,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.models.sharding import (
-    batch_specs,
     cache_specs,
     dp_axes,
     opt_state_specs,

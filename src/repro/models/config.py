@@ -9,7 +9,7 @@ DESIGN.md.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 def round_up(x: int, m: int) -> int:

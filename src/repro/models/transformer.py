@@ -21,7 +21,6 @@ init_cache / prefill / decode_step.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp

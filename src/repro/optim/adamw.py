@@ -8,7 +8,6 @@ levers (memory term down, collective term up slightly).
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any, NamedTuple
 

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from repro.core import In, InOut, Myrmics, Out, Safe
+from repro.core import In, InOut, Myrmics, Out, Safe, task
 from repro.core.sim import CostModel
 
 
@@ -65,15 +65,17 @@ def run_training_schedule(cfg: OrchestratorConfig) -> list[StepStats]:
     n_micro = cfg.n_domains * cfg.microbatches_per_domain
     slow = dict(cfg.slow_domains)
 
-    def micro_task(ctx, g_oid, mb_idx):
+    @task
+    def micro_task(ctx, g: Out, mb_idx: Safe):
         factor = slow.get(int(ctx.worker_id[1:]), 1.0)
         ctx.compute(cfg.compute_cycles * factor)
-        ctx.write(g_oid, ("grad", mb_idx))
+        g.write(("grad", mb_idx))
 
-    def reduce_task(ctx, region, out_oid, g_oids):
+    @task
+    def reduce_task(ctx, region: In, out: InOut, g_oids: Safe):
         ctx.compute(cfg.compute_cycles * 0.1)
-        vals = [ctx.read(g) for g in g_oids]
-        ctx.write(out_oid, ("reduced", len(vals)))
+        vals = [g.read() for g in g_oids]
+        out.write(("reduced", len(vals)))
 
     def main(ctx, root):
         for step in range(cfg.steps):
@@ -81,24 +83,19 @@ def run_training_schedule(cfg: OrchestratorConfig) -> list[StepStats]:
             g_oids = ctx.balloc(cfg.grad_bytes, step_r, n_micro,
                                 label=f"g{step}")
             for i, g in enumerate(g_oids):
-                ctx.spawn(micro_task, [Out(g), Safe(i)],
-                          name=f"micro{step}.{i}")
+                ctx.spawn(micro_task, g, i, name=f"micro{step}.{i}")
             out = ctx.alloc(64, root, label=f"upd{step}")
-            ctx.spawn(reduce_task,
-                      [In(step_r), InOut(out), Safe(list(g_oids))],
+            ctx.spawn(reduce_task, step_r, out, list(g_oids),
                       name=f"reduce{step}")
             yield ctx.wait([InOut(root)])
             ctx.rfree(step_r)
 
-    t_prev = 0.0
-    marks: list[float] = []
-
     rep = rt.run(main)
-    total = rep["total_cycles"]
+    total = rep.total_cycles
     per_step = total / cfg.steps
-    dma = sum(w.dma_bytes for w in rep["workers"].values())
-    msgs = sum(w.msgs_sent for w in rep["workers"].values()) + sum(
-        s.msgs_sent for s in rep["scheds"].values())
+    dma = sum(w.dma_bytes for w in rep.workers.values())
+    msgs = sum(w.msgs_sent for w in rep.workers.values()) + sum(
+        s.msgs_sent for s in rep.scheds.values())
     for s in range(cfg.steps):
         stats.append(StepStats(cycles=per_step, dma_bytes=dma // cfg.steps,
                                msgs=msgs // cfg.steps))

@@ -1,0 +1,406 @@
+"""The declarative programming surface: ``@task`` signatures, typed
+region/object handles, ``Myrmics.check_access`` enforcement through
+both front ends, and the ``RunReport``/legacy-shim compatibility."""
+
+import os
+import subprocess
+import sys
+import typing
+
+import pytest
+
+from repro.core import (
+    NOTRANSFER,
+    In,
+    InOut,
+    Myrmics,
+    ObjRef,
+    Out,
+    RegionRef,
+    RunReport,
+    Safe,
+    SerialRuntime,
+    current_ctx,
+    task,
+)
+
+
+# ---------------------------------------------------------------------------
+# @task signature grammar -> derived footprint
+# ---------------------------------------------------------------------------
+
+
+def test_footprint_derived_from_signature():
+    @task
+    def t(ctx, a: In, b: Out, c: InOut, k: Safe):
+        pass
+
+    args = t.footprint((1, 2, 3, "x"), {})
+    assert [(a.nid, a.mode, a.safe, a.fetch) for a in args] == [
+        (1, "r", False, True), (2, "w", False, False),
+        (3, "w", False, True), (None, None, True, True)]
+    assert args[3].value == "x"
+
+
+def test_footprint_notransfer_variants():
+    @task
+    def t(ctx, a: In.nt, b: typing.Annotated[Out, NOTRANSFER],
+          *rest: InOut.nt):
+        pass
+
+    args = t.footprint((1, 2, 3, 4), {})
+    assert all(a.notransfer for a in args)
+    assert [a.mode for a in args] == ["r", "w", "w", "w"]
+
+
+def test_footprint_varargs_and_keyword_only():
+    @task
+    def t(ctx, a: InOut, *nbrs: In, g: Safe, h: Safe = 7):
+        pass
+
+    args = t.footprint((1, 2, 3), {"g": 5})
+    assert [(a.nid, a.safe) for a in args] == [
+        (1, False), (2, False), (3, False), (None, True), (None, True)]
+    assert [a.value for a in args if a.safe] == [5, 7]
+
+
+def test_missing_annotation_rejected():
+    with pytest.raises(TypeError, match="access annotation"):
+        @task
+        def t(ctx, a):
+            pass
+
+
+def test_var_keyword_rejected():
+    with pytest.raises(TypeError, match="not supported"):
+        @task
+        def t(ctx, a: In, **kw: Safe):
+            pass
+
+
+def test_reserved_spawn_option_names_rejected():
+    with pytest.raises(TypeError, match="reserved for spawn options"):
+        @task
+        def t(ctx, o: Out, *, duration: Safe = 0):
+            pass
+
+    with pytest.raises(TypeError, match="reserved for spawn options"):
+        @task
+        def t2(ctx, name: In):
+            pass
+
+
+def test_bad_bind_mentions_task_name():
+    @task
+    def stencil(ctx, a: In, b: Out):
+        pass
+
+    with pytest.raises(TypeError, match="stencil"):
+        stencil.footprint((1,), {})
+
+
+# ---------------------------------------------------------------------------
+# typed handles
+# ---------------------------------------------------------------------------
+
+
+def run_collect(app):
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2])
+    rep = rt.run(app)
+    assert rep.tasks_spawned == rep.tasks_done
+    return rt, rep
+
+
+def test_alloc_returns_typed_handles():
+    seen = {}
+
+    def app(ctx, root):
+        assert isinstance(root, RegionRef)
+        r = ctx.ralloc(root, 1, label="r")
+        o = ctx.alloc(8, r, label="o")
+        objs = ctx.balloc(8, r, 3, label="b")
+        seen.update(r=r, o=o, objs=objs)
+        yield ctx.wait([InOut(root)])
+
+    rt, _ = run_collect(app)
+    assert isinstance(seen["r"], RegionRef) and seen["r"].label == "r"
+    assert isinstance(seen["o"], ObjRef)
+    assert [x.label for x in seen["objs"]] == ["b[0]", "b[1]", "b[2]"]
+    # handles hash/compare by nid, interchangeable with raw ids
+    assert seen["o"] == seen["o"].nid and hash(seen["o"]) == hash(seen["o"].nid)
+    # the handle resolves its live owning scheduler through the directory
+    assert seen["r"].owner == rt.dir.owner_of(seen["r"].nid)
+
+
+def test_region_handles_reject_value_access():
+    def app(ctx, root):
+        r = ctx.ralloc(root, 1)
+        with pytest.raises(TypeError, match="region"):
+            r.read()
+        with pytest.raises(TypeError, match="region"):
+            ctx.write(r, 1)
+        with pytest.raises(TypeError, match="region"):
+            ctx.read(r.nid)                 # raw region nid: same guard
+        with pytest.raises(TypeError, match="region"):
+            ctx.write(r.nid, 1)
+        with pytest.raises(TypeError, match="not a region"):
+            ctx.alloc(8, ctx.alloc(8, r))   # alloc inside an object
+        with pytest.raises(TypeError, match="rfree"):
+            ctx.free(r)
+        yield ctx.wait([InOut(root)])
+
+    run_collect(app)
+
+
+def test_handle_sugar_requires_running_task():
+    rt = Myrmics(n_workers=2, sched_levels=[1])
+    ref = ObjRef(7, "x", rt.dir)
+    with pytest.raises(RuntimeError, match="no task is executing"):
+        ref.read()
+    with pytest.raises(RuntimeError):
+        current_ctx()
+
+
+# ---------------------------------------------------------------------------
+# check_access: permissions via handles AND via the legacy shim
+# ---------------------------------------------------------------------------
+
+
+@task
+def _writes(ctx, o: In):       # read-only annotation, writing body
+    o.write(1)
+
+
+@task
+def _reads_nt(ctx, o: In.nt):  # notransfer annotation, reading body
+    o.read()
+
+
+@task
+def _init(ctx, o: Out):
+    o.write(0)
+
+
+def _run_expect(app, exc):
+    rt = Myrmics(n_workers=2, sched_levels=[1])
+    with pytest.raises(exc):
+        rt.run(app)
+
+
+def test_read_only_arg_rejects_writes_new_api():
+    def app(ctx, root):
+        o = ctx.alloc(8, root)
+        _init(o)
+        _writes(o)
+        yield ctx.wait([InOut(root)])
+
+    _run_expect(app, PermissionError)
+
+
+def test_read_only_arg_rejects_writes_legacy():
+    def app(ctx, root):
+        o = ctx.alloc(8, root)
+        ctx.spawn(lambda c, x: c.write(x, 0), [Out(o)])
+        ctx.spawn(lambda c, x: c.write(x, 1), [In(o)])
+        yield ctx.wait([InOut(root)])
+
+    _run_expect(app, PermissionError)
+
+
+def test_notransfer_grants_no_storage_access_new_api():
+    def app(ctx, root):
+        o = ctx.alloc(8, root)
+        _init(o)
+        _reads_nt(o)
+        yield ctx.wait([InOut(root)])
+
+    _run_expect(app, PermissionError)
+
+
+def test_notransfer_grants_no_storage_access_legacy():
+    def app(ctx, root):
+        o = ctx.alloc(8, root)
+        ctx.spawn(lambda c, x: c.write(x, 0), [Out(o)])
+        ctx.spawn(lambda c, x: c.read(x), [In(o, notransfer=True)])
+        yield ctx.wait([InOut(root)])
+
+    _run_expect(app, PermissionError)
+
+
+def test_region_ancestry_grants_coverage_both_apis():
+    """An In(region) argument covers reads of every object below the
+    region — but not writes (mode insufficiency beats ancestry)."""
+
+    @task
+    def region_reader(ctx, r: In, o: Safe):
+        assert o.read() == 5
+
+    @task
+    def region_writer(ctx, r: In, o: Safe):
+        o.write(9)
+
+    def good(ctx, root):
+        r = ctx.ralloc(root, 1)
+        sub = ctx.ralloc(r, 2)
+        o = ctx.alloc(8, sub, label="o")
+        _init(o)
+        ctx.spawn(lambda c, x: c.write(x, 5), [InOut(o)])   # legacy shim
+        region_reader(r, o)                                 # ancestry: ok
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=2, sched_levels=[1])
+    rep = rt.run(good)
+    assert rep.tasks_done == rep.tasks_spawned
+
+    def bad(ctx, root):
+        r = ctx.ralloc(root, 1)
+        o = ctx.alloc(8, r)
+        _init(o)
+        region_writer(r, o)       # read-covering region, write attempt
+        yield ctx.wait([InOut(root)])
+
+    _run_expect(bad, PermissionError)
+
+
+def test_check_access_unit_level():
+    """Direct unit coverage of Myrmics.check_access over a hand-built
+    region tree, exercising handle and raw-nid arguments alike."""
+    from repro.core import MODE_READ, MODE_WRITE, Task
+
+    rt = Myrmics(n_workers=2, sched_levels=[1])
+    rid = rt.alloc_agent.sys_ralloc(0, 1, None)
+    oid = rt.alloc_agent.sys_alloc(8, rid, None)
+    other = rt.alloc_agent.sys_alloc(8, 0, None)
+    ref = ObjRef(oid, None, rt.dir)
+
+    t_read = Task(None, [In(rid)], parent=None)
+    rt.check_access(t_read, oid, MODE_READ)          # ancestry, raw nid
+    rt.check_access(t_read, ref, MODE_READ)          # ancestry, handle
+    with pytest.raises(PermissionError):
+        rt.check_access(t_read, oid, MODE_WRITE)     # mode insufficient
+    with pytest.raises(PermissionError):
+        rt.check_access(t_read, other, MODE_READ)    # outside footprint
+
+    t_nt = Task(None, [InOut(rid, notransfer=True)], parent=None)
+    with pytest.raises(PermissionError):
+        rt.check_access(t_nt, oid, MODE_READ)        # notransfer: no access
+
+
+# ---------------------------------------------------------------------------
+# both front ends lower to the same schedule
+# ---------------------------------------------------------------------------
+
+
+def declarative_app(ctx, root):
+    data = ctx.ralloc(root, 1, label="d")
+    oids = ctx.balloc(8, data, 6, label="x")
+    out = ctx.alloc(8, root, label="sum")
+
+    @task
+    def init(c, o: Out, v: Safe):
+        o.write(v)
+
+    @task
+    def bump(c, o: InOut, dv: Safe):
+        c.compute(5000)
+        o.write(o.read() + dv)
+
+    @task
+    def reduce_all(c, r: In, s: InOut, os: Safe):
+        s.write(sum(o.read() for o in os))
+
+    for i, o in enumerate(oids):
+        ctx.spawn(init, o, i)
+    for o in oids:
+        bump(o, 10)              # direct-call sugar spawns via ambient ctx
+    reduce_all(data, out, list(oids))
+    yield ctx.wait([InOut(root)])
+
+
+def legacy_app(ctx, root):
+    data = ctx.ralloc(root, 1, label="d")
+    oids = ctx.balloc(8, data, 6, label="x")
+    out = ctx.alloc(8, root, label="sum")
+
+    def init(c, o, v):
+        c.write(o, v)
+
+    def bump(c, o, dv):
+        c.compute(5000)
+        c.write(o, c.read(o) + dv)
+
+    def reduce_all(c, r, s, os):
+        c.write(s, sum(c.read(o) for o in os))
+
+    for i, o in enumerate(oids):
+        ctx.spawn(init, [Out(o), Safe(i)])
+    for o in oids:
+        ctx.spawn(bump, [InOut(o), Safe(10)])
+    ctx.spawn(reduce_all, [In(data), InOut(out), Safe(list(oids))])
+    yield ctx.wait([InOut(root)])
+
+
+@pytest.mark.parametrize("nw,levels", [(1, [1]), (4, [1]), (8, [1, 2])])
+def test_both_surfaces_cycle_identical(nw, levels):
+    """The declarative API lowers onto the same internals as the legacy
+    shim: identical labelled storage AND identical virtual time."""
+    rt_new = Myrmics(n_workers=nw, sched_levels=levels)
+    rep_new = rt_new.run(declarative_app)
+    rt_old = Myrmics(n_workers=nw, sched_levels=levels)
+    rep_old = rt_old.run(legacy_app)
+    assert rt_new.labelled_storage() == rt_old.labelled_storage()
+    assert rep_new.total_cycles == rep_old.total_cycles
+    assert rep_new.events == rep_old.events
+
+
+def test_declarative_serial_equivalence():
+    """The serial oracle executes the same decorated functions."""
+    sr = SerialRuntime()
+    sr.run(declarative_app)
+    rt = Myrmics(n_workers=8, sched_levels=[1, 2])
+    rep = rt.run(declarative_app)
+    assert rep.tasks_spawned == rep.tasks_done
+    assert rt.labelled_storage() == sr.labelled_storage()
+    assert sr.labelled_storage()["sum"] == sum(range(6)) + 60
+
+
+# ---------------------------------------------------------------------------
+# RunReport
+# ---------------------------------------------------------------------------
+
+
+def test_run_report_typed_and_legacy_views():
+    def app(ctx, root):
+        o = ctx.alloc(8, root, label="o")
+        _init(o)
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=2, sched_levels=[1])
+    rep = rt.run(app)
+    assert isinstance(rep, RunReport)
+    assert rep.tasks_done == rep["tasks_done"] == 2
+    d = rep.to_dict()
+    assert set(d) == {
+        "total_cycles", "tasks_spawned", "tasks_done", "events", "workers",
+        "scheds", "region_load", "migrations", "nodes_migrated"}
+    assert d["total_cycles"] == rep.total_cycles
+    with pytest.raises(KeyError):
+        rep["not_a_field"]
+
+
+# ---------------------------------------------------------------------------
+# benchmark harness: unknown row names fail loudly
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_benchmark_row_exits_nonzero():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "no_such_row"],
+        cwd=repo, env=env, capture_output=True, text=True, timeout=120)
+    assert proc.returncode != 0
+    assert "unknown benchmark row" in proc.stderr
+    assert "fig8_scaling" in proc.stderr   # the message lists valid rows

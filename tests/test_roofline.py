@@ -2,10 +2,9 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.roofline.collectives import collective_bytes
-from repro.roofline.hlo_cost import HloCostModel, analyze
+from repro.roofline.hlo_cost import analyze
 from repro.roofline.model import Roofline
 
 
@@ -69,7 +68,6 @@ def test_collectives_parser():
 
 
 def test_collectives_from_real_psum():
-    import os
     devs = jax.devices()
     if len(devs) < 2:
         # single device: psum compiles away; just assert parser is clean

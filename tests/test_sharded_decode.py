@@ -10,7 +10,8 @@ import pytest
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models.layers import decode_attention_sharded
 from repro.models.sharding import set_batch_axes, set_ctx_mesh

@@ -1,6 +1,5 @@
 """Optimizer, data pipeline, checkpointing, train loop, serving."""
 
-import shutil
 
 import jax
 import jax.numpy as jnp
