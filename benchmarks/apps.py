@@ -21,6 +21,13 @@ construction, as the paper measures).
 
 Compute is virtual cycles; DMA traffic follows from real object sizes
 and the schedulers' placement decisions.
+
+Every builder also takes ``real=True``: task bodies then execute a real
+GIL-releasing payload (:func:`repro.core.payload.burn`) sized by the
+same per-task work parameters, and ``run_app(..., backend="threads")``
+runs the app on the concurrent executor for wall-clock scaling — the
+virtual-time schedules are unchanged (the payload is a no-op when the
+work argument is 0, and Safe args carry no cycle charges).
 """
 
 from __future__ import annotations
@@ -29,6 +36,7 @@ import math
 from dataclasses import dataclass
 
 from repro.core import In, InOut, Myrmics, Out, Safe, task
+from repro.core.payload import burn
 from repro.core.sim import CostModel
 
 BARRIER = 459.0   # paper SIII: 512-worker barrier
@@ -45,9 +53,11 @@ class AppResult:
     max_sched_busy_frac: float
 
 
-def _run(main, n_workers, levels, policy_p=20, cost=None) -> AppResult:
+def _run(main, n_workers, levels, policy_p=20, cost=None,
+         backend="sim") -> AppResult:
     rt = Myrmics(n_workers=n_workers, sched_levels=levels,
-                 cost=cost or CostModel.heterogeneous(), policy_p=policy_p)
+                 cost=cost or CostModel.heterogeneous(), policy_p=policy_p,
+                 backend=backend)
     rep = rt.run(main)
     assert rep.tasks_spawned == rep.tasks_done, "benchmark app hung"
     total = rep.total_cycles or 1.0
@@ -87,13 +97,16 @@ def n_groups(P: int) -> int:
 
 def jacobi(n_workers: int, *, total_work: float = 256e6, steps: int = 6,
            chunks_per_worker: int = 2, hier: bool = False,
-           row_bytes: int = 8192, block_bytes: int = 1 << 20):
+           row_bytes: int = 8192, block_bytes: int = 1 << 20,
+           real: bool = False):
     P = n_workers * chunks_per_worker
     work = total_work / steps / P
 
     @task
-    def j_update(ctx, blk: InOut, top: Out, bot: Out, *nbrs: In):
-        """Relax one block; emit fresh border rows (virtual compute)."""
+    def j_update(ctx, blk: InOut, top: Out, bot: Out, *nbrs: In,
+                 work: Safe = 0.0):
+        """Relax one block; emit fresh border rows."""
+        burn(work)
 
     def main(ctx, root):
         G = n_groups(P) if hier else 1
@@ -119,7 +132,8 @@ def jacobi(n_workers: int, *, total_work: float = 256e6, steps: int = 6,
                 if i < P - 1:
                     nbrs.append(tops[i + 1][pb])
             c.spawn(j_update, blocks[i], tops[i][cb], bots[i][cb], *nbrs,
-                    duration=work, name=f"j{t}.{i}")
+                    duration=work, name=f"j{t}.{i}",
+                    work=work if real else 0.0)
 
         if not hier:
             for t in range(steps):
@@ -162,7 +176,8 @@ def jacobi_mpi(n_workers: int, cost: CostModel, *, total_work: float = 256e6,
 
 def raytrace(n_workers: int, *, total_work: float = 256e6,
              chunks_per_worker: int = 2, hier: bool = False,
-             scene_bytes: int = 1 << 20, lines_bytes: int = 1 << 18):
+             scene_bytes: int = 1 << 20, lines_bytes: int = 1 << 18,
+             real: bool = False):
     P = n_workers * chunks_per_worker
     base = total_work / P
 
@@ -170,31 +185,36 @@ def raytrace(n_workers: int, *, total_work: float = 256e6,
         return 0.6 + 0.8 * ((i * 2654435761) % 1000) / 1000.0
 
     @task
-    def load_scene(ctx, scene: Out):
-        """Read the scene description into memory (virtual compute)."""
+    def load_scene(ctx, scene: Out, *, work: Safe = 0.0):
+        """Read the scene description into memory."""
+        burn(work)
 
     @task
-    def trace_lines(ctx, scene: In, out: Out):
-        """Trace one bundle of scanlines (virtual compute)."""
+    def trace_lines(ctx, scene: In, out: Out, *, work: Safe = 0.0):
+        """Trace one bundle of scanlines."""
+        burn(work)
 
     def main(ctx, root):
         G = n_groups(P) if hier else 1
         grp = lambda i: i * G // P
         scene = ctx.alloc(scene_bytes, root, label="scene")
-        ctx.spawn(load_scene, scene, duration=1e5)
+        ctx.spawn(load_scene, scene, duration=1e5,
+                  work=1e5 if real else 0.0)
         g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
         outs = [ctx.alloc(lines_bytes, g_rids[grp(i)]) for i in range(P)]
 
         if not hier:
             for i in range(P):
                 ctx.spawn(trace_lines, scene, outs[i],
-                          duration=base * imbalance(i), name=f"rt{i}")
+                          duration=base * imbalance(i), name=f"rt{i}",
+                          work=base * imbalance(i) if real else 0.0)
         else:
             @task
             def trace_group(c, g_rid: InOut.nt, scene_o: In.nt, *, g: Safe):
                 for i in range(g * P // G, (g + 1) * P // G):
                     c.spawn(trace_lines, scene_o, outs[i],
-                            duration=base * imbalance(i))
+                            duration=base * imbalance(i),
+                            work=base * imbalance(i) if real else 0.0)
 
             for g in range(G):
                 ctx.spawn(trace_group, g_rids[g], scene, g=g, name=f"RT{g}")
@@ -216,19 +236,22 @@ def raytrace_mpi(n_workers: int, cost: CostModel, *,
 # ---------------------------------------------------------------------------
 
 def bitonic(n_workers: int, *, total_elems_work: float = 256e6,
-            hier: bool = False, chunk_bytes: int = 1 << 19):
+            hier: bool = False, chunk_bytes: int = 1 << 19,
+            real: bool = False):
     P = max(4, 1 << int(math.log2(max(4, n_workers))))
     stages = [(k, j) for k in range(1, int(math.log2(P)) + 1)
               for j in range(k - 1, -1, -1)]
     work = total_elems_work / (P * (len(stages) + 1))
 
     @task
-    def local_sort(ctx, buf: Out):
-        """Sort one chunk locally (virtual compute)."""
+    def local_sort(ctx, buf: Out, *, work: Safe = 0.0):
+        """Sort one chunk locally."""
+        burn(work)
 
     @task
-    def exchange(ctx, mine: In, partner: In, out: Out):
+    def exchange(ctx, mine: In, partner: In, out: Out, *, work: Safe = 0.0):
         """Butterfly compare-exchange into the next parity buffer."""
+        burn(work)
 
     def main(ctx, root):
         G = n_groups(P) if hier else 1
@@ -241,7 +264,7 @@ def bitonic(n_workers: int, *, total_elems_work: float = 256e6,
 
         for i in range(P):
             ctx.spawn(local_sort, bufs[i][0], duration=work,
-                      name=f"sort{i}")
+                      name=f"sort{i}", work=work if real else 0.0)
 
         def spawn_fine(c, s, lo, hi):
             _, j = stages[s]
@@ -249,7 +272,7 @@ def bitonic(n_workers: int, *, total_elems_work: float = 256e6,
             for i in range(lo, hi):
                 p = i ^ (1 << j)
                 c.spawn(exchange, bufs[i][src], bufs[p][src], bufs[i][dst],
-                        duration=work)
+                        duration=work, work=work if real else 0.0)
 
         if not hier:
             for s in range(len(stages)):
@@ -288,26 +311,32 @@ def bitonic_mpi(n_workers: int, cost: CostModel, *,
 
 def kmeans(n_workers: int, *, total_work: float = 256e6, steps: int = 4,
            chunks_per_worker: int = 2, hier: bool = False,
-           chunk_bytes: int = 1 << 19, cent_bytes: int = 1 << 14):
+           chunk_bytes: int = 1 << 19, cent_bytes: int = 1 << 14,
+           real: bool = False):
     P = n_workers * chunks_per_worker
     work = total_work / steps / P
     red_work = work / 8
 
     @task
-    def init_centroids(ctx, c0: Out):
-        """Pick the initial centroids (virtual compute)."""
+    def init_centroids(ctx, c0: Out, *, work: Safe = 0.0):
+        """Pick the initial centroids."""
+        burn(work)
 
     @task
-    def assign(ctx, cent: In, chunk: InOut, partial: Out):
+    def assign(ctx, cent: In, chunk: InOut, partial: Out, *,
+               work: Safe = 0.0):
         """Assign one chunk's points; emit partial centroid sums."""
+        burn(work)
 
     @task
-    def reduce_pair(ctx, a: In, b: In, out: Out):
+    def reduce_pair(ctx, a: In, b: In, out: Out, *, work: Safe = 0.0):
         """Merge two partial centroid sums."""
+        burn(work)
 
     @task
-    def new_centroids(ctx, last: In, cent: Out):
+    def new_centroids(ctx, last: In, cent: Out, *, work: Safe = 0.0):
         """Normalize the reduced sums into the next centroids."""
+        burn(work)
 
     def main(ctx, root):
         G = n_groups(P) if hier else 1
@@ -315,7 +344,8 @@ def kmeans(n_workers: int, *, total_work: float = 256e6, steps: int = 4,
         g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
         chunks = [ctx.alloc(chunk_bytes, g_rids[grp(i)]) for i in range(P)]
         cents = [ctx.alloc(cent_bytes, root) for _ in range(steps + 1)]
-        ctx.spawn(init_centroids, cents[0], duration=1e5)
+        ctx.spawn(init_centroids, cents[0], duration=1e5,
+                  work=1e5 if real else 0.0)
 
         for t in range(steps):
             tmp = ctx.ralloc(root, 1, label=f"tmp{t}")
@@ -326,7 +356,7 @@ def kmeans(n_workers: int, *, total_work: float = 256e6, steps: int = 4,
             def spawn_fine(c, lo, hi, t=t, partials=partials):
                 for i in range(lo, hi):
                     c.spawn(assign, cents[t], chunks[i], partials[i],
-                            duration=work)
+                            duration=work, work=work if real else 0.0)
 
             if not hier:
                 spawn_fine(ctx, 0, P)
@@ -348,14 +378,16 @@ def kmeans(n_workers: int, *, total_work: float = 256e6, steps: int = 4,
                 for a in range(0, len(level) - 1, 2):
                     o = ctx.alloc(cent_bytes, tmp)
                     ctx.spawn(reduce_pair, level[a], level[a + 1], o,
-                              duration=red_work, name=f"red{t}.{r}")
+                              duration=red_work, name=f"red{t}.{r}",
+                              work=red_work if real else 0.0)
                     nxt.append(o)
                     r += 1
                 if len(level) % 2:
                     nxt.append(level[-1])
                 level = nxt
             ctx.spawn(new_centroids, level[0], cents[t + 1],
-                      duration=red_work, name=f"newc{t}")
+                      duration=red_work, name=f"newc{t}",
+                      work=red_work if real else 0.0)
         yield ctx.wait([InOut(root)])
 
     return main
@@ -375,18 +407,21 @@ def kmeans_mpi(n_workers: int, cost: CostModel, *, total_work: float = 256e6,
 # ---------------------------------------------------------------------------
 
 def matmul(n_workers: int, *, total_work: float = 512e6, hier: bool = False,
-           block_bytes: int = 1 << 19):
+           block_bytes: int = 1 << 19, real: bool = False):
     p = 1 << int(math.log2(max(2, int(math.sqrt(n_workers)))))
     P = p * p
     work = total_work / (P * p)
 
     @task
-    def init_block(ctx, blk: Out):
-        """Fill one matrix block (virtual compute)."""
+    def init_block(ctx, blk: Out, *, work: Safe = 0.0):
+        """Fill one matrix block."""
+        burn(work)
 
     @task
-    def block_mul(ctx, c_blk: InOut, a_blk: In, b_blk: In):
-        """C[i][j] += A[i][k] * B[k][j] (virtual compute)."""
+    def block_mul(ctx, c_blk: InOut, a_blk: In, b_blk: In, *,
+                  work: Safe = 0.0):
+        """C[i][j] += A[i][k] * B[k][j]."""
+        burn(work)
 
     def main(ctx, root):
         G = n_groups(P) if hier else 1
@@ -404,14 +439,15 @@ def matmul(n_workers: int, *, total_work: float = 512e6, hier: bool = False,
         for i in range(p):
             for j in range(p):
                 for M in (A, B, C):
-                    ctx.spawn(init_block, M[i][j], duration=1e4)
+                    ctx.spawn(init_block, M[i][j], duration=1e4,
+                              work=1e4 if real else 0.0)
 
         def spawn_fine(c, cells):
             for cell in cells:
                 i, j = cell // p, cell % p
                 for k in range(p):
                     c.spawn(block_mul, C[i][j], A[i][k], B[k][j],
-                            duration=work)
+                            duration=work, work=work if real else 0.0)
 
         if not hier:
             spawn_fine(ctx, range(P))
@@ -441,26 +477,32 @@ def matmul_mpi(n_workers: int, cost: CostModel, *, total_work: float = 512e6,
 # ---------------------------------------------------------------------------
 
 def barnes_hut(n_workers: int, *, total_work: float = 256e6, steps: int = 3,
-               hier: bool = False, tree_bytes: int = 1 << 18):
+               hier: bool = False, tree_bytes: int = 1 << 18,
+               real: bool = False):
     P = max(2, n_workers)
     build_work = 0.2 * total_work / steps / P
     force_work = 0.8 * total_work / steps / (P * 4)
 
     @task
-    def init_bodies(ctx, body: Out):
-        """Initial body positions for one partition (virtual compute)."""
+    def init_bodies(ctx, body: Out, *, work: Safe = 0.0):
+        """Initial body positions for one partition."""
+        burn(work)
 
     @task
-    def build_tree(ctx, body: In, tree: Out):
-        """Build this partition's octree (virtual compute)."""
+    def build_tree(ctx, body: In, tree: Out, *, work: Safe = 0.0):
+        """Build this partition's octree."""
+        burn(work)
 
     @task
-    def compute_forces(ctx, body: InOut, own_tree: In, far_tree: In):
-        """Walk two trees, accumulate forces (virtual compute)."""
+    def compute_forces(ctx, body: InOut, own_tree: In, far_tree: In, *,
+                       work: Safe = 0.0):
+        """Walk two trees, accumulate forces."""
+        burn(work)
 
     @task
-    def rebalance(ctx, step: In, *bodies: InOut):
+    def rebalance(ctx, step: In, *bodies: InOut, work: Safe = 0.0):
         """All-to-all load-balance exchange over the body partitions."""
+        burn(work)
 
     def main(ctx, root):
         G = n_groups(P) if hier else 1
@@ -468,7 +510,8 @@ def barnes_hut(n_workers: int, *, total_work: float = 256e6, steps: int = 3,
         g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
         bodies = [ctx.alloc(tree_bytes, g_rids[grp(i)]) for i in range(P)]
         for i in range(P):
-            ctx.spawn(init_bodies, bodies[i], duration=1e4)
+            ctx.spawn(init_bodies, bodies[i], duration=1e4,
+                      work=1e4 if real else 0.0)
 
         for t in range(steps):
             step_r = ctx.ralloc(root, 1, label=f"s{t}")
@@ -478,7 +521,8 @@ def barnes_hut(n_workers: int, *, total_work: float = 256e6, steps: int = 3,
             def spawn_builds(c, lo, hi):
                 for i in range(lo, hi):
                     c.spawn(build_tree, bodies[i], trees[i],
-                            duration=build_work)
+                            duration=build_work,
+                            work=build_work if real else 0.0)
 
             def spawn_forces(c, lo, hi):
                 for i in range(lo, hi):
@@ -487,7 +531,8 @@ def barnes_hut(n_workers: int, *, total_work: float = 256e6, steps: int = 3,
                              % max(P - 1, 1)) % P
                         imb = 0.5 + 1.5 * ((i * 31 + krel) % 100) / 100.0
                         c.spawn(compute_forces, bodies[i], trees[i], trees[j],
-                                duration=force_work * imb)
+                                duration=force_work * imb,
+                                work=force_work * imb if real else 0.0)
 
             if not hier:
                 spawn_builds(ctx, 0, P)
@@ -511,7 +556,8 @@ def barnes_hut(n_workers: int, *, total_work: float = 256e6, steps: int = 3,
                               name=f"BH_f{t}.{g}")
             # all-to-all load-balance exchange
             ctx.spawn(rebalance, step_r, *bodies[:8],
-                      duration=1e5, name=f"rebal{t}")
+                      duration=1e5, name=f"rebal{t}",
+                      work=1e5 if real else 0.0)
             yield ctx.wait([InOut(root)])
             ctx.rfree(step_r)
         yield ctx.wait([InOut(root)])
@@ -539,20 +585,28 @@ APPS = {
 
 
 def run_app(name: str, n_workers: int, mode: str, *, policy_p: int = 20,
-            cost: CostModel | None = None, **kw):
-    """mode: mpi (analytic cycles) | flat | hier (AppResult)."""
+            cost: CostModel | None = None, backend: str = "sim", **kw):
+    """mode: mpi (analytic cycles) | flat | hier (AppResult).
+
+    ``backend="threads"`` runs the app on the concurrent executor with
+    real payloads (``real=True`` is implied); timings in the result are
+    wall-clock seconds."""
     builder, mpi_model = APPS[name]
     cost = cost or CostModel.heterogeneous()
     if mode == "mpi":
+        if backend != "sim":
+            raise ValueError("the analytic MPI model is virtual-time only")
         # forward only the kwargs the analytic model understands
         import inspect
         sig = inspect.signature(mpi_model)
         mkw = {k: v for k, v in kw.items() if k in sig.parameters}
         return mpi_model(n_workers, cost, **mkw)
+    if backend == "threads":
+        kw.setdefault("real", True)
     if mode == "flat":
         return _run(builder(n_workers, hier=False, **kw), n_workers, [1],
-                    policy_p, cost)
+                    policy_p, cost, backend)
     if mode == "hier":
         return _run(builder(n_workers, hier=True, **kw), n_workers,
-                    hier_levels(n_workers), policy_p, cost)
+                    hier_levels(n_workers), policy_p, cost, backend)
     raise ValueError(mode)

@@ -1,6 +1,7 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only ROW]
+                                            [--list] [--out FILE]
 
 Prints ``name,us_per_call,derived`` CSV rows: ``us_per_call`` is the
 harness wall time per simulated run; ``derived`` carries the
@@ -8,7 +9,10 @@ figure-specific quantity (virtual cycles, speedups, fractions).
 Default is a reduced grid that finishes in a few minutes on one CPU
 core; ``--full`` runs the paper-sized grids.  ``--only`` must name one
 of the known benchmark rows (see ``--help``); an unknown name is an
-error, not a silent no-op.
+error, not a silent no-op.  ``--list`` prints the known rows and exits.
+``--out FILE`` additionally writes the emitted rows as structured JSON
+(``[{"name", "us_per_call", "derived"}, ...]``) so tooling consumes
+them without scraping the CSV.
 """
 
 from __future__ import annotations
@@ -33,11 +37,17 @@ ROWS = (
 )
 
 
+#: Rows emitted by this invocation (the ``--out`` JSON payload).
+EMITTED: list[dict] = []
+
+
 def _emit(name: str, wall_s: float, n_runs: int, rows: list[dict]) -> None:
     us = wall_s * 1e6 / max(n_runs, 1)
     derived = json.dumps(rows, separators=(",", ":"))
     print(f"{name},{us:.0f},{derived}")
     sys.stdout.flush()
+    EMITTED.append({"name": name, "us_per_call": round(us),
+                    "derived": rows})
 
 
 def main() -> None:
@@ -46,8 +56,16 @@ def main() -> None:
     ap.add_argument("--only", default=None, metavar="ROW",
                     help="run a single benchmark row; one of: "
                     + ", ".join(ROWS))
+    ap.add_argument("--list", action="store_true",
+                    help="print the known benchmark rows and exit")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="also write the emitted rows as JSON to FILE")
     args = ap.parse_args()
     full = args.full
+
+    if args.list:
+        print("\n".join(ROWS))
+        sys.exit(0)
 
     if args.only is not None and args.only not in ROWS:
         print(f"error: unknown benchmark row {args.only!r}; known rows:\n  "
@@ -114,6 +132,10 @@ def main() -> None:
         from repro.roofline.report import summarize
         rows = summarize("reports")
         _emit("roofline_table", time.time() - t0, max(len(rows), 1), rows)
+
+    if args.out is not None:
+        with open(args.out, "w") as f:
+            json.dump(EMITTED, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -3,10 +3,16 @@
 
     PYTHONPATH=src python examples/train_lm.py --steps 300        # ~20M params
     PYTHONPATH=src python examples/train_lm.py --arch yi_6b --smoke
+    PYTHONPATH=src python examples/train_lm.py --backend threads \\
+        --shards 4 --steps 40    # data-parallel via the Myrmics runtime
 
 Any assigned architecture is selectable with --arch (reduced to its
 smoke config unless --full-config, which is only sensible on a real
-cluster).
+cluster).  ``--backend loop`` (default) is the plain JAX training loop;
+``--backend threads`` schedules every optimizer step as a Myrmics task
+DAG — per-shard gradient tasks + an update task — executed with real
+multicore parallelism on the runtime's concurrent executor
+(``Myrmics(backend="threads")``).
 """
 
 import argparse
@@ -37,6 +43,11 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     ap.add_argument("--inject-failure", action="store_true",
                     help="kill a 'worker' mid-run to demo restart")
+    ap.add_argument("--backend", choices=("loop", "threads"), default="loop",
+                    help="loop: plain JAX loop; threads: schedule each "
+                    "step as a Myrmics task DAG on the concurrent executor")
+    ap.add_argument("--shards", type=int, default=4,
+                    help="data-parallel gradient shards (threads backend)")
     args = ap.parse_args()
 
     if args.arch is None:
@@ -58,13 +69,26 @@ def main() -> None:
         if step % 10 == 0:
             print(f"step {step:5d}  loss {loss:.4f}")
 
-    rep = train(cfg, seq_len=args.seq_len, global_batch=args.batch,
-                steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50,
-                async_ckpt=True, failure_plan=plan, opt=opt,
-                on_step=on_step)
-    print(f"done: first loss {rep.losses[0]:.4f} -> last "
-          f"{rep.losses[-1]:.4f}; restarts={rep.restarts} "
-          f"stragglers={rep.stragglers}")
+    if args.backend == "threads":
+        if args.inject_failure:
+            raise SystemExit("--inject-failure is loop-backend only")
+        from repro.train.orchestrator import run_myrmics_training
+        rep, run_rep = run_myrmics_training(
+            cfg, seq_len=args.seq_len, global_batch=args.batch,
+            steps=args.steps, n_shards=args.shards, opt=opt,
+            on_step=on_step, backend="threads")
+        print(f"done ({run_rep.backend} backend, {args.shards} shards, "
+              f"{run_rep.tasks_done} tasks, "
+              f"{run_rep.total_cycles:.1f}s wall): "
+              f"first loss {rep.losses[0]:.4f} -> last {rep.losses[-1]:.4f}")
+    else:
+        rep = train(cfg, seq_len=args.seq_len, global_batch=args.batch,
+                    steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                    async_ckpt=True, failure_plan=plan, opt=opt,
+                    on_step=on_step)
+        print(f"done: first loss {rep.losses[0]:.4f} -> last "
+              f"{rep.losses[-1]:.4f}; restarts={rep.restarts} "
+              f"stragglers={rep.stragglers}")
     assert rep.losses[-1] < rep.losses[0], "loss must decrease"
 
 

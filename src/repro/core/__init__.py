@@ -7,11 +7,16 @@ split into role-scoped agents wired together by the ``runtime`` facade:
 * ``api``          — declarative programming surface: ``@task``
   signatures, ``In/Out/InOut/Safe`` access annotations, typed
   ``RegionRef``/``ObjRef`` handles, ``RunReport``
+* ``substrate``    — the message substrate seam (``Message``,
+  ``Substrate``, ``SimSubstrate``): agents talk to this, backends
+  implement it
+* ``backend_threads`` — the real concurrent executor
+  (``Myrmics(backend="threads")``): scheduler thread + worker pool
 * ``regions``      — sharded region directory (one shard per scheduler)
 * ``deps``         — per-node dependency state machine
 * ``sched``        — scheduler/worker tree + locality/balance scoring
 * ``sched_agent``  — scheduler-role handlers (spawn/descend/complete/migrate)
-* ``worker_agent`` — worker-role handlers (dispatch/DMA/exec/wait/backup)
+* ``worker_agent`` — sim worker-role handlers (dispatch/DMA/exec/wait/backup)
 * ``alloc``        — memory API acting on the owning shard
 * ``serial``       — the serial-elision oracle
 """
@@ -44,11 +49,13 @@ from .runtime import (
 )
 from .serial import SerialContext, SerialRuntime
 from .sim import CostModel, Engine
+from .substrate import Message, SimSubstrate, Substrate
 
 __all__ = [
     "Arg", "In", "InOut", "Out", "Safe", "NOTRANSFER",
     "task", "TaskFn", "RegionRef", "ObjRef", "RunReport", "current_ctx",
     "Myrmics", "SerialRuntime", "SerialContext", "Task", "TaskContext",
     "CostModel", "Engine", "Directory", "DirectoryShard",
+    "Message", "Substrate", "SimSubstrate",
     "MODE_READ", "MODE_WRITE", "ROOT_RID",
 ]

@@ -3,9 +3,12 @@
 Role-scoped slice of the runtime (paper SV-B): allocation requests are
 messages from the calling worker to the scheduler that owns the target
 region; the owner creates the node in its directory shard and charges
-the request processing on its core.  Mutations are applied
-synchronously (the simulation's usual convention) while the cycle costs
-travel through ``Hierarchy.send``.
+the request processing on its core.  Task bodies reach these handlers
+through ``rt.sub.call`` — on the sim substrate that is a synchronous
+call at the spawn site (mutations synchronous, cycle costs travel as
+charge messages through the substrate); on the threaded substrate the
+call is marshalled to the scheduler thread, so directory mutation stays
+single-threaded.
 
 Region placement (paper SV-C): a new region is delegated down the
 scheduler tree toward ``level_hint``, choosing the least-loaded child at
@@ -17,6 +20,7 @@ from __future__ import annotations
 from typing import TYPE_CHECKING
 
 from .sched import SchedNode
+from .substrate import Message
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from .runtime import Myrmics, TaskContext
@@ -55,8 +59,9 @@ class AllocAgent:
         if label is not None:
             rt.labels[rid] = label
         if ctx is not None:
-            rt.hier.send(ctx.worker, owner, rt.cost.ralloc_proc,
-                         lambda: None, send_time=ctx.now)
+            rt.sub.send(ctx.worker, owner,
+                        Message("noop", cost=rt.cost.ralloc_proc),
+                        send_time=ctx.now)
         rt.sched_agent.maybe_migrate(owner)
         return rid
 
@@ -70,8 +75,9 @@ class AllocAgent:
         if label is not None:
             rt.labels[oid] = label
         if ctx is not None:
-            rt.hier.send(ctx.worker, owner, rt.cost.alloc_proc,
-                         lambda: None, send_time=ctx.now)
+            rt.sub.send(ctx.worker, owner,
+                        Message("noop", cost=rt.cost.alloc_proc),
+                        send_time=ctx.now)
         rt.sched_agent.maybe_migrate(owner)
         return oid
 
@@ -87,10 +93,11 @@ class AllocAgent:
             for i, oid in enumerate(oids):
                 rt.labels[oid] = f"{label}[{i}]"
         if ctx is not None:
-            rt.hier.send(
+            rt.sub.send(
                 ctx.worker, owner,
-                rt.cost.alloc_proc + rt.cost.balloc_per_obj * num,
-                lambda: None, send_time=ctx.now)
+                Message("noop", cost=rt.cost.alloc_proc
+                        + rt.cost.balloc_per_obj * num),
+                send_time=ctx.now)
         rt.sched_agent.maybe_migrate(owner)
         return oids
 
@@ -109,5 +116,6 @@ class AllocAgent:
                 raise RuntimeError(f"freeing busy node {freed}")
             rt.storage.pop(freed, None)
         if ctx is not None:
-            rt.hier.send(ctx.worker, owner, rt.cost.free_proc,
-                         lambda: None, send_time=ctx.now)
+            rt.sub.send(ctx.worker, owner,
+                        Message("noop", cost=rt.cost.free_proc),
+                        send_time=ctx.now)

@@ -31,6 +31,7 @@ for both.
 from __future__ import annotations
 
 import inspect
+import threading
 import typing
 from contextlib import contextmanager
 from dataclasses import dataclass, field, replace
@@ -173,30 +174,42 @@ def free_nid(target, region: bool, op: str) -> int:
 
 # -- the ambient context stack -------------------------------------------------
 
-_CTX_STACK: list[Any] = []
+# Thread-local: on the threaded backend each pool thread runs its own
+# task activation, and one thread's ambient context must never leak
+# into another's ref.read()/write() access checks.
+_CTX_LOCAL = threading.local()
+
+
+def _ctx_stack() -> list[Any]:
+    stack = getattr(_CTX_LOCAL, "stack", None)
+    if stack is None:
+        stack = _CTX_LOCAL.stack = []
+    return stack
 
 
 @contextmanager
 def active_ctx(ctx):
     """Make ``ctx`` the ambient task context for the dynamic extent of
-    one task activation (used by the worker agent and the serial
+    one task activation (used by the worker agents and the serial
     oracle around every ``fn(ctx, ...)`` / generator step)."""
-    _CTX_STACK.append(ctx)
+    stack = _ctx_stack()
+    stack.append(ctx)
     try:
         yield ctx
     finally:
-        _CTX_STACK.pop()
+        stack.pop()
 
 
 def current_ctx():
     """The context of the task activation currently executing; this is
     what ``ref.read()`` and direct ``taskfn(...)`` calls resolve."""
-    if not _CTX_STACK:
+    stack = _ctx_stack()
+    if not stack:
         raise RuntimeError(
             "no task is executing: ref.read()/ref.write() and direct "
             "task calls only work inside a running task (use "
             "ctx.read/ctx.write/ctx.spawn otherwise)")
-    return _CTX_STACK[-1]
+    return stack[-1]
 
 
 # -- access specifications -----------------------------------------------------
@@ -353,6 +366,7 @@ def task(fn=None, *, name: str | None = None):
 _REPORT_FIELDS = (
     "total_cycles", "tasks_spawned", "tasks_done", "events",
     "workers", "scheds", "region_load", "migrations", "nodes_migrated",
+    "backend",
 )
 
 
@@ -362,9 +376,12 @@ class RunReport:
 
     ``workers``/``scheds`` map core ids to their per-core stats;
     ``region_load`` maps scheduler ids to owned-directory-node counts.
-    ``to_dict()`` reproduces the legacy ``report()`` dict for the
-    benchmark JSON path, and ``rep["key"]`` keeps dict-style reads
-    working as a thin shim.
+    ``backend`` records which substrate produced the run: for ``"sim"``
+    the time fields are virtual cycles, for ``"threads"`` they are
+    wall-clock seconds measured on the real executor.  ``to_dict()``
+    reproduces the legacy ``report()`` dict for the benchmark JSON
+    path, and ``rep["key"]`` keeps dict-style reads working as a thin
+    shim.
     """
 
     total_cycles: float
@@ -376,6 +393,7 @@ class RunReport:
     region_load: dict[str, int]
     migrations: int
     nodes_migrated: int
+    backend: str = "sim"
 
     def to_dict(self) -> dict:
         return {name: getattr(self, name) for name in _REPORT_FIELDS}

@@ -1,0 +1,441 @@
+"""The threaded backend: a real concurrent executor for Myrmics programs.
+
+``Myrmics(backend="threads")`` runs the *same* scheduler/dependency
+agents as the virtual-time simulation, but over this substrate:
+
+* **scheduler side** — all scheduler-role handlers (spawn handling,
+  dependency traversal, packing + descent, completion, quiesce,
+  allocation) execute on one dedicated scheduler thread draining a
+  message queue.  Directory shards, dependency queues and hierarchy
+  load counters are therefore only ever touched single-threaded, with
+  no locks in the agent logic — the same discipline the distributed
+  design imposes (state lives on its owner).
+* **worker side** — worker "cores" are a thread pool
+  (:class:`~concurrent.futures.ThreadPoolExecutor`, one thread per
+  worker node) executing actual Python/JAX task bodies against the
+  shared object store.  Task bodies that release the GIL (JAX/XLA
+  dispatch, NumPy BLAS, hashlib, zlib) run with genuine multicore
+  parallelism.
+* **runtime services** — a task body's ``ctx.spawn/ralloc/alloc/...``
+  are marshalled to the scheduler thread as synchronous calls
+  (:meth:`ThreadSubstrate.call`), so footprint validation and
+  directory mutation happen on the owner, never concurrently.
+* **accounting** — message costs are not charged: ``busy_cycles`` /
+  ``task_cycles`` in the :class:`~.api.RunReport` are wall-clock
+  seconds measured around each task activation and handler, and
+  ``total_cycles`` is the wall-clock duration of the run.
+
+Features that re-execute tasks (straggler backups, ``kill_worker``
+fault injection) are virtual-time-only: real task bodies have visible
+side effects, so blind re-execution would corrupt the object store.
+The threaded worker agent refuses them loudly.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+
+from .api import active_ctx
+from .runtime import RUNNING, WAITING, Task, TaskContext, WaitSpec, resolve_call
+from .sched import WorkerNode
+from .substrate import Message, Substrate
+
+
+class _Call:
+    """A synchronous runtime-service request marshalled from a worker
+    thread to the scheduler thread."""
+
+    __slots__ = ("kind", "args", "done", "result", "error")
+
+    def __init__(self, kind: str, args: tuple):
+        self.kind = kind
+        self.args = args
+        self.done = threading.Event()
+        self.result = None
+        self.error: BaseException | None = None
+
+
+class ThreadSubstrate(Substrate):
+    """Wall-clock substrate: scheduler thread + worker thread pool."""
+
+    backend = "threads"
+
+    def __init__(self, hier, max_wall_s: float = 600.0,
+                 n_threads: int | None = None):
+        super().__init__()
+        self.hier = hier
+        self.max_wall_s = max_wall_s
+        self.n_threads = n_threads or max(1, len(hier.workers))
+        self._inbox: queue.SimpleQueue = queue.SimpleQueue()
+        self._timers: list = []
+        self._timer_seq = itertools.count()
+        self._timer_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
+        self._events = 0
+        self._t0: float | None = None
+        self._end: float | None = None
+        self._sched_tid: int | None = None
+        self._pool: ThreadPoolExecutor | None = None
+        self._error: BaseException | None = None
+        self._aborting = False
+        self._max_events: int | None = None
+
+    # -- messaging ----------------------------------------------------------
+    def send(self, src, dst, msg: Message, *,
+             send_time: float | None = None) -> None:
+        with self._stats_lock:
+            st = src.core.stats
+            st.msgs_sent += 1
+            st.msg_bytes_sent += msg.payload_bytes
+        self._inbox.put((dst, msg))
+
+    def local(self, node, msg: Message, *,
+              at_time: float | None = None) -> None:
+        self._inbox.put((node, msg))
+
+    def call(self, kind: str, *args):
+        # aborting check first: after _shutdown clears _sched_tid a
+        # still-running pool thread must fail fast, not fall into the
+        # inline-dispatch branch (which would run scheduler handlers on
+        # a pool thread and stall pool teardown forever)
+        if self._aborting:
+            raise RuntimeError("substrate is shutting down")
+        if self._sched_tid is None or \
+                threading.get_ident() == self._sched_tid:
+            return self.dispatch(kind, args)
+        req = _Call(kind, args)
+        self._inbox.put((None, req))
+        req.done.wait()
+        if req.error is not None:
+            raise req.error
+        return req.result
+
+    def timer(self, when: float, msg: Message) -> None:
+        with self._timer_lock:
+            heapq.heappush(self._timers, (when, next(self._timer_seq), msg))
+
+    # -- worker pool ---------------------------------------------------------
+    def submit(self, fn, *args) -> None:
+        """Run ``fn(*args)`` on a worker-pool thread; the run loop stays
+        alive until every submitted job has finished."""
+        with self._inflight_lock:
+            self._inflight += 1
+        self._pool.submit(self._job, fn, args)
+
+    def _job(self, fn, args) -> None:
+        try:
+            fn(*args)
+        except BaseException as e:  # surface task-body errors in run()
+            self.fail(e)
+        finally:
+            with self._inflight_lock:
+                self._inflight -= 1
+            self._inbox.put(None)   # nudge the scheduler loop
+
+    def fail(self, e: BaseException) -> None:
+        if self._error is None:
+            self._error = e
+        self._inbox.put(None)
+
+    # -- time / cores --------------------------------------------------------
+    @property
+    def now(self) -> float:
+        if self._t0 is None:
+            return 0.0
+        if self._end is not None:
+            return self._end - self._t0
+        return time.perf_counter() - self._t0
+
+    @property
+    def events_processed(self) -> int:
+        return self._events
+
+    def occupy(self, node, arrival: float, cost: float) -> float:
+        """Wall-clock accounting: ``cost`` is measured seconds."""
+        with self._stats_lock:
+            node.core.stats.busy_cycles += cost
+            node.core.stats.events += 1
+        return self.now
+
+    def next_free(self, node) -> float:
+        return self.now
+
+    def stats(self, node):
+        return node.core.stats
+
+    def charge_task(self, node, seconds: float, *, executed: bool) -> None:
+        with self._stats_lock:
+            st = node.core.stats
+            st.busy_cycles += seconds
+            st.task_cycles += seconds
+            st.events += 1
+            if executed:
+                st.tasks_executed += 1
+
+    def add_dma(self, node, nbytes: int) -> None:
+        with self._stats_lock:
+            node.core.stats.dma_bytes += nbytes
+
+    # -- the scheduler loop ---------------------------------------------------
+    def run(self, until: float | None = None,
+            max_events: int | None = None) -> None:
+        if until is not None:
+            raise ValueError(
+                "until= bounds virtual time and only exists on "
+                "backend='sim'; the threads backend is bounded by "
+                "max_wall_s")
+        self._max_events = max_events
+        self._t0 = time.perf_counter()
+        self._end = None
+        self._aborting = False
+        self._sched_tid = threading.get_ident()
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.n_threads, thread_name_prefix="myrmics-w")
+        deadline = self._t0 + self.max_wall_s
+        try:
+            while True:
+                if self._error is not None:
+                    raise self._error
+                if time.perf_counter() > deadline:
+                    raise RuntimeError(
+                        f"threads backend exceeded max_wall_s="
+                        f"{self.max_wall_s}s (possible hang)")
+                timeout = self._fire_due_timers()
+                try:
+                    item = self._inbox.get(timeout=min(timeout, 0.05))
+                except queue.Empty:
+                    item = None
+                if item is not None:
+                    self._process(item)
+                    continue
+                # idle: no message arrived within the timeout
+                with self._inflight_lock:
+                    idle = self._inflight == 0
+                if idle and self._inbox.empty() and self._is_done():
+                    break
+        finally:
+            self._end = time.perf_counter()
+            self._shutdown()
+        if self._error is not None:
+            raise self._error
+
+    def _shutdown(self) -> None:
+        """Tear down the pool without orphaning worker threads: any
+        marshalled call still in (or entering) the inbox is answered
+        with the abort error so its caller unblocks — otherwise a
+        worker stuck in ``_Call.done.wait()`` would make
+        ``pool.shutdown(wait=True)`` hang forever."""
+        self._aborting = True
+        pool, self._pool = self._pool, None
+        self._sched_tid = None
+        down = threading.Event()
+        waiter = threading.Thread(
+            target=lambda: (pool.shutdown(wait=True), down.set()),
+            daemon=True)
+        waiter.start()
+        err = self._error or RuntimeError("substrate shut down")
+        while not down.is_set():
+            try:
+                item = self._inbox.get(timeout=0.02)
+            except queue.Empty:
+                continue
+            if item is not None and isinstance(item[1], _Call):
+                item[1].error = err
+                item[1].done.set()
+        waiter.join()
+
+    def _count_event(self) -> None:
+        self._events += 1
+        if self._max_events is not None and self._events > self._max_events:
+            raise RuntimeError(
+                f"threads backend processed more than {self._max_events} "
+                "messages (possible runaway spawn loop)")
+
+    def _fire_due_timers(self) -> float:
+        """Dispatch every due timer; return seconds until the next one."""
+        while True:
+            with self._timer_lock:
+                if not self._timers or self._timers[0][0] > self.now:
+                    nxt = self._timers[0][0] if self._timers else None
+                    break
+                _, _, msg = heapq.heappop(self._timers)
+            self._count_event()
+            self.dispatch(msg.kind, msg.args)
+        return max(nxt - self.now, 0.0) if nxt is not None else 0.05
+
+    def _process(self, item) -> None:
+        if item is None:                      # wake-up nudge
+            return
+        dst, payload = item
+        if isinstance(payload, _Call):
+            try:
+                payload.result = self.dispatch(payload.kind, payload.args)
+            except BaseException as e:
+                payload.error = e
+            payload.done.set()
+            # count after answering: tripping the cap mid-call must not
+            # leave the caller blocked on an unanswered request
+            self._count_event()
+            return
+        self._count_event()
+        t0 = time.perf_counter()
+        self.dispatch(payload.kind, payload.args)
+        if dst is not None:
+            with self._stats_lock:
+                dst.core.stats.busy_cycles += time.perf_counter() - t0
+                dst.core.stats.events += 1
+
+
+# ---------------------------------------------------------------------------
+# the worker agent for the threaded substrate
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ThreadExec:
+    """Execution record for one task activation on a pool thread."""
+
+    task: Task
+    ctx: TaskContext
+    wall0: float = 0.0
+
+
+class ThreadWorkerAgent:
+    """Executes real task bodies on the pool; speaks the same message
+    surface (``w_dispatch`` / ``w_resume``) as the sim worker agent."""
+
+    def __init__(self, rt):
+        self.rt = rt
+        self._suspended: dict[int, ThreadExec] = {}   # tid -> parked record
+
+    # ---- scale-out features: virtual-time only ------------------------------
+
+    def kill_worker(self, worker_id: str, at: float | None = None) -> None:
+        raise RuntimeError(
+            "kill_worker is a virtual-time feature (backend='sim'): real "
+            "task bodies have side effects, so fault re-execution on the "
+            "threads backend would corrupt the object store")
+
+    def add_worker(self, leaf_sched_id: str) -> str:
+        raise RuntimeError(
+            "add_worker (elastic join) is only supported on backend='sim'; "
+            "size the thread pool via n_workers at construction instead")
+
+    def note_service_time(self, dt: float) -> None:
+        rt = self.rt
+        if rt.service_ewma is None:
+            rt.service_ewma = dt
+        else:
+            rt.service_ewma = 0.9 * rt.service_ewma + 0.1 * dt
+
+    def maybe_backup(self, task: Task) -> None:
+        # straggler backups re-execute tasks — safe only when bodies are
+        # pure virtual placeholders, i.e. on the sim backend.
+        return
+
+    def backup_check(self, task: Task) -> None:
+        return
+
+    def do_kill(self, worker_id: str) -> None:
+        self.kill_worker(worker_id)
+
+    # ---- sim-only message kinds (never emitted on this backend) -------------
+
+    def try_start(self, w: WorkerNode) -> None:  # pragma: no cover
+        raise AssertionError("w_try_start is a sim-substrate message")
+
+    def exec_task(self, w: WorkerNode, rec) -> None:  # pragma: no cover
+        raise AssertionError("w_exec is a sim-substrate message")
+
+    def resume_retry(self, w: WorkerNode, rec) -> None:  # pragma: no cover
+        raise AssertionError("w_resume_retry is a sim-substrate message")
+
+    # ---- dispatch / execution ------------------------------------------------
+
+    def h_dispatch(self, w: WorkerNode, task: Task) -> None:
+        """Scheduler-thread side of a dispatch: account the would-be DMA
+        (data is already addressable in the shared store) and hand the
+        body to the pool."""
+        rt = self.rt
+        dma_bytes = sum(
+            b for wid, b in task.pack_by_worker.items() if wid != w.core_id
+        )
+        if dma_bytes > 0:
+            rt.sub.add_dma(w, dma_bytes)
+        rt.sub.submit(self._exec, w, task)
+
+    def _exec(self, w: WorkerNode, task: Task) -> None:
+        """Pool thread: one task activation, measured in wall time."""
+        rt = self.rt
+        task.state = RUNNING
+        ctx = TaskContext(rt, task, w, rt.sub.now)
+        rec = ThreadExec(task, ctx, wall0=rt.sub.now)
+        if task.fn is None:
+            # a pure-duration placeholder task: nothing real to run
+            self._finish(w, rec)
+            return
+        pos, kw = resolve_call(task)
+        with active_ctx(ctx):
+            result = task.fn(ctx, *pos, **kw)
+        if hasattr(result, "__next__"):
+            task.gen = result
+            self._drive(w, rec)
+        else:
+            self._finish(w, rec)
+
+    def _drive(self, w: WorkerNode, rec: ThreadExec) -> None:
+        try:
+            with active_ctx(rec.ctx):
+                yielded = next(rec.task.gen)
+        except StopIteration:
+            self._finish(w, rec)
+            return
+        if not isinstance(yielded, WaitSpec):
+            raise TypeError(
+                f"task yielded {yielded!r}; expected ctx.wait(...)")
+        self._suspend(w, rec, yielded)
+
+    # ---- sys_wait suspend / resume -------------------------------------------
+
+    def _suspend(self, w: WorkerNode, rec: ThreadExec,
+                 spec: WaitSpec) -> None:
+        rt = self.rt
+        task = rec.task
+        task.state = WAITING
+        task.wait_remaining = len(spec.args)
+        rt.sub.charge_task(w, rt.sub.now - rec.wall0, executed=False)
+        self._suspended[task.tid] = rec
+        rt.sub.send(w, task.owner,
+                    Message("s_wait", (task, list(spec.args))))
+        # the pool thread returns here: the generator is parked and the
+        # thread is free for other tasks until the wait quiesces.
+
+    def h_resume(self, w: WorkerNode, task: Task) -> None:
+        rec = self._suspended.pop(task.tid)
+        self.rt.sub.submit(self._continue, w, rec)
+
+    def _continue(self, w: WorkerNode, rec: ThreadExec) -> None:
+        rt = self.rt
+        rec.task.state = RUNNING
+        rec.wall0 = rt.sub.now
+        rec.ctx.t0 = rec.wall0
+        rec.ctx.cursor = 0.0
+        self._drive(w, rec)
+
+    # ---- completion -----------------------------------------------------------
+
+    def _finish(self, w: WorkerNode, rec: ThreadExec) -> None:
+        rt = self.rt
+        task = rec.task
+        dt = rt.sub.now - rec.wall0
+        task.last_exec_cycles = dt
+        rt.sub.charge_task(w, dt, executed=True)
+        rt.sub.send(w, task.owner, Message("s_complete", (task,)))

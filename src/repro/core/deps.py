@@ -192,11 +192,14 @@ class DepEngine:
             self.fx.wait_activated(entry.task, node.nid)
 
     def _nested_in_holder(self, node: DepNode, entry: Entry) -> bool:
-        """Entry spawned (transitively) by a task currently holding this
-        node: it belongs to the holder's turn and may bypass blocked
-        entries queued ahead of it (paper SV-D: a parent's children are
-        enqueued *under* its active claim, not behind later waiters)."""
-        return any(self._is_ancestor_task(h, entry.task)
+        """Entry belonging to the turn of a task currently holding this
+        node: it may bypass blocked entries queued ahead of it (paper
+        SV-D: a parent's children are enqueued *under* its active claim,
+        not behind later waiters).  This covers entries spawned
+        (transitively) by a holder, and a holder's *own* entries — in
+        particular its sys_wait: a WAIT stuck behind a foreign ARG that
+        is itself blocked by the waiter's hold would deadlock."""
+        return any(h is entry.task or self._is_ancestor_task(h, entry.task)
                    for h in node.holders)
 
     def scan(self, nid: int) -> None:

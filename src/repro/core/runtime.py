@@ -18,13 +18,22 @@ derives a spawn's dependency footprint from the task signature, the
 typed ``RegionRef``/``ObjRef`` handles, and the ``RunReport`` returned
 by :meth:`Myrmics.run`.  This module defines the execution-side surface
 (``Task``, ``TaskContext``, ``Myrmics``) and wires the agents together.
-Two execution modes run the *same* scheduler/dependency code:
+The agents communicate only through the reified message/substrate
+interface (:mod:`.substrate`): every cross-core interaction is a
+``Message`` handed to ``rt.sub``, and ``Myrmics(backend=...)`` selects
+which substrate executes it:
 
-* **real mode** — tasks are Python/JAX callables over the object store;
-  used for example applications and the serial-equivalence property
-  tests.
-* **virtual mode** — tasks model compute with ``ctx.compute(cycles)``;
-  used for the 512-worker scaling studies in virtual time.
+* ``backend="sim"`` — :class:`~.substrate.SimSubstrate`: the
+  deterministic discrete-event engine with paper-calibrated
+  virtual-cycle charges.  Task bodies (Python callables, or pure
+  ``duration=`` placeholders) run synchronously inside the event loop,
+  so this backend is for scheduling studies, not throughput.
+* ``backend="threads"`` — :class:`~.backend_threads.ThreadSubstrate`:
+  a real concurrent executor.  Scheduler handlers drain a message
+  queue on a dedicated thread; worker cores are a thread pool running
+  actual Python/JAX task bodies in parallel against the object store;
+  DMA/compute charges become wall-clock measurements in the
+  ``RunReport``.
 
 A task function has signature ``fn(ctx, *args)``.  Under the
 declarative API each argument arrives as the handle the spawner passed
@@ -59,6 +68,7 @@ from .deps import DepEngine
 from .regions import MODE_READ, MODE_WRITE, ROOT_RID, Directory
 from .sched import Hierarchy, SchedNode, WorkerNode
 from .sim import CostModel, Engine
+from .substrate import SimSubstrate
 
 __all__ = [
     "Arg", "In", "Out", "InOut", "Safe", "task", "TaskFn",
@@ -139,31 +149,31 @@ class TaskContext:
                level_hint: int = 10**9,
                label: str | None = None) -> RegionRef:
         self.cursor += self.rt.cost.worker_alloc_call
-        rid = self.rt.alloc_agent.sys_ralloc(nid_of(parent_rid), level_hint,
-                                             self, label)
+        rid = self.rt.sub.call("sys_ralloc", nid_of(parent_rid), level_hint,
+                               self, label)
         return RegionRef(rid, label, self.rt.dir)
 
     def alloc(self, size: int, rid: int | RegionRef = ROOT_RID,
               label: str | None = None) -> ObjRef:
         self.cursor += self.rt.cost.worker_alloc_call
-        oid = self.rt.alloc_agent.sys_alloc(size, nid_of(rid), self, label)
+        oid = self.rt.sub.call("sys_alloc", size, nid_of(rid), self, label)
         return ObjRef(oid, label, self.rt.dir)
 
     def balloc(self, size: int, rid: int | RegionRef, num: int,
                label: str | None = None) -> list[ObjRef]:
         self.cursor += self.rt.cost.worker_alloc_call
-        oids = self.rt.alloc_agent.sys_balloc(size, nid_of(rid), num, self,
-                                              label)
+        oids = self.rt.sub.call("sys_balloc", size, nid_of(rid), num, self,
+                                label)
         return [ObjRef(o, f"{label}[{i}]" if label else None, self.rt.dir)
                 for i, o in enumerate(oids)]
 
     def free(self, oid: int | ObjRef) -> None:
         self.cursor += self.rt.cost.worker_alloc_call
-        self.rt.alloc_agent.sys_free(free_nid(oid, False, "free"), self)
+        self.rt.sub.call("sys_free", free_nid(oid, False, "free"), self)
 
     def rfree(self, rid: int | RegionRef) -> None:
         self.cursor += self.rt.cost.worker_alloc_call
-        self.rt.alloc_agent.sys_rfree(free_nid(rid, True, "rfree"), self)
+        self.rt.sub.call("sys_rfree", free_nid(rid, True, "rfree"), self)
 
     # --- object store (real mode) -----------------------------------------------
     def read(self, oid: int | ObjRef) -> Any:
@@ -244,9 +254,12 @@ def resolve_call(task: Task) -> tuple[list, dict]:
 class Myrmics:
     """One runtime instance = one simulated machine + one application run.
 
-    The facade owns the shared state (engine, hierarchy, sharded
+    The facade owns the shared state (substrate, hierarchy, sharded
     directory, dependency engine, object store, counters) and delegates
     all behaviour to the role-scoped agents it wires together.
+    ``backend`` selects the substrate executing the agents' messages:
+    ``"sim"`` (deterministic virtual time, the default) or ``"threads"``
+    (real concurrent execution; see :mod:`.backend_threads`).
     ``migrate_threshold`` opts in to SV-C region-ownership migration:
     a scheduler owning more than that many directory nodes offers
     subtrees to underloaded siblings (default off — virtual-time results
@@ -256,11 +269,15 @@ class Myrmics:
     def __init__(self, n_workers: int = 4, sched_levels: list[int] | None = None,
                  cost: CostModel | None = None, policy_p: int = 20,
                  max_events: int | None = 50_000_000,
-                 migrate_threshold: int | None = None):
+                 migrate_threshold: int | None = None,
+                 backend: str = "sim", max_wall_s: float = 600.0):
         from .alloc import AllocAgent
         from .sched_agent import DepEffects, SchedAgent
         from .worker_agent import WorkerAgent
 
+        if backend not in ("sim", "threads"):
+            raise ValueError(f"unknown backend {backend!r}: sim | threads")
+        self.backend = backend
         self.engine = Engine()
         self.cost = cost or CostModel.heterogeneous()
         self.hier = Hierarchy.build(
@@ -296,8 +313,56 @@ class Myrmics:
         # -- role-scoped agents --
         self.alloc_agent = AllocAgent(self)
         self.sched_agent = SchedAgent(self)
-        self.worker_agent = WorkerAgent(self)
+        if backend == "threads":
+            from .backend_threads import ThreadSubstrate, ThreadWorkerAgent
+            self.sub = ThreadSubstrate(self.hier, max_wall_s=max_wall_s)
+            self.worker_agent = ThreadWorkerAgent(self)
+        else:
+            self.sub = SimSubstrate(self.hier)
+            self.worker_agent = WorkerAgent(self)
         self.deps = DepEngine(self.dir, DepEffects(self))
+        self.sub.bind(self._handlers(), is_done=self._program_done)
+
+    def _handlers(self) -> dict:
+        """The message-kind registry: every cross-core interaction the
+        agents emit resolves to one of these callables (messages are
+        plain data, so substrates can marshal them across threads)."""
+        sa, wa, aa = self.sched_agent, self.worker_agent, self.alloc_agent
+        return {
+            # charge-only messages (accounting; no destination effect)
+            "noop": lambda *a: None,
+            # scheduler-role handlers
+            "s_spawn": sa.h_spawn,
+            "s_enqueue": sa.h_enqueue,
+            "s_mark_ready": sa.mark_ready,
+            "s_descend": sa.h_descend,
+            "s_wait": sa.h_wait,
+            "s_complete": sa.h_complete,
+            "s_release": sa.h_release,
+            "s_arg_ready": self.deps.fx._h_arg_ready,
+            "s_wait_ready": self.deps.fx._h_wait_ready,
+            "d_quiesce": self.deps.recv_quiesce,
+            # worker-role handlers (dispatched to whichever worker agent
+            # the backend installed)
+            "w_dispatch": wa.h_dispatch,
+            "w_resume": wa.h_resume,
+            "w_try_start": wa.try_start,
+            "w_exec": wa.exec_task,
+            "w_resume_retry": wa.resume_retry,
+            "w_backup_check": wa.backup_check,
+            "w_kill": wa.do_kill,
+            # synchronous runtime services (task body -> scheduler side)
+            "sys_spawn": sa.sys_spawn,
+            "sys_ralloc": aa.sys_ralloc,
+            "sys_alloc": aa.sys_alloc,
+            "sys_balloc": aa.sys_balloc,
+            "sys_free": aa.sys_free,
+            "sys_rfree": aa.sys_rfree,
+        }
+
+    def _program_done(self) -> bool:
+        return (self.main_task is not None and self.main_task.completed
+                and self.tasks_done == self.tasks_spawned)
 
     # ---- helpers -------------------------------------------------------------
 
@@ -329,7 +394,7 @@ class Myrmics:
                   call: tuple | None = None) -> Task:
         task = Task(fn, args, parent=ctx.task, duration=duration, name=name,
                     call=call)
-        self.sched_agent.sys_spawn(task, ctx)
+        self.sub.call("sys_spawn", task, ctx)
         return task
 
     def kill_worker(self, worker_id: str, at: float | None = None) -> None:
@@ -354,7 +419,7 @@ class Myrmics:
         main.satisfied = len(main.dep_args)
         main.state = READY
         self.sched_agent.begin_packing(main.owner, main)
-        self.engine.run(until=until, max_events=self.max_events)
+        self.sub.run(until=until, max_events=self.max_events)
         return self.report()
 
     def labelled_storage(self) -> dict[str, Any]:
@@ -367,20 +432,21 @@ class Myrmics:
 
     def report(self) -> RunReport:
         workers = {
-            w.core_id: w.core.stats for w in self.hier.workers
+            w.core_id: self.sub.stats(w) for w in self.hier.workers
         }
-        scheds = {s.core_id: s.core.stats for s in self.hier.scheds}
+        scheds = {s.core_id: self.sub.stats(s) for s in self.hier.scheds}
         return RunReport(
-            total_cycles=self.engine.now,
+            total_cycles=self.sub.now,
             tasks_spawned=self.tasks_spawned,
             tasks_done=self.tasks_done,
-            events=self.engine.events_processed,
+            events=self.sub.events_processed,
             workers=workers,
             scheds=scheds,
             region_load={s.core_id: s.region_load
                          for s in self.hier.scheds},
             migrations=self.migrations,
             nodes_migrated=self.nodes_migrated,
+            backend=self.backend,
         )
 
 

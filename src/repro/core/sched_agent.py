@@ -2,8 +2,9 @@
 quiesce, and region-ownership migration.
 
 Every handler in this module is work performed *on a scheduler core*:
-it is entered through ``Hierarchy.send``/``local`` with the processing
-cost charged to that core.  Directory metadata is only read for nodes
+it is entered through the substrate (``rt.sub.send``/``local``) with
+the processing cost charged to (sim) or measured on (threads) that
+core.  Directory metadata is only read for nodes
 the handling scheduler owns (its :class:`~.regions.DirectoryShard`);
 reads that cross shard boundaries go through the forwarding helpers
 (``forward_lookup``, the packing walk) and are charged to the owning
@@ -28,6 +29,7 @@ from .deps import ARG, TRAVERSE, WAIT, Entry
 from .regions import MODE_WRITE, ROOT_RID, NodeMeta
 from .runtime import DISPATCHED, DONE, READY, SPAWNED
 from .sched import SchedNode, score_candidates
+from .substrate import Message
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
     from .runtime import Myrmics, Task, TaskContext
@@ -56,8 +58,8 @@ class SchedAgent:
         owner_id = rt.dir.owner_of(nid)
         meta = rt.dir.serve_lookup(nid, requester.core_id)
         if owner_id != requester.core_id:
-            rt.hier.send(requester, rt.sched_of(owner_id),
-                         rt.cost.shard_lookup_proc, lambda: None)
+            rt.sub.send(requester, rt.sched_of(owner_id),
+                        Message("noop", cost=rt.cost.shard_lookup_proc))
         return meta
 
     # ---- spawn path ---------------------------------------------------------
@@ -75,9 +77,10 @@ class SchedAgent:
                     "outside the parent's declared footprint")
         rt.tasks_spawned += 1
         # SPAWN message: worker -> owner of the parent task (routed via tree)
-        rt.hier.send(ctx.worker, ctx.task.owner, rt.cost.spawn_proc,
-                     self.h_spawn, ctx.task.owner, task,
-                     send_time=ctx.now)
+        rt.sub.send(ctx.worker, ctx.task.owner,
+                    Message("s_spawn", (ctx.task.owner, task),
+                            cost=rt.cost.spawn_proc),
+                    send_time=ctx.now)
 
     def h_spawn(self, sched: SchedNode, task: "Task") -> None:
         """Spawn handling at the parent task's owner.
@@ -101,13 +104,13 @@ class SchedAgent:
             if nxt is None:
                 break
             # charge the delegation message (accounting only)
-            rt.hier.send(hop_src, nxt, rt.cost.spawn_proc, lambda: None)
+            rt.sub.send(hop_src, nxt, Message("noop", cost=rt.cost.spawn_proc))
             hop_src = nxt
             owner = nxt
         task.owner = owner
         if not task.dep_args:
             task.state = READY
-            rt.hier.local(owner, 0.0, self.mark_ready, task)
+            rt.sub.local(owner, Message("s_mark_ready", (task,)))
             return
         parent_nids = task.parent.arg_nids() if task.parent else [ROOT_RID]
         for i, a in enumerate(task.dep_args):
@@ -117,9 +120,9 @@ class SchedAgent:
                 entry = Entry(ARG, task, a.mode, (), i)
             else:
                 entry = Entry(TRAVERSE, task, a.mode, tuple(path[1:]), i)
-            rt.hier.send(sched, rt.node_owner(origin),
-                         rt.cost.dep_enqueue_per_arg,
-                         self.h_enqueue, origin, entry, None)
+            rt.sub.send(sched, rt.node_owner(origin),
+                        Message("s_enqueue", (origin, entry, None),
+                                cost=rt.cost.dep_enqueue_per_arg))
 
     def mark_ready(self, task: "Task") -> None:
         task.state = READY
@@ -156,9 +159,9 @@ class SchedAgent:
         # packing requires messages to the schedulers owning parts of
         # the footprint (paper Fig. 6a: S2 packs region A via S0 and S1)
         for ro in sorted(remote_owners):
-            rt.hier.send(sched, rt.sched_of(ro), rt.cost.pack_per_arg,
-                         lambda: None)
-        rt.hier.local(sched, cost, self.h_descend, sched, task)
+            rt.sub.send(sched, rt.sched_of(ro),
+                        Message("noop", cost=rt.cost.pack_per_arg))
+        rt.sub.local(sched, Message("s_descend", (sched, task), cost=cost))
 
     def live_workers(self, sched: SchedNode) -> set[str]:
         rt = self.rt
@@ -168,8 +171,9 @@ class SchedAgent:
     def h_descend(self, sched: SchedNode, task: "Task") -> None:
         rt = self.rt
         if sched.is_leaf and not sched.workers and sched.parent is not None:
-            rt.hier.send(sched, sched.parent, rt.cost.dispatch_proc,
-                         self.h_descend, sched.parent, task)
+            rt.sub.send(sched, sched.parent,
+                        Message("s_descend", (sched.parent, task),
+                                cost=rt.cost.dispatch_proc))
             return
         if sched.is_leaf:
             cands = [
@@ -189,8 +193,9 @@ class SchedAgent:
                     for meta in rt.dir.objects_under(
                             a.nid, requester=sched.core_id):
                         meta.last_producer = w.core_id
-            rt.hier.send(sched, w, rt.cost.worker_dispatch_recv,
-                         rt.worker_agent.h_dispatch, w, task)
+            rt.sub.send(sched, w,
+                        Message("w_dispatch", (w, task),
+                                cost=rt.cost.worker_dispatch_recv))
             rt.worker_agent.maybe_backup(task)
             return
         cands = [
@@ -201,13 +206,15 @@ class SchedAgent:
         if not cands:
             # no live workers below: bounce back up to the parent
             target = sched.parent or sched
-            rt.hier.send(sched, target, rt.cost.dispatch_proc,
-                         self.h_descend, target, task)
+            rt.sub.send(sched, target,
+                        Message("s_descend", (target, task),
+                                cost=rt.cost.dispatch_proc))
             return
         c = score_candidates(task.pack_by_worker, cands, rt.policy_p)
         sched.load[c.core_id] += 1
-        rt.hier.send(sched, c, rt.cost.dispatch_proc,
-                     self.h_descend, c, task)
+        rt.sub.send(sched, c,
+                    Message("s_descend", (c, task),
+                            cost=rt.cost.dispatch_proc))
 
     # ---- sys_wait -----------------------------------------------------------
 
@@ -215,15 +222,16 @@ class SchedAgent:
         rt = self.rt
         for a in args:
             entry = Entry(WAIT, task, a.mode, (), -1)
-            rt.hier.send(task.owner, rt.node_owner(a.nid),
-                         rt.cost.dep_enqueue_per_arg,
-                         self.h_enqueue, a.nid, entry, None)
+            rt.sub.send(task.owner, rt.node_owner(a.nid),
+                        Message("s_enqueue", (a.nid, entry, None),
+                                cost=rt.cost.dep_enqueue_per_arg))
 
     def resume_task(self, task: "Task") -> None:
         rt = self.rt
         w = task.worker
-        rt.hier.send(task.owner, w, rt.cost.worker_dispatch_recv,
-                     rt.worker_agent.h_resume, w, task)
+        rt.sub.send(task.owner, w,
+                    Message("w_resume", (w, task),
+                            cost=rt.cost.worker_dispatch_recv))
 
     # ---- completion ---------------------------------------------------------
 
@@ -246,9 +254,9 @@ class SchedAgent:
                 node = node.parent
         owner = task.owner
         for a in task.dep_args:
-            rt.hier.send(owner, rt.node_owner(a.nid),
-                         rt.cost.traverse_hop,
-                         self.h_release, a.nid, task)
+            rt.sub.send(owner, rt.node_owner(a.nid),
+                        Message("s_release", (a.nid, task),
+                                cost=rt.cost.traverse_hop))
         if task is rt.main_task:
             rt.deps.release(ROOT_RID, task)
 
@@ -305,11 +313,12 @@ class SchedAgent:
         rt.migrations += 1
         rt.nodes_migrated += len(moved)
         # parent-routed hand-off: request, then grant + metadata transfer
-        rt.hier.send(owner, owner.parent, rt.cost.migrate_proc, lambda: None)
-        rt.hier.send(owner.parent, target,
-                     rt.cost.migrate_proc
-                     + rt.cost.migrate_per_node * len(moved),
-                     lambda: None)
+        rt.sub.send(owner, owner.parent,
+                    Message("noop", cost=rt.cost.migrate_proc))
+        rt.sub.send(owner.parent, target,
+                    Message("noop",
+                            cost=rt.cost.migrate_proc
+                            + rt.cost.migrate_per_node * len(moved)))
 
 
 class DepEffects:
@@ -329,13 +338,14 @@ class DepEffects:
         else:
             new = Entry(ARG, entry.task, entry.mode, (), entry.arg_index)
             cost = rt.cost.dep_enqueue_per_arg
-        rt.hier.send(rt.node_owner(from_nid), rt.node_owner(nxt), cost,
-                     rt.sched_agent.h_enqueue, nxt, new, from_nid)
+        rt.sub.send(rt.node_owner(from_nid), rt.node_owner(nxt),
+                    Message("s_enqueue", (nxt, new, from_nid), cost=cost))
 
     def arg_activated(self, task, arg_index: int, nid: int) -> None:
         rt = self.rt
-        rt.hier.send(rt.node_owner(nid), task.owner, rt.cost.arg_ready_proc,
-                     self._h_arg_ready, task)
+        rt.sub.send(rt.node_owner(nid), task.owner,
+                    Message("s_arg_ready", (task,),
+                            cost=rt.cost.arg_ready_proc))
 
     def _h_arg_ready(self, task) -> None:
         task.satisfied += 1
@@ -345,8 +355,9 @@ class DepEffects:
 
     def wait_activated(self, task, nid: int) -> None:
         rt = self.rt
-        rt.hier.send(rt.node_owner(nid), task.owner, rt.cost.arg_ready_proc,
-                     self._h_wait_ready, task)
+        rt.sub.send(rt.node_owner(nid), task.owner,
+                    Message("s_wait_ready", (task,),
+                            cost=rt.cost.arg_ready_proc))
 
     def _h_wait_ready(self, task) -> None:
         task.wait_remaining -= 1
@@ -356,6 +367,7 @@ class DepEffects:
     def send_quiesce(self, child_nid: int, parent_nid: int,
                      recv_r: int, recv_w: int) -> None:
         rt = self.rt
-        rt.hier.send(rt.node_owner(child_nid), rt.node_owner(parent_nid),
-                     rt.cost.quiesce_proc, rt.deps.recv_quiesce,
-                     parent_nid, child_nid, recv_r, recv_w)
+        rt.sub.send(rt.node_owner(child_nid), rt.node_owner(parent_nid),
+                    Message("d_quiesce",
+                            (parent_nid, child_nid, recv_r, recv_w),
+                            cost=rt.cost.quiesce_proc))

@@ -1,0 +1,176 @@
+"""The message substrate: the seam between agent logic and execution.
+
+The paper's runtime logic (spawn handling, dependency traversal,
+hierarchical descent, completion, quiesce, allocation) is *transport
+agnostic*: on the 520-core prototype it runs over NoC mailboxes, in
+this reproduction it runs over whichever :class:`Substrate` the
+:class:`~.runtime.Myrmics` facade was constructed with.  The agents in
+``sched_agent`` / ``worker_agent`` / ``alloc`` never touch an engine,
+a clock or a core directly — every cross-core interaction is a
+reified :class:`Message` handed to the substrate:
+
+* ``send(src, dst, msg)``    — route a message between two cores and run
+  the handler registered for ``msg.kind`` at the destination;
+* ``local(node, msg)``       — same-core follow-up work (no message);
+* ``call(kind, *args)``      — a synchronous runtime service invoked
+  from *inside a running task body* (sys_spawn / sys_alloc / ...),
+  executed on the scheduler side whatever thread the body runs on;
+* ``timer(when, msg)``       — a deferred self-message (DMA completion,
+  straggler watchdog, fault injection);
+* ``occupy(node, arrival, cost)`` — charge/measure execution time on a
+  core; ``now`` / ``next_free(node)`` — the substrate's clock;
+* ``stats(node)``            — the per-core accounting record.
+
+Handlers are registered once by the runtime (``bind``): a message is
+plain data (``kind`` + ``args``), so a substrate implementation is free
+to marshal it across threads — or, as :class:`SimSubstrate` does, to
+feed it through the deterministic discrete-event engine, charging the
+virtual-cycle costs carried by the message.  The two implementations:
+
+* :class:`SimSubstrate` (here) — the virtual-time backend: wraps the
+  :class:`~.sim.Engine` and the tree-routed :meth:`~.sched.Hierarchy.send`
+  with paper-calibrated cycle charges.  Deterministic and
+  bit-reproducible; used for all scaling studies.
+* :class:`~.backend_threads.ThreadSubstrate` — the real concurrent
+  backend: scheduler handlers drain a queue on a dedicated thread,
+  worker cores are a thread pool executing actual Python/JAX task
+  bodies, and charges are wall-clock measurements.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from .sim import MESSAGE_SIZE, CoreStats
+
+
+@dataclass(frozen=True)
+class Message:
+    """One reified runtime message: plain data, no behaviour.
+
+    ``kind`` selects the destination handler from the runtime's
+    registry; ``args`` is the payload; ``cost`` is the destination
+    processing charge in virtual cycles (ignored by wall-clock
+    substrates, which measure instead of charging)."""
+
+    kind: str
+    args: tuple = ()
+    cost: float = 0.0
+    payload_bytes: int = MESSAGE_SIZE
+
+
+class Substrate:
+    """Abstract message/time substrate the agents are written against."""
+
+    def __init__(self) -> None:
+        self.handlers: dict[str, Callable] = {}
+        self._is_done: Callable[[], bool] = lambda: True
+
+    def bind(self, handlers: dict[str, Callable],
+             is_done: Callable[[], bool] | None = None) -> None:
+        """Install the runtime's handler registry (kind -> callable)."""
+        self.handlers = handlers
+        if is_done is not None:
+            self._is_done = is_done
+
+    def dispatch(self, kind: str, args: tuple) -> Any:
+        return self.handlers[kind](*args)
+
+    # -- messaging ----------------------------------------------------------
+    def send(self, src: Any, dst: Any, msg: Message, *,
+             send_time: float | None = None) -> None:
+        raise NotImplementedError
+
+    def local(self, node: Any, msg: Message, *,
+              at_time: float | None = None) -> None:
+        raise NotImplementedError
+
+    def call(self, kind: str, *args: Any) -> Any:
+        """Synchronous runtime service from inside a task body."""
+        raise NotImplementedError
+
+    def timer(self, when: float, msg: Message) -> None:
+        raise NotImplementedError
+
+    # -- time / cores --------------------------------------------------------
+    @property
+    def now(self) -> float:
+        raise NotImplementedError
+
+    @property
+    def events_processed(self) -> int:
+        raise NotImplementedError
+
+    def occupy(self, node: Any, arrival: float, cost: float) -> float:
+        raise NotImplementedError
+
+    def next_free(self, node: Any) -> float:
+        raise NotImplementedError
+
+    def stats(self, node: Any) -> CoreStats:
+        raise NotImplementedError
+
+    # -- program execution ---------------------------------------------------
+    def run(self, until: float | None = None,
+            max_events: int | None = None) -> None:
+        raise NotImplementedError
+
+
+class SimSubstrate(Substrate):
+    """Virtual-time substrate: the discrete-event engine + tree routing.
+
+    Message delivery, forwarding charges and core occupancy are exactly
+    the pre-substrate ``Hierarchy.send`` / ``Engine.at`` semantics —
+    virtual-time schedules are bit-identical to the unrefactored
+    runtime (pinned by the fig7a/fig8 regression tests)."""
+
+    backend = "sim"
+
+    def __init__(self, hier) -> None:
+        super().__init__()
+        self.hier = hier
+        self.engine = hier.engine
+
+    # -- messaging ----------------------------------------------------------
+    def send(self, src, dst, msg: Message, *,
+             send_time: float | None = None) -> None:
+        self.hier.send(src, dst, msg.cost, self.dispatch, msg.kind, msg.args,
+                       send_time=send_time, payload_bytes=msg.payload_bytes)
+
+    def local(self, node, msg: Message, *,
+              at_time: float | None = None) -> None:
+        self.hier.local(node, msg.cost, self.dispatch, msg.kind, msg.args,
+                        at_time=at_time)
+
+    def call(self, kind: str, *args):
+        # the simulation convention: runtime-service mutations apply
+        # synchronously at the call site; their cycle costs travel as
+        # charge messages issued by the handler itself.
+        return self.dispatch(kind, args)
+
+    def timer(self, when: float, msg: Message) -> None:
+        self.engine.at(when, self.dispatch, msg.kind, msg.args)
+
+    # -- time / cores --------------------------------------------------------
+    @property
+    def now(self) -> float:
+        return self.engine.now
+
+    @property
+    def events_processed(self) -> int:
+        return self.engine.events_processed
+
+    def occupy(self, node, arrival: float, cost: float) -> float:
+        return node.core.occupy(arrival, cost)
+
+    def next_free(self, node) -> float:
+        return node.core.next_free
+
+    def stats(self, node) -> CoreStats:
+        return node.core.stats
+
+    # -- program execution ---------------------------------------------------
+    def run(self, until: float | None = None,
+            max_events: int | None = None) -> None:
+        self.engine.run(until=until, max_events=max_events)

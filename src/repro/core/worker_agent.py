@@ -1,10 +1,14 @@
-"""Worker-role agent: dispatch intake, DMA, task execution, sys_wait
-suspend/resume, straggler backups and worker fault handling.
+"""Worker-role agent for the virtual-time substrate: dispatch intake,
+DMA modelling, task execution, sys_wait suspend/resume, straggler
+backups and worker fault handling.
 
 Every handler here is work performed on (or about) a *worker core*.
 The agent owns the per-worker execution records; scheduler-side effects
-(completion processing, wait enqueues) are messages back to the task's
-owning scheduler, charged through ``Hierarchy.send``.
+(completion processing, wait enqueues) are reified messages back to the
+task's owning scheduler, charged through the substrate.  All timing is
+the substrate's virtual clock (``rt.sub.now`` / ``rt.sub.timer``) —
+this agent is installed for ``backend="sim"``; the wall-clock
+equivalent lives in :mod:`.backend_threads`.
 """
 
 from __future__ import annotations
@@ -23,6 +27,7 @@ from .runtime import (
     resolve_call,
 )
 from .sched import WorkerNode
+from .substrate import Message
 
 
 @dataclass
@@ -49,37 +54,39 @@ class WorkerAgent:
         re-dispatched by their owners (the dependency queues define the
         exact re-execution set); subsequent placement avoids the corpse.
         """
-        rt = self.rt
-
-        def do_kill():
-            w = rt.hier.by_id[worker_id]
-            rt.dead_workers.add(worker_id)
-            victims = [r.task for r in w.queue]
-            if w.running is not None:
-                victims.append(w.running.task)
-            if w.suspended:
-                # a suspended (mid-wait) task has visible side effects
-                # (spawned children); blind re-execution would duplicate
-                # them — surface instead of corrupting the run.
-                raise RuntimeError(
-                    f"kill_worker({worker_id}): suspended tasks present; "
-                    "re-execution of mid-wait tasks is not supported")
-            w.queue.clear()
-            w.running = None
-            w.parent.workers = [x for x in w.parent.workers
-                                if x.core_id != worker_id]
-            w.parent.load.pop(worker_id, None)
-            for t in victims:
-                if t.state in (DISPATCHED, RUNNING, WAITING):
-                    rt.tasks_rescheduled += 1
-                    t.state = READY
-                    t.gen = None
-                    rt.hier.local(t.owner, rt.cost.schedule_base,
-                                  rt.sched_agent.h_descend, t.owner, t)
         if at is None:
-            do_kill()
+            self.do_kill(worker_id)
         else:
-            rt.engine.at(at, do_kill)
+            self.rt.sub.timer(at, Message("w_kill", (worker_id,)))
+
+    def do_kill(self, worker_id: str) -> None:
+        rt = self.rt
+        w = rt.hier.by_id[worker_id]
+        if w.suspended:
+            # a suspended (mid-wait) task has visible side effects
+            # (spawned children); blind re-execution would duplicate
+            # them — refuse *before* touching any state, so a refused
+            # kill leaves the hierarchy intact.
+            raise RuntimeError(
+                f"kill_worker({worker_id}): suspended tasks present; "
+                "re-execution of mid-wait tasks is not supported")
+        rt.dead_workers.add(worker_id)
+        victims = [r.task for r in w.queue]
+        if w.running is not None:
+            victims.append(w.running.task)
+        w.queue.clear()
+        w.running = None
+        w.parent.workers = [x for x in w.parent.workers
+                            if x.core_id != worker_id]
+        w.parent.load.pop(worker_id, None)
+        for t in victims:
+            if t.state in (DISPATCHED, RUNNING, WAITING):
+                rt.tasks_rescheduled += 1
+                t.state = READY
+                t.gen = None
+                rt.sub.local(t.owner,
+                             Message("s_descend", (t.owner, t),
+                                     cost=rt.cost.schedule_base))
 
     def add_worker(self, leaf_sched_id: str) -> str:
         """Elastic join: attach a fresh worker under a leaf scheduler."""
@@ -109,18 +116,20 @@ class WorkerAgent:
         rt = self.rt
         if rt.backup_factor is None or rt.service_ewma is None:
             return
-        deadline = rt.engine.now + rt.backup_factor * rt.service_ewma
+        deadline = rt.sub.now + rt.backup_factor * rt.service_ewma
+        rt.sub.timer(deadline, Message("w_backup_check", (task,)))
 
-        def check():
-            if not task.completed and not task.backup_spawned and \
-                    task.state in (DISPATCHED, RUNNING) and \
-                    task.worker is not None and \
-                    task.worker.core_id not in rt.dead_workers:
-                task.backup_spawned = True
-                rt.backups_spawned += 1
-                rt.hier.local(task.owner, rt.cost.schedule_base,
-                              rt.sched_agent.h_descend, task.owner, task)
-        rt.engine.at(deadline, check)
+    def backup_check(self, task: Task) -> None:
+        rt = self.rt
+        if not task.completed and not task.backup_spawned and \
+                task.state in (DISPATCHED, RUNNING) and \
+                task.worker is not None and \
+                task.worker.core_id not in rt.dead_workers:
+            task.backup_spawned = True
+            rt.backups_spawned += 1
+            rt.sub.local(task.owner,
+                         Message("s_descend", (task.owner, task),
+                                 cost=rt.cost.schedule_base))
 
     # ---- dispatch intake + DMA ----------------------------------------------
 
@@ -129,8 +138,9 @@ class WorkerAgent:
         if w.core_id in rt.dead_workers:
             # dispatch raced with the failure: owner re-schedules
             rt.tasks_rescheduled += 1
-            rt.hier.local(task.owner, rt.cost.schedule_base,
-                          rt.sched_agent.h_descend, task.owner, task)
+            rt.sub.local(task.owner,
+                         Message("s_descend", (task.owner, task),
+                                 cost=rt.cost.schedule_base))
             return
         rec = ExecRecord(task)
         dma_bytes = sum(
@@ -143,10 +153,10 @@ class WorkerAgent:
         if dma_bytes > 0:
             dur = (rt.cost.dma_startup * max(1, n_xfers)
                    + dma_bytes / rt.cost.dma_bytes_per_cycle)
-            start = max(rt.engine.now, w.dma_free)
+            start = max(rt.sub.now, w.dma_free)
             w.dma_free = start + dur
             rec.dma_done = w.dma_free
-            w.core.stats.dma_bytes += dma_bytes
+            rt.sub.stats(w).dma_bytes += dma_bytes
         w.queue.append(rec)
         self.try_start(w)
 
@@ -155,16 +165,16 @@ class WorkerAgent:
         if w.running is not None or not w.queue:
             return
         rec = w.queue[0]
-        if rec.dma_done > rt.engine.now:
+        if rec.dma_done > rt.sub.now:
             if not rec.idle_counted:
                 rec.idle_counted = True
-                w.core.stats.idle_wait_dma += rec.dma_done - rt.engine.now
-            rt.engine.at(rec.dma_done, self.try_start, w)
+                rt.sub.stats(w).idle_wait_dma += rec.dma_done - rt.sub.now
+            rt.sub.timer(rec.dma_done, Message("w_try_start", (w,)))
             return
         w.queue.pop(0)
         w.running = rec
-        rec.start = max(rt.engine.now, w.core.next_free)
-        rt.engine.at(rec.start, self.exec_task, w, rec)
+        rec.start = max(rt.sub.now, rt.sub.next_free(w))
+        rt.sub.timer(rec.start, Message("w_exec", (w, rec)))
 
     # ---- execution ----------------------------------------------------------
 
@@ -215,15 +225,16 @@ class WorkerAgent:
         ctx = rec.ctx
         task.state = WAITING
         task.wait_remaining = len(spec.args)
-        w.core.occupy(rec.start, ctx.cursor)
-        w.core.stats.task_cycles += ctx.cursor
+        rt.sub.occupy(w, rec.start, ctx.cursor)
+        rt.sub.stats(w).task_cycles += ctx.cursor
         w.running = None
         w.suspended[task.tid] = rec
         # WAIT message to the owner, which enqueues WAIT entries at the
         # waited nodes (sys_wait, paper SV-A)
-        rt.hier.send(w, task.owner, rt.cost.complete_proc_base,
-                     rt.sched_agent.h_wait, task, list(spec.args),
-                     send_time=ctx.now)
+        rt.sub.send(w, task.owner,
+                    Message("s_wait", (task, list(spec.args)),
+                            cost=rt.cost.complete_proc_base),
+                    send_time=ctx.now)
         self.try_start(w)
 
     def h_resume(self, w: WorkerNode, task: Task) -> None:
@@ -231,7 +242,8 @@ class WorkerAgent:
         rec = w.suspended.pop(task.tid)
         if w.running is not None:
             # run after the current task; keep FIFO order ahead of queue
-            rt.engine.at(w.core.next_free, self.resume_retry, w, rec)
+            rt.sub.timer(rt.sub.next_free(w),
+                         Message("w_resume_retry", (w, rec)))
             w.suspended[task.tid] = rec
             return
         self.continue_gen(w, rec)
@@ -239,7 +251,8 @@ class WorkerAgent:
     def resume_retry(self, w: WorkerNode, rec: ExecRecord) -> None:
         rt = self.rt
         if w.running is not None:
-            rt.engine.at(w.core.next_free, self.resume_retry, w, rec)
+            rt.sub.timer(rt.sub.next_free(w),
+                         Message("w_resume_retry", (w, rec)))
             return
         if rec.task.tid in w.suspended:
             w.suspended.pop(rec.task.tid)
@@ -250,7 +263,7 @@ class WorkerAgent:
         task = rec.task
         task.state = RUNNING
         w.running = rec
-        rec.start = max(rt.engine.now, w.core.next_free)
+        rec.start = max(rt.sub.now, rt.sub.next_free(w))
         # the generator closed over rec.ctx: rebase it for this activation
         rec.ctx.t0 = rec.start
         rec.ctx.cursor = 0.0
@@ -264,14 +277,14 @@ class WorkerAgent:
         ctx = rec.ctx
         task.last_exec_cycles = ctx.cursor
         end = rec.start + ctx.cursor
-        w.core.occupy(rec.start, ctx.cursor)
-        w.core.stats.task_cycles += ctx.cursor
-        w.core.stats.tasks_executed += 1
+        rt.sub.occupy(w, rec.start, ctx.cursor)
+        rt.sub.stats(w).task_cycles += ctx.cursor
+        rt.sub.stats(w).tasks_executed += 1
         w.running = None
         cost = (rt.cost.complete_proc_base
                 + rt.cost.complete_per_arg * len(task.dep_args))
-        rt.hier.send(w, task.owner, cost, rt.sched_agent.h_complete, task,
-                     send_time=end)
+        rt.sub.send(w, task.owner, Message("s_complete", (task,), cost=cost),
+                    send_time=end)
         # completion send cost on the worker
-        w.core.occupy(end, rt.cost.worker_complete_send)
-        rt.engine.at(w.core.next_free, self.try_start, w)
+        rt.sub.occupy(w, end, rt.cost.worker_complete_send)
+        rt.sub.timer(rt.sub.next_free(w), Message("w_try_start", (w,)))

@@ -27,6 +27,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core import In, InOut, Myrmics, Out, Safe, task
+from repro.core.payload import burn
 from repro.core.sim import CostModel
 
 
@@ -51,24 +52,32 @@ class OrchestratorConfig:
     slow_domains: dict = field(default_factory=dict)  # worker idx -> slowdown
     kill_at: tuple = ()                # (step, worker_idx) pairs
     join_at: dict = field(default_factory=dict)       # step -> extra domains
+    backend: str = "sim"               # "sim" (virtual) | "threads" (real)
 
 
 def run_training_schedule(cfg: OrchestratorConfig) -> list[StepStats]:
-    """Simulate ``steps`` optimizer steps scheduled by the Myrmics
-    runtime; returns per-step stats (virtual cycles, traffic)."""
+    """Run ``steps`` optimizer steps scheduled by the Myrmics runtime;
+    returns per-step stats.  On ``cfg.backend="sim"`` compute is
+    virtual cycles (deterministic scaling studies); on ``"threads"``
+    each microbatch burns real GIL-releasing compute on the concurrent
+    executor and the stats are wall-clock measurements."""
     rt = Myrmics(n_workers=cfg.n_domains,
                  sched_levels=list(cfg.sched_levels),
                  cost=CostModel.heterogeneous(),
-                 policy_p=cfg.policy_p)
+                 policy_p=cfg.policy_p,
+                 backend=cfg.backend)
     stats: list[StepStats] = []
 
     n_micro = cfg.n_domains * cfg.microbatches_per_domain
     slow = dict(cfg.slow_domains)
+    real = cfg.backend == "threads"
 
     @task
     def micro_task(ctx, g: Out, mb_idx: Safe):
         factor = slow.get(int(ctx.worker_id[1:]), 1.0)
         ctx.compute(cfg.compute_cycles * factor)
+        if real:
+            burn(cfg.compute_cycles * factor)
         g.write(("grad", mb_idx))
 
     @task
@@ -100,6 +109,94 @@ def run_training_schedule(cfg: OrchestratorConfig) -> list[StepStats]:
         stats.append(StepStats(cycles=per_step, dma_bytes=dma // cfg.steps,
                                msgs=msgs // cfg.steps))
     return stats
+
+
+def run_myrmics_training(model_cfg, *, seq_len: int = 64,
+                         global_batch: int = 8, steps: int = 10,
+                         n_shards: int = 2, seed: int = 0, opt=None,
+                         on_step=None, backend: str = "threads"):
+    """Data-parallel LM training *executed by the Myrmics runtime*.
+
+    Each optimizer step is a task DAG: ``n_shards`` gradient tasks
+    (each running the real jitted JAX loss/grad on its microbatch slice
+    against the parameters in the object store), then an update task
+    that averages the shard gradients and applies AdamW — dependencies
+    derived from the ``@task`` signatures, exactly like every other
+    Myrmics program.  On ``backend="threads"`` the gradient tasks run
+    concurrently on the worker pool (XLA releases the GIL), giving real
+    multicore data parallelism; ``backend="sim"`` runs the same DAG
+    deterministically for tests.
+
+    Returns ``(TrainReport, RunReport)``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import TokenDataset
+    from repro.models.transformer import LM
+    from repro.optim import AdamW
+    from repro.train.loop import TrainReport
+
+    if global_batch % n_shards:
+        raise ValueError(f"global_batch={global_batch} not divisible by "
+                         f"n_shards={n_shards}")
+    lm = LM(model_cfg)
+    opt = opt or AdamW(lr=1e-3, warmup_steps=max(steps // 10, 1),
+                       total_steps=steps)
+    data = TokenDataset(model_cfg, seq_len, global_batch, seed)
+    grad_fn = jax.jit(jax.value_and_grad(lm.loss))
+
+    params0 = lm.init(jax.random.PRNGKey(seed))
+    opt0 = opt.init(params0)
+    param_bytes = int(sum(x.size * x.dtype.itemsize
+                          for x in jax.tree.leaves(params0)))
+    per_shard = global_batch // n_shards
+    report = TrainReport()
+
+    @task
+    def grad_shard(ctx, g: Out, loss_o: Out, p: In, batch: Safe):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        loss, grads = grad_fn(p.read(), b)
+        g.write(grads)
+        loss_o.write(float(loss))
+
+    @task
+    def apply_update(ctx, p: InOut, o: InOut, step_r: In, gs: Safe):
+        grads = [g.read() for g in gs]
+        avg = jax.tree.map(lambda *x: sum(x) / len(x), *grads)
+        params, opt_state, _ = opt.update(avg, o.read(), p.read())
+        p.write(params)
+        o.write(opt_state)
+
+    def main(ctx, root):
+        p_obj = ctx.alloc(param_bytes, root, label="params")
+        o_obj = ctx.alloc(param_bytes, root, label="opt")
+        ctx.write(p_obj, params0)
+        ctx.write(o_obj, opt0)
+        for step in range(steps):
+            step_r = ctx.ralloc(root, 1, label=f"step{step}")
+            gs = ctx.balloc(param_bytes, step_r, n_shards,
+                            label=f"g{step}")
+            ls = ctx.balloc(8, step_r, n_shards, label=f"l{step}")
+            batch = data.get_batch(step)
+            for i in range(n_shards):
+                shard = {k: v[i * per_shard:(i + 1) * per_shard]
+                         for k, v in batch.items()}
+                ctx.spawn(grad_shard, gs[i], ls[i], p_obj, shard,
+                          name=f"grad{step}.{i}")
+            ctx.spawn(apply_update, p_obj, o_obj, step_r, list(gs),
+                      name=f"upd{step}")
+            yield ctx.wait([InOut(root)])
+            losses = [ctx.read(lo) for lo in ls]
+            report.losses.append(sum(losses) / len(losses))
+            report.steps_run += 1
+            if on_step is not None:
+                on_step(step, report.losses[-1])
+            ctx.rfree(step_r)
+
+    rt = Myrmics(n_workers=n_shards, sched_levels=[1], backend=backend)
+    run_rep = rt.run(main)
+    return report, run_rep
 
 
 def locality_sweep(policy_points=(100, 80, 60, 40, 20, 0), **kw):

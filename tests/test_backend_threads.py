@@ -1,0 +1,399 @@
+"""The substrate refactor's two contracts.
+
+1. **Backend equivalence**: the threaded backend executes real task
+   bodies concurrently, yet its final object-store state must be
+   bit-identical to the serial elision for any well-formed program —
+   including generator tasks that sys_wait mid-body.  Property-tested
+   with random task DAGs mixing In/Out/InOut args and waits.
+2. **Sim invariance**: moving the agents onto the substrate interface
+   must not move a single virtual cycle — fig7a/fig8 derived values are
+   pinned to the pre-refactor numbers.
+"""
+
+import os
+import random
+
+import pytest
+
+from repro.core import In, InOut, Myrmics, Out, Safe, SerialRuntime, task
+
+
+# ---------------------------------------------------------------------------
+# threaded backend: basic equivalence + mechanics
+# ---------------------------------------------------------------------------
+
+
+@task
+def t_init(ctx, o: Out, v: Safe):
+    o.write(v)
+
+
+@task
+def t_bump(ctx, o: InOut, dv: Safe):
+    o.write(o.read() + dv)
+
+
+@task
+def t_reduce(ctx, r: In, out: InOut, oids: Safe):
+    out.write(sum(o.read() for o in oids))
+
+
+def pipeline_app(ctx, root):
+    top = ctx.ralloc(root, 1, label="top")
+    oids = ctx.balloc(8, top, 6, label="x")
+    s = ctx.alloc(8, root, label="sum")
+    for i, o in enumerate(oids):
+        ctx.spawn(t_init, o, i)
+    for o in oids:
+        ctx.spawn(t_bump, o, 10)
+    for o in oids:
+        ctx.spawn(t_bump, o, 100)
+    ctx.spawn(t_reduce, top, s, list(oids))
+    yield ctx.wait([InOut(root)])
+
+
+@pytest.mark.parametrize("nw,levels", [(1, [1]), (4, [1]), (8, [1, 2])])
+def test_threads_matches_serial_pipeline(nw, levels):
+    sr = SerialRuntime()
+    sr.run(pipeline_app)
+    rt = Myrmics(n_workers=nw, sched_levels=levels, backend="threads")
+    rep = rt.run(pipeline_app)
+    assert rep.backend == "threads"
+    assert rep.tasks_spawned == rep.tasks_done
+    assert rt.labelled_storage() == sr.labelled_storage()
+
+
+def test_threads_generator_wait_and_nested_spawn():
+    """A mid-DAG generator task suspends on sys_wait (its pool thread is
+    released), resumes after its delegated subtree quiesces, and reads
+    its children's writes."""
+
+    def group(c, rid, oids):
+        for i, o in enumerate(oids):
+            c.spawn(t_init, o, i + 1)
+        yield c.wait([InOut(rid)])
+        total = sum(c.read(o) for o in oids)
+        c.write(oids[0], total)
+
+    def app(ctx, root):
+        rids = [ctx.ralloc(root, 1, label=f"r{g}") for g in range(3)]
+        groups = [ctx.balloc(8, rids[g], 4, label=f"o{g}")
+                  for g in range(3)]
+        for g in range(3):
+            ctx.spawn(group, [InOut(rids[g]), Safe(list(groups[g]))],
+                      name=f"grp{g}")
+        yield ctx.wait([InOut(root)])
+
+    sr = SerialRuntime()
+    sr.run(app)
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2], backend="threads")
+    rep = rt.run(app)
+    assert rep.tasks_spawned == rep.tasks_done
+    assert rt.labelled_storage() == sr.labelled_storage()
+
+
+def test_threads_task_error_propagates():
+    def boom(c, oid):
+        raise ValueError("task body failed")
+
+    def app(ctx, root):
+        o = ctx.alloc(8, root, label="o")
+        ctx.spawn(boom, [Out(o)])
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="threads")
+    with pytest.raises(ValueError, match="task body failed"):
+        rt.run(app)
+
+
+def test_threads_footprint_violation_surfaces():
+    """sys_spawn validation runs on the scheduler thread; the error must
+    re-raise at the spawning task's call site."""
+
+    def sneaky(c, oid, other):
+        c.spawn(t_init, other, 1)   # `other` outside sneaky's footprint
+
+    def app(ctx, root):
+        a = ctx.alloc(8, root, label="a")
+        b = ctx.alloc(8, root, label="b")
+        ctx.spawn(sneaky, [Out(a), Safe(b)])
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="threads")
+    with pytest.raises(ValueError, match="outside the parent's declared"):
+        rt.run(app)
+
+
+def test_threads_failure_unblocks_marshalled_calls():
+    """A failing task must not deadlock shutdown: workers blocked in
+    marshalled ctx.alloc/spawn calls are answered with the abort error
+    so pool teardown completes and the original error re-raises."""
+    import time
+
+    def boom(c, oid):
+        time.sleep(0.02)
+        raise ValueError("kaput")
+
+    def churner(c, oid, rid):
+        for _ in range(100):
+            c.alloc(8, rid)
+            time.sleep(0.002)
+
+    def app(ctx, root):
+        rid = ctx.ralloc(root, 1, label="r")
+        o1 = ctx.alloc(8, root, label="a")
+        churn = [ctx.alloc(8, rid, label=f"c{i}") for i in range(6)]
+        for o in churn:
+            ctx.spawn(churner, [Out(o), Safe(rid)])
+        ctx.spawn(boom, [Out(o1)])
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=7, sched_levels=[1], backend="threads",
+                 max_wall_s=30)
+    t0 = time.perf_counter()
+    with pytest.raises(ValueError, match="kaput"):
+        rt.run(app)
+    assert time.perf_counter() - t0 < 25, "shutdown hung"
+
+
+def test_threads_watchdog_terminates_runaway_spawn_loop():
+    """max_wall_s must actually stop a task that loops on marshalled
+    spawns: after shutdown begins, its next ctx.spawn fails fast
+    instead of dispatching inline on the pool thread (which would
+    stall pool teardown forever)."""
+    import time
+
+    def runaway(c, rid):
+        while True:
+            o = c.alloc(8, rid)
+            c.spawn(lambda cc, oo: None, [Out(o)])
+            time.sleep(0.001)
+
+    def app(ctx, root):
+        rid = ctx.ralloc(root, 1, label="r")
+        ctx.spawn(runaway, [InOut(rid)])
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="threads",
+                 max_wall_s=2)
+    t0 = time.perf_counter()
+    with pytest.raises(RuntimeError, match="max_wall_s"):
+        rt.run(app)
+    assert time.perf_counter() - t0 < 20, "watchdog did not unwind"
+
+
+def test_threads_rejects_until_and_honors_max_events():
+    def app(ctx, root):
+        o = ctx.alloc(8, root, label="o")
+        ctx.spawn(t_init, o, 1)
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="threads")
+    with pytest.raises(ValueError, match="virtual time"):
+        rt.run(app, until=1000)
+    rt2 = Myrmics(n_workers=2, sched_levels=[1], backend="threads",
+                  max_events=3)
+    with pytest.raises(RuntimeError, match="runaway"):
+        rt2.run(app)
+
+
+def test_threads_rejects_sim_only_features():
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="threads")
+    with pytest.raises(RuntimeError, match="virtual-time feature"):
+        rt.kill_worker("w0")
+    with pytest.raises(RuntimeError, match="sim"):
+        rt.add_worker("s0.0")
+    with pytest.raises(ValueError, match="unknown backend"):
+        Myrmics(backend="cuda")
+
+
+def test_threads_report_measures_wall_clock():
+    from repro.core.payload import burn
+
+    def crunch(c, oid):
+        c.write(oid, burn(3e6))
+
+    def app(ctx, root):
+        oids = ctx.balloc(8, root, 4, label="o")
+        for o in oids:
+            ctx.spawn(crunch, [Out(o)])
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="threads")
+    rep = rt.run(app)
+    # total_cycles is wall seconds; task bodies burned real time
+    assert 0 < rep.total_cycles < 60
+    task_s = sum(w.task_cycles for w in rep.workers.values())
+    assert task_s > 0
+    assert sum(w.tasks_executed for w in rep.workers.values()) == 5
+
+
+# ---------------------------------------------------------------------------
+# backend equivalence sweep: seeded-random DAGs with In/Out/InOut/wait
+# (the hypothesis-driven version lives in test_backend_threads_property.py;
+# this seeded sweep keeps the contract exercised when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+
+def random_program(rng: random.Random):
+    n_regions = rng.randint(1, 3)
+    parents = [rng.randint(-1, i - 1) if i else -1
+               for i in range(n_regions)]
+    n_objects = rng.randint(1, 5)
+    obj_region = [rng.randrange(n_regions) for _ in range(n_objects)]
+    ops = []
+    for _ in range(rng.randint(1, 10)):
+        kind = rng.choice(
+            ["obj_write", "obj_rmw", "region_reduce", "group_wait"])
+        if kind in ("obj_write", "obj_rmw"):
+            ops.append((kind, rng.randrange(n_objects), rng.randint(0, 100)))
+        else:
+            ops.append((kind, rng.randrange(n_regions), rng.randint(1, 5)))
+    return parents, obj_region, ops
+
+
+def _descends(r, anc, parents):
+    while r >= 0:
+        if r == anc:
+            return True
+        r = parents[r]
+    return False
+
+
+def build_wait_app(desc):
+    parents, obj_region, ops = desc
+
+    def app(ctx, root):
+        rids = []
+        for i, p in enumerate(parents):
+            parent = root if p < 0 else rids[p]
+            rids.append(ctx.ralloc(parent, i % 3, label=f"r{i}"))
+        oids = [ctx.alloc(64, rids[r], label=f"o{j}")
+                for j, r in enumerate(obj_region)]
+        region_objs = {i: [o for o, r in zip(oids, obj_region)
+                           if _descends(r, i, parents)]
+                       for i in range(len(parents))}
+        for j, o in enumerate(oids):
+            ctx.spawn(lambda c, oid, j=j: c.write(oid, j), [Out(o)])
+        for k, (kind, target, val) in enumerate(ops):
+            if kind == "obj_write":
+                ctx.spawn(lambda c, oid, v=val: c.write(oid, v),
+                          [Out(oids[target])])
+            elif kind == "obj_rmw":
+                ctx.spawn(
+                    lambda c, oid, v=val: c.write(oid, c.read(oid) * 3 + v),
+                    [InOut(oids[target])])
+            elif kind == "region_reduce":
+                objs = region_objs[target]
+                out = ctx.alloc(64, root, label=f"red{k}")
+                ctx.spawn(
+                    lambda c, rid, so, os=list(objs): c.write(
+                        so, sum(c.read(o) or 0 for o in os)),
+                    [In(rids[target]), InOut(out)])
+            else:  # group_wait: generator task spawning + waiting mid-body
+                objs = region_objs[target]
+                out = ctx.alloc(64, root, label=f"gw{k}")
+
+                def gw(c, rid, so, os=list(objs), v=val):
+                    for o in os:
+                        c.spawn(
+                            lambda cc, oo, vv=v: cc.write(
+                                oo, (cc.read(oo) or 0) + vv),
+                            [InOut(o)])
+                    yield c.wait([InOut(rid)])
+                    c.write(so, sum(c.read(o) or 0 for o in os))
+
+                ctx.spawn(gw, [InOut(rids[target]), InOut(out)])
+        yield ctx.wait([InOut(root)])
+
+    return app
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_threads_random_dags_match_serial_oracle(seed):
+    rng = random.Random(seed)
+    desc = random_program(rng)
+    app = build_wait_app(desc)
+    sr = SerialRuntime()
+    sr.run(app)
+    nw = rng.choice([2, 4])
+    levels = rng.choice([[1], [1, 2]])
+    rt = Myrmics(n_workers=nw, sched_levels=levels, backend="threads")
+    rep = rt.run(app)
+    assert rep.tasks_spawned == rep.tasks_done, "program hung"
+    assert rt.labelled_storage() == sr.labelled_storage()
+
+
+# ---------------------------------------------------------------------------
+# sim invariance: fig7a/fig8 derived values pinned through the refactor
+# ---------------------------------------------------------------------------
+
+
+def test_fig7a_derived_values_pinned():
+    from benchmarks.paper_figs import intrinsic_overhead
+    rows = intrinsic_overhead()
+    assert rows == [
+        {"mode": "heterogeneous", "spawn_cycles": 16140,
+         "exec_cycles": 13503, "paper_spawn": 16200, "paper_exec": 13300},
+        {"mode": "microblaze", "spawn_cycles": 37338,
+         "exec_cycles": 38160, "paper_spawn": 37400, "paper_exec": None},
+    ]
+
+
+def test_fig8_jacobi_derived_values_pinned():
+    from benchmarks.paper_figs import scaling
+    rows = scaling(names=["jacobi"], workers=(8, 32))
+    pinned = {
+        ("mpi", 8): 64015330, ("flat", 8): 94143113,
+        ("hier", 8): 130562026,
+        ("mpi", 32): 16015330, ("flat", 32): 35323761,
+        ("hier", 32): 43276192,
+    }
+    got = {(r["mode"], r["workers"]): r["cycles"] for r in rows}
+    assert got == pinned
+
+
+# ---------------------------------------------------------------------------
+# wall-clock scaling of the real-payload apps
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_threads_real_payload_speedup():
+    """More worker threads => less wall time on GIL-releasing payloads.
+
+    The achievable speedup is bounded by the machine: the acceptance
+    target (>=2x at 8 worker threads vs 1) needs >=6 real cores; on
+    smaller hosts the measurement runs at the core count (8 threads on
+    2 cores only measures oversubscription) with a scaled threshold."""
+    import time
+
+    from benchmarks.apps import run_app
+
+    cores = os.cpu_count() or 1
+    if cores < 2:
+        pytest.skip("single-core host: no parallel speedup to measure")
+    nw_hi = 8 if cores >= 6 else min(cores, 8)
+    threshold = 2.0 if cores >= 6 else (1.6 if cores >= 4 else 1.25)
+
+    def wall(name, nw, **kw):
+        # compensate chunks_per_worker so the task set is always the
+        # same 8 chunks (identical total payload at every worker
+        # count): only the executor parallelism varies.  Best of two
+        # runs: shared-CI boxes are noisy.
+        best = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            run_app(name, nw, "flat", backend="threads",
+                    chunks_per_worker=8 // nw, **kw)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    speedups = {}
+    for name, kw in (("raytrace", {"total_work": 768e6}),
+                     ("jacobi", {"total_work": 768e6, "steps": 2})):
+        one = wall(name, 1, **kw)
+        many = wall(name, nw_hi, **kw)
+        speedups[name] = one / many
+    assert sum(s >= threshold for s in speedups.values()) >= 2, \
+        (speedups, nw_hi, cores)

@@ -1,0 +1,47 @@
+"""Hypothesis property test for the backend equivalence contract:
+random task DAGs with mixed In/Out/InOut args and mid-body sys_waits
+must leave the threaded backend's object store bit-identical to the
+serial elision.  Skipped when hypothesis is unavailable (the seeded
+sweep in test_backend_threads.py still runs)."""
+
+import pytest
+
+from repro.core import Myrmics, SerialRuntime
+
+from test_backend_threads import build_wait_app
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@st.composite
+def wait_programs(draw):
+    n_regions = draw(st.integers(1, 3))
+    parents = [draw(st.integers(-1, i - 1)) for i in range(n_regions)]
+    n_objects = draw(st.integers(1, 5))
+    obj_region = [draw(st.integers(0, n_regions - 1))
+                  for _ in range(n_objects)]
+    ops = []
+    for _ in range(draw(st.integers(1, 10))):
+        kind = draw(st.sampled_from(
+            ["obj_write", "obj_rmw", "region_reduce", "group_wait"]))
+        if kind in ("obj_write", "obj_rmw"):
+            ops.append((kind, draw(st.integers(0, n_objects - 1)),
+                        draw(st.integers(0, 100))))
+        else:
+            ops.append((kind, draw(st.integers(0, n_regions - 1)),
+                        draw(st.integers(1, 5))))
+    return parents, obj_region, ops
+
+
+@settings(max_examples=20, deadline=None)
+@given(desc=wait_programs(), nw=st.sampled_from([2, 4]),
+       levels=st.sampled_from([[1], [1, 2]]))
+def test_threads_random_dags_match_serial_oracle(desc, nw, levels):
+    app = build_wait_app(desc)
+    sr = SerialRuntime()
+    sr.run(app)
+    rt = Myrmics(n_workers=nw, sched_levels=levels, backend="threads")
+    rep = rt.run(app)
+    assert rep.tasks_spawned == rep.tasks_done, "program hung"
+    assert rt.labelled_storage() == sr.labelled_storage()

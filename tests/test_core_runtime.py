@@ -230,3 +230,89 @@ def test_hierarchy_beats_single_scheduler_under_load():
     t_flat = Myrmics(n_workers=64, sched_levels=[1]).run(app)["total_cycles"]
     t_hier = Myrmics(n_workers=64, sched_levels=[1, 8]).run(app)["total_cycles"]
     assert t_hier < t_flat
+
+
+def test_kill_worker_with_suspended_tasks_refused_before_mutation():
+    """A refused kill (suspended mid-wait task present) must leave the
+    hierarchy fully intact — the check runs before any state change."""
+
+    def group(c, rid, oids):
+        for i, o in enumerate(oids):
+            c.spawn(lambda cc, oo, v=i: cc.write(oo, v), [Out(o)],
+                    duration=2e6)
+        yield c.wait([InOut(rid)])
+        c.write(oids[0], sum(c.read(o) for o in oids))
+
+    def app(ctx, root):
+        rid = ctx.ralloc(root, 1, label="r")
+        oids = ctx.balloc(8, rid, 4, label="o")
+        ctx.spawn(group, [InOut(rid), Safe(list(oids))])
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=1, sched_levels=[1])
+    # while `group` is suspended mid-wait (its children are running),
+    # the kill must be refused atomically
+    rt.kill_worker("w0", at=1.5e6)
+    with pytest.raises(RuntimeError, match="suspended tasks present"):
+        rt.run(app)
+    w = rt.hier.by_id["w0"]
+    assert "w0" not in rt.dead_workers
+    assert w in w.parent.workers
+    assert "w0" in w.parent.load
+    assert rt.tasks_rescheduled == 0
+    # the worker still has its suspended record: nothing was torn down
+    assert w.suspended
+
+
+def test_holder_wait_bypasses_blocked_foreign_arg():
+    """deps regression: two generator tasks contending for one region.
+    The first holder's sys_wait lands behind the second task's blocked
+    ARG; the WAIT rides the holder's active claim (else: deadlock)."""
+
+    def group(c, rid, oids, tag):
+        for o in oids:
+            c.spawn(lambda cc, oo, t=tag: cc.write(
+                oo, (cc.read(oo) or 0) + t), [InOut(o)])
+        yield c.wait([InOut(rid)])
+
+    def app(ctx, root):
+        rid = ctx.ralloc(root, 1, label="r")
+        oids = ctx.balloc(8, rid, 3, label="o")
+        ctx.spawn(group, [InOut(rid), Safe(list(oids)), Safe(1)])
+        ctx.spawn(group, [InOut(rid), Safe(list(oids)), Safe(10)])
+        yield ctx.wait([InOut(root)])
+
+    sr = SerialRuntime()
+    sr.run(app)
+    for nw, levels in ((1, [1]), (4, [1, 2])):
+        rt = Myrmics(n_workers=nw, sched_levels=levels)
+        rep = rt.run(app)
+        assert rep["tasks_spawned"] == rep["tasks_done"], "deadlocked"
+        assert rt.labelled_storage() == sr.labelled_storage()
+
+
+def test_microblaze_scales_every_scheduler_side_field():
+    """CostModel.microblaze is derived programmatically: every field
+    outside the worker-side exclusion set carries the homogeneous
+    factor, so a newly added scheduler-side cost cannot skip it."""
+    import dataclasses
+
+    h = CostModel.heterogeneous()
+    mb = CostModel.microblaze()
+    f = 3.617
+    assert mb.name == "microblaze"
+    scaled = excluded = 0
+    for fld in dataclasses.fields(CostModel):
+        if fld.name == "name":
+            continue
+        hv, mv = getattr(h, fld.name), getattr(mb, fld.name)
+        if fld.name in CostModel.WORKER_SIDE_FIELDS:
+            assert mv == hv, fld.name
+            excluded += 1
+        else:
+            assert mv == pytest.approx(hv * f), fld.name
+            scaled += 1
+    assert scaled > 0 and excluded > 0
+    # the exclusion set names real fields only (no typo rot)
+    field_names = {fld.name for fld in dataclasses.fields(CostModel)}
+    assert CostModel.WORKER_SIDE_FIELDS <= field_names
