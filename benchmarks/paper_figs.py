@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import math
 
-from repro.core import In, InOut, Myrmics, Out, task
+from repro.core import In, InOut, Myrmics, Out, Safe, task
 from repro.core.sim import CostModel
 
 from .apps import APPS, hier_levels, run_app
@@ -201,6 +201,117 @@ def region_ownership(workers=(16, 64, 128), n_groups: int = 24,
                 "cycles": round(rep.total_cycles),
             })
     return rows
+
+
+# -- Scheduler-tier decentralization: sched_scaling --------------------------------
+
+
+@task
+def run_group(ctx, g_rid: InOut.nt, *, n: Safe, work: Safe):
+    """Coarse per-group task: spawns its group's fine tasks from the
+    worker core, so spawn handling and dependency analysis land on the
+    leaf scheduler that owns the group region (paper SVI-B)."""
+    for _ in range(n):
+        o = ctx.alloc(64, g_rid)
+        ctx.spawn(produce, o, duration=work)
+
+
+def _sched_saturation_app(n_groups_: int, per_group: int, task_size: float):
+    """Spawn-heavy hierarchical program over ``n_groups_`` level-1
+    regions: region ownership (and with it allocation, spawn handling,
+    dependency analysis and packing for the fine tasks) spreads across
+    the leaf schedulers, while near-empty tasks keep the whole
+    scheduler tier saturated (paper SVI-E)."""
+
+    def main(ctx, root):
+        rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(n_groups_)]
+        for rid in rids:
+            ctx.spawn(run_group, rid, n=per_group, work=task_size)
+        yield ctx.wait([InOut(root)])
+
+    return main
+
+
+def sched_scaling(workers: int = 64, scheds=(1, 2, 4, 8),
+                  tasks_per_worker: int = 4,
+                  task_size: float = 22_500.0) -> list[dict]:
+    """The paper's headline design point, measured directly: fix the
+    worker count and task set, sweep the number of (leaf) scheduler
+    nodes, and report per-scheduler occupancy and mailbox queue delay
+    in sim virtual time.  Decentralizing the tier must drain the
+    hottest mailbox: peak queue delay decreases as schedulers are
+    added."""
+    from repro.core.trace import sched_summary
+
+    cm = CostModel.microblaze()
+    n_groups_ = max(scheds)          # identical task set at every point
+    per_group = workers * tasks_per_worker // n_groups_
+    rows = []
+    for s in scheds:
+        levels = [1] if s == 1 else [1, s]
+        rt = Myrmics(n_workers=workers, sched_levels=levels, cost=cm)
+        rep = rt.run(_sched_saturation_app(n_groups_, per_group, task_size))
+        assert rep.tasks_spawned == rep.tasks_done
+        per_sched = sched_summary(rep, ndigits=1)
+        delays = [r["queue_delay"] for r in per_sched]
+        occs = [r["occupancy"] for r in per_sched]
+        rows.append({
+            "schedulers": len(per_sched),
+            "levels": levels,
+            "workers": workers,
+            "cycles": round(rep.total_cycles),
+            "peak_queue_delay": max(delays),
+            "mean_queue_delay": round(sum(delays) / len(delays), 1),
+            "max_occupancy": round(max(occs), 3),
+            "mean_occupancy": round(sum(occs) / len(occs), 3),
+            "per_sched": per_sched,
+        })
+    return rows
+
+
+def threads_smoke(scheds: int = 2, n_workers: int = 4) -> list[dict]:
+    """Concurrent-executor smoke at >1 scheduler thread: a real
+    multi-scheduler threads-backend run whose object store must match
+    the serial oracle.  The derived values are deterministic (wall
+    time goes into the harness ``us_per_call`` / ``samples_us``)."""
+    from repro.core import SerialRuntime, task as task_
+
+    @task_
+    def t_set(ctx, o: Out, v: Safe):
+        o.write(v)
+
+    @task_
+    def t_add(ctx, o: InOut, dv: Safe):
+        o.write(o.read() + dv)
+
+    def app(ctx, root):
+        grps = [ctx.ralloc(root, 1, label=f"r{g}") for g in range(scheds * 2)]
+        oids = [ctx.alloc(8, g, label=f"o{i}") for i, g in enumerate(grps)]
+        for i, o in enumerate(oids):
+            ctx.spawn(t_set, o, i)
+        for o in oids:
+            ctx.spawn(t_add, o, 100)
+        yield ctx.wait([InOut(root)])
+
+    sr = SerialRuntime()
+    sr.run(app)
+    rt = Myrmics(n_workers=n_workers, sched_levels=[1, scheds],
+                 backend="threads")
+    rep = rt.run(app)
+    matches = rt.labelled_storage() == sr.labelled_storage()
+    # the whole point of this row is the correctness signal: a store
+    # mismatch must fail the harness (and the CI smoke step), not just
+    # record false in the JSON
+    assert matches, (
+        f"threads backend diverged from the serial oracle: "
+        f"{rt.labelled_storage()} != {sr.labelled_storage()}")
+    return [{
+        "backend": "threads",
+        "sched_threads": rt.sub.scheduler_threads,
+        "workers": n_workers,
+        "tasks": rep.tasks_done,
+        "matches_serial": matches,
+    }]
 
 
 # -- Fig. 12b: deeper hierarchies -------------------------------------------------------

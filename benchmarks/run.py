@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only ROW]
                                             [--list] [--out FILE]
+                                            [--repeat N]
 
 Prints ``name,us_per_call,derived`` CSV rows: ``us_per_call`` is the
 harness wall time per simulated run; ``derived`` carries the
@@ -10,9 +11,13 @@ Default is a reduced grid that finishes in a few minutes on one CPU
 core; ``--full`` runs the paper-sized grids.  ``--only`` must name one
 of the known benchmark rows (see ``--help``); an unknown name is an
 error, not a silent no-op.  ``--list`` prints the known rows and exits.
-``--out FILE`` additionally writes the emitted rows as structured JSON
-(``[{"name", "us_per_call", "derived"}, ...]``) so tooling consumes
-them without scraping the CSV.
+``--repeat N`` runs each row N times and emits the *median* wall time
+(derived values come from the first run; on the sim backend they are
+deterministic, and wall-clock rows like ``threads_smoke`` are noisy
+single-shot otherwise).  ``--out FILE`` additionally writes the
+emitted rows as structured JSON (``[{"name", "us_per_call",
+"samples_us", "derived"}, ...]``) so tooling consumes them without
+scraping the CSV — ``samples_us`` holds the raw per-repeat samples.
 """
 
 from __future__ import annotations
@@ -20,8 +25,87 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import statistics
 import sys
 import time
+
+
+def _row_fns():
+    """name -> callable(full) returning (rows, n_runs); None rows mean
+    the row is skipped in this environment (e.g. missing reports/)."""
+    from repro.core.sim import CostModel
+
+    from . import paper_figs as F
+
+    def fig7a(full):
+        return F.intrinsic_overhead(), 2
+
+    def fig7b(full):
+        workers = (1, 4, 16, 64, 128, 256) if full else (1, 16, 64, 128)
+        rows = F.granularity(workers=workers)
+        return rows, len(rows)
+
+    def fig12a(full):
+        rows = F.granularity(task_sizes=(1e6,),
+                             workers=(1, 4, 16, 64, 128) if full
+                             else (1, 16, 64),
+                             cost=CostModel.microblaze())
+        return rows, len(rows)
+
+    def fig8(full):
+        workers = (8, 16, 32, 64, 128, 256) if full else (8, 32, 64)
+        rows = F.scaling(workers=workers)
+        return rows, len(rows)
+
+    def fig9(full):
+        workers = (32, 64, 128, 256) if full else (32, 64)
+        rows = F.breakdown(workers=workers)
+        return rows, len(rows)
+
+    def fig11(full):
+        rows = F.locality_sweep()
+        return rows, len(rows)
+
+    def svc(full):
+        workers = (16, 64, 128, 256) if full else (16, 64, 128)
+        rows = F.region_ownership(workers=workers)
+        return rows, len(rows)
+
+    def sched_scaling(full):
+        scheds = (1, 2, 4, 8, 16) if full else (1, 2, 4, 8)
+        rows = F.sched_scaling(scheds=scheds)
+        return rows, len(rows)
+
+    def fig12b(full):
+        workers = (32, 64, 128, 256) if full else (32, 64, 128)
+        rows = F.hierarchy_depth(workers=workers)
+        return rows, len(rows)
+
+    def threads_smoke(full):
+        rows = F.threads_smoke()
+        return rows, len(rows)
+
+    def roofline(full):
+        if not os.path.isdir("reports"):
+            return None, 1
+        from repro.roofline.report import summarize
+        rows = summarize("reports")
+        return rows, max(len(rows), 1)
+
+    return (
+        ("fig7a_intrinsic_overhead", fig7a),
+        ("fig7b_granularity", fig7b),
+        ("fig12a_granularity_microblaze", fig12a),
+        ("fig8_scaling", fig8),
+        ("fig9_breakdown", fig9),
+        ("fig11_locality_sweep", fig11),
+        ("svc_region_ownership", svc),
+        ("sched_scaling", sched_scaling),
+        ("fig12b_hierarchy_depth", fig12b),
+        ("threads_smoke", threads_smoke),
+        ("roofline_table", roofline),
+    )
+
 
 #: Every benchmark row this harness can emit, in emission order.
 ROWS = (
@@ -32,7 +116,9 @@ ROWS = (
     "fig9_breakdown",
     "fig11_locality_sweep",
     "svc_region_ownership",
+    "sched_scaling",
     "fig12b_hierarchy_depth",
+    "threads_smoke",
     "roofline_table",
 )
 
@@ -41,12 +127,13 @@ ROWS = (
 EMITTED: list[dict] = []
 
 
-def _emit(name: str, wall_s: float, n_runs: int, rows: list[dict]) -> None:
-    us = wall_s * 1e6 / max(n_runs, 1)
+def _emit(name: str, us_per_call: float, samples_us: list[float],
+          rows: list[dict]) -> None:
     derived = json.dumps(rows, separators=(",", ":"))
-    print(f"{name},{us:.0f},{derived}")
+    print(f"{name},{us_per_call:.0f},{derived}")
     sys.stdout.flush()
-    EMITTED.append({"name": name, "us_per_call": round(us),
+    EMITTED.append({"name": name, "us_per_call": round(us_per_call),
+                    "samples_us": [round(s) for s in samples_us],
                     "derived": rows})
 
 
@@ -58,10 +145,12 @@ def main() -> None:
                     + ", ".join(ROWS))
     ap.add_argument("--list", action="store_true",
                     help="print the known benchmark rows and exit")
+    ap.add_argument("--repeat", type=int, default=1, metavar="N",
+                    help="run each row N times; emit the median wall "
+                    "time (derived values from the first run)")
     ap.add_argument("--out", default=None, metavar="FILE",
                     help="also write the emitted rows as JSON to FILE")
     args = ap.parse_args()
-    full = args.full
 
     if args.list:
         print("\n".join(ROWS))
@@ -72,66 +161,27 @@ def main() -> None:
               + "\n  ".join(ROWS), file=sys.stderr)
         sys.exit(2)
 
-    from . import paper_figs as F
+    if args.repeat < 1:
+        print("error: --repeat must be >= 1", file=sys.stderr)
+        sys.exit(2)
 
-    def want(name):
-        return args.only is None or args.only == name
-
-    if want("fig7a_intrinsic_overhead"):
-        t0 = time.time()
-        rows = F.intrinsic_overhead()
-        _emit("fig7a_intrinsic_overhead", time.time() - t0, 2, rows)
-
-    if want("fig7b_granularity"):
-        t0 = time.time()
-        workers = (1, 4, 16, 64, 128, 256) if full else (1, 16, 64, 128)
-        rows = F.granularity(workers=workers)
-        _emit("fig7b_granularity", time.time() - t0, len(rows), rows)
-
-    if want("fig12a_granularity_microblaze"):
-        from repro.core.sim import CostModel
-        t0 = time.time()
-        rows = F.granularity(task_sizes=(1e6,),
-                             workers=(1, 16, 64) if not full
-                             else (1, 4, 16, 64, 128),
-                             cost=CostModel.microblaze())
-        _emit("fig12a_granularity_microblaze", time.time() - t0, len(rows),
-              rows)
-
-    if want("fig8_scaling"):
-        t0 = time.time()
-        workers = (8, 16, 32, 64, 128, 256) if full else (8, 32, 64)
-        rows = F.scaling(workers=workers)
-        _emit("fig8_scaling", time.time() - t0, len(rows), rows)
-
-    if want("fig9_breakdown"):
-        t0 = time.time()
-        workers = (32, 64, 128, 256) if full else (32, 64)
-        rows = F.breakdown(workers=workers)
-        _emit("fig9_breakdown", time.time() - t0, len(rows), rows)
-
-    if want("fig11_locality_sweep"):
-        t0 = time.time()
-        rows = F.locality_sweep()
-        _emit("fig11_locality_sweep", time.time() - t0, len(rows), rows)
-
-    if want("svc_region_ownership"):
-        t0 = time.time()
-        workers = (16, 64, 128, 256) if full else (16, 64, 128)
-        rows = F.region_ownership(workers=workers)
-        _emit("svc_region_ownership", time.time() - t0, len(rows), rows)
-
-    if want("fig12b_hierarchy_depth"):
-        t0 = time.time()
-        workers = (32, 64, 128, 256) if full else (32, 64, 128)
-        rows = F.hierarchy_depth(workers=workers)
-        _emit("fig12b_hierarchy_depth", time.time() - t0, len(rows), rows)
-
-    if want("roofline_table") and os.path.isdir("reports"):
-        t0 = time.time()
-        from repro.roofline.report import summarize
-        rows = summarize("reports")
-        _emit("roofline_table", time.time() - t0, max(len(rows), 1), rows)
+    for name, fn in _row_fns():
+        if args.only is not None and args.only != name:
+            continue
+        rows = None
+        samples = []
+        for _ in range(args.repeat):
+            t0 = time.time()
+            r, n_runs = fn(args.full)
+            dt = time.time() - t0
+            if r is None:
+                break
+            samples.append(dt * 1e6 / max(n_runs, 1))
+            if rows is None:
+                rows = r
+        if rows is None:
+            continue
+        _emit(name, statistics.median(samples), samples, rows)
 
     if args.out is not None:
         with open(args.out, "w") as f:

@@ -11,9 +11,11 @@ split into role-scoped agents wired together by the ``runtime`` facade:
   ``Substrate``, ``SimSubstrate``): agents talk to this, backends
   implement it
 * ``backend_threads`` — the real concurrent executor
-  (``Myrmics(backend="threads")``): scheduler thread + worker pool
+  (``Myrmics(backend="threads")``): one mailbox + thread per scheduler
+  node, plus a worker pool
 * ``regions``      — sharded region directory (one shard per scheduler)
-* ``deps``         — per-node dependency state machine
+* ``deps``         — dependency state machine, sharded per scheduler
+  (``DepShard``) behind a routing coordinator (``DepEngine``)
 * ``sched``        — scheduler/worker tree + locality/balance scoring
 * ``sched_agent``  — scheduler-role handlers (spawn/descend/complete/migrate)
 * ``worker_agent`` — sim worker-role handlers (dispatch/DMA/exec/wait/backup)
@@ -35,10 +37,12 @@ from .api import (
     current_ctx,
     task,
 )
+from .deps import DepEngine, DepShard
 from .regions import (
     MODE_READ,
     MODE_WRITE,
     ROOT_RID,
+    AncestryCache,
     Directory,
     DirectoryShard,
 )
@@ -55,7 +59,8 @@ __all__ = [
     "Arg", "In", "InOut", "Out", "Safe", "NOTRANSFER",
     "task", "TaskFn", "RegionRef", "ObjRef", "RunReport", "current_ctx",
     "Myrmics", "SerialRuntime", "SerialContext", "Task", "TaskContext",
-    "CostModel", "Engine", "Directory", "DirectoryShard",
+    "CostModel", "Engine", "Directory", "DirectoryShard", "AncestryCache",
+    "DepEngine", "DepShard",
     "Message", "Substrate", "SimSubstrate",
     "MODE_READ", "MODE_WRITE", "ROOT_RID",
 ]

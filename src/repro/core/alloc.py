@@ -1,14 +1,19 @@
 """Memory-allocation agent: sys_ralloc / sys_alloc / sys_balloc / free.
 
-Role-scoped slice of the runtime (paper SV-B): allocation requests are
-messages from the calling worker to the scheduler that owns the target
-region; the owner creates the node in its directory shard and charges
-the request processing on its core.  Task bodies reach these handlers
-through ``rt.sub.call`` — on the sim substrate that is a synchronous
-call at the spawn site (mutations synchronous, cycle costs travel as
-charge messages through the substrate); on the threaded substrate the
-call is marshalled to the scheduler thread, so directory mutation stays
-single-threaded.
+Role-scoped slice of the runtime (paper SV-B), instantiated *per
+scheduler node*: allocation requests are messages from the calling
+worker to the scheduler that owns the target region; that owner's
+agent creates the node in its directory shard and charges the request
+processing on its core.  Task bodies reach these handlers through
+``rt.sub.call`` — on the sim substrate that is a synchronous call at
+the spawn site (mutations synchronous, cycle costs travel as charge
+messages through the substrate); on the threaded substrate the call is
+marshalled to the owning scheduler's mailbox, so directory mutation for
+a node only ever happens in its owner's execution context.  Scheduler
+bookkeeping that belongs to a *different* node than the handling one
+(the region-load counter of a delegated-down region owner, and the
+migration scan it may trigger) is applied through the substrate's
+uncharged ``update`` channel.
 
 Region placement (paper SV-C): a new region is delegated down the
 scheduler tree toward ``level_hint``, choosing the least-loaded child at
@@ -19,6 +24,7 @@ from __future__ import annotations
 
 from typing import TYPE_CHECKING
 
+from .regions import AncestryCache
 from .sched import SchedNode
 from .substrate import Message
 
@@ -27,10 +33,12 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guard
 
 
 class AllocAgent:
-    """Allocation/free handlers, acting on the owning scheduler."""
+    """One scheduler node's allocation/free handlers.  Shares its
+    scheduler's :class:`~.regions.AncestryCache` for owner routes."""
 
-    def __init__(self, rt: "Myrmics"):
+    def __init__(self, rt: "Myrmics", cache: AncestryCache):
         self.rt = rt
+        self.cache = cache
 
     def _require_region(self, nid: int, call: str) -> None:
         """Allocation targets must be regions — objects cannot contain
@@ -43,18 +51,29 @@ class AllocAgent:
 
     def assign_region_owner(self, parent_rid: int, level_hint: int) -> SchedNode:
         rt = self.rt
-        s = rt.sched_of(rt.dir.owner_of(parent_rid))
+        s = rt.sched_of(self.cache.owner_of(parent_rid))
         while s.depth < level_hint and s.children:
             s = min(s.children, key=lambda c: (c.region_load, c.core_id))
         return s
+
+    @staticmethod
+    def _note_alloc(owner: SchedNode, n: int, fresh_region: bool) -> None:
+        """Directory-load bookkeeping, in the owning scheduler's
+        context."""
+        owner.region_load += n
+        if fresh_region:
+            owner.migrate_no_fit = False  # fresh migration candidate
+
+    def _owner_scan(self, owner: SchedNode) -> None:
+        """Run the owner's migration scan in the owner's context."""
+        self.rt.sub.update(owner, self.rt.agent_of(owner).maybe_migrate)
 
     def sys_ralloc(self, parent_rid: int, level_hint: int,
                    ctx: "TaskContext | None", label: str | None = None) -> int:
         rt = self.rt
         self._require_region(parent_rid, "ralloc")
         owner = self.assign_region_owner(parent_rid, level_hint)
-        owner.region_load += 1
-        owner.migrate_no_fit = False   # fresh region = fresh migration candidate
+        rt.sub.update(owner, self._note_alloc, owner, 1, True)
         rid = rt.dir.new_region(parent_rid, owner.core_id, level_hint)
         if label is not None:
             rt.labels[rid] = label
@@ -62,15 +81,15 @@ class AllocAgent:
             rt.sub.send(ctx.worker, owner,
                         Message("noop", cost=rt.cost.ralloc_proc),
                         send_time=ctx.now)
-        rt.sched_agent.maybe_migrate(owner)
+        self._owner_scan(owner)
         return rid
 
     def sys_alloc(self, size: int, rid: int, ctx: "TaskContext | None",
                   label: str | None = None) -> int:
         rt = self.rt
         self._require_region(rid, "alloc")
-        owner = rt.sched_of(rt.dir.owner_of(rid))
-        owner.region_load += 1
+        owner = rt.sched_of(self.cache.owner_of(rid))
+        rt.sub.update(owner, self._note_alloc, owner, 1, False)
         oid = rt.dir.new_object(rid, owner.core_id, size)
         if label is not None:
             rt.labels[oid] = label
@@ -78,15 +97,15 @@ class AllocAgent:
             rt.sub.send(ctx.worker, owner,
                         Message("noop", cost=rt.cost.alloc_proc),
                         send_time=ctx.now)
-        rt.sched_agent.maybe_migrate(owner)
+        self._owner_scan(owner)
         return oid
 
     def sys_balloc(self, size: int, rid: int, num: int,
                    ctx: "TaskContext | None", label: str | None = None) -> list[int]:
         rt = self.rt
         self._require_region(rid, "balloc")
-        owner = rt.sched_of(rt.dir.owner_of(rid))
-        owner.region_load += num
+        owner = rt.sched_of(self.cache.owner_of(rid))
+        rt.sub.update(owner, self._note_alloc, owner, num, False)
         oids = [rt.dir.new_object(rid, owner.core_id, size)
                 for _ in range(num)]
         if label is not None:
@@ -98,7 +117,7 @@ class AllocAgent:
                 Message("noop", cost=rt.cost.alloc_proc
                         + rt.cost.balloc_per_obj * num),
                 send_time=ctx.now)
-        rt.sched_agent.maybe_migrate(owner)
+        self._owner_scan(owner)
         return oids
 
     def sys_free(self, oid: int, ctx: "TaskContext | None") -> None:
@@ -109,11 +128,12 @@ class AllocAgent:
 
     def _free_common(self, nid: int, ctx: "TaskContext | None") -> None:
         rt = self.rt
-        owner = rt.sched_of(rt.dir.owner_of(nid))
+        owner = rt.sched_of(self.cache.owner_of(nid))
         for freed in rt.dir.free(nid):
-            node = rt.deps.nodes.pop(freed, None)
-            if node is not None and not node.idle():
-                raise RuntimeError(f"freeing busy node {freed}")
+            # dependency state is dropped through the dep coordinator:
+            # nodes delegated to other schedulers are dropped in *their*
+            # owner's execution context, never reached into directly.
+            rt.deps.drop(freed)
             rt.storage.pop(freed, None)
         if ctx is not None:
             rt.sub.send(ctx.worker, owner,

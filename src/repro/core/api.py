@@ -402,3 +402,24 @@ class RunReport:
         if key not in _REPORT_FIELDS:
             raise KeyError(key)
         return getattr(self, key)
+
+    def sched_summary(self) -> dict[str, dict]:
+        """Per-scheduler decentralization stats: messages handled,
+        mailbox queue delay and occupancy for every scheduler node
+        (sim: virtual cycles / fractions of virtual time; threads:
+        wall seconds measured on the per-scheduler mailbox threads).
+        This is the quantity the ``sched_scaling`` benchmark row
+        sweeps; :func:`repro.core.trace.sched_summary` renders it as
+        rows."""
+        total = self.total_cycles or 1.0
+        out = {}
+        for core_id, st in self.scheds.items():
+            msgs = st.msgs_handled
+            out[core_id] = {
+                "msgs_handled": msgs,
+                "queue_delay": st.queue_delay_cycles,
+                "mean_queue_delay":
+                    st.queue_delay_cycles / msgs if msgs else 0.0,
+                "occupancy": st.busy_cycles / total,
+            }
+        return out

@@ -3,13 +3,18 @@
 ``Myrmics(backend="threads")`` runs the *same* scheduler/dependency
 agents as the virtual-time simulation, but over this substrate:
 
-* **scheduler side** — all scheduler-role handlers (spawn handling,
+* **scheduler tier** — one mailbox and one dedicated OS thread *per
+  scheduler node*.  Every scheduler-role message (spawn handling,
   dependency traversal, packing + descent, completion, quiesce,
-  allocation) execute on one dedicated scheduler thread draining a
-  message queue.  Directory shards, dependency queues and hierarchy
-  load counters are therefore only ever touched single-threaded, with
-  no locks in the agent logic — the same discipline the distributed
-  design imposes (state lives on its owner).
+  allocation) is queued to the owning scheduler's mailbox and drained
+  by that scheduler's thread, so handlers for different shards run
+  genuinely concurrently.  Each thread only ever touches its own
+  :class:`~.regions.DirectoryShard` / :class:`~.deps.DepShard` /
+  descent counters — the same no-locks-on-owned-state discipline the
+  distributed design imposes, now with real parallelism across the
+  scheduler tier.  Cross-scheduler interactions go queue-to-queue
+  (messages and uncharged ``update`` bookkeeping); the per-mailbox
+  wait time is measured into ``queue_delay_cycles`` per scheduler.
 * **worker side** — worker "cores" are a thread pool
   (:class:`~concurrent.futures.ThreadPoolExecutor`, one thread per
   worker node) executing actual Python/JAX task bodies against the
@@ -17,13 +22,15 @@ agents as the virtual-time simulation, but over this substrate:
   dispatch, NumPy BLAS, hashlib, zlib) run with genuine multicore
   parallelism.
 * **runtime services** — a task body's ``ctx.spawn/ralloc/alloc/...``
-  are marshalled to the scheduler thread as synchronous calls
-  (:meth:`ThreadSubstrate.call`), so footprint validation and
-  directory mutation happen on the owner, never concurrently.
+  are marshalled as synchronous calls to the mailbox of the *owning*
+  scheduler (``Myrmics._call_dest``): footprint validation and
+  directory mutation happen in the owner's execution context, never
+  concurrently with another handler for the same shard.
 * **accounting** — message costs are not charged: ``busy_cycles`` /
-  ``task_cycles`` in the :class:`~.api.RunReport` are wall-clock
-  seconds measured around each task activation and handler, and
-  ``total_cycles`` is the wall-clock duration of the run.
+  ``task_cycles`` / ``queue_delay_cycles`` in the
+  :class:`~.api.RunReport` are wall-clock seconds measured around each
+  task activation, handler and mailbox wait, and ``total_cycles`` is
+  the wall-clock duration of the run.
 
 Features that re-execute tasks (straggler backups, ``kill_worker``
 fault injection) are virtual-time-only: real task bodies have visible
@@ -49,7 +56,7 @@ from .substrate import Message, Substrate
 
 class _Call:
     """A synchronous runtime-service request marshalled from a worker
-    thread to the scheduler thread."""
+    thread to the owning scheduler's thread."""
 
     __slots__ = ("kind", "args", "done", "result", "error")
 
@@ -61,8 +68,23 @@ class _Call:
         self.error: BaseException | None = None
 
 
+class _Update:
+    """Uncharged cross-scheduler bookkeeping, applied in the
+    destination scheduler's execution context (queue-to-queue)."""
+
+    __slots__ = ("fn", "args")
+
+    def __init__(self, fn, args: tuple):
+        self.fn = fn
+        self.args = args
+
+
+_STOP = object()   # mailbox sentinel: scheduler thread exits
+
+
 class ThreadSubstrate(Substrate):
-    """Wall-clock substrate: scheduler thread + worker thread pool."""
+    """Wall-clock substrate: one thread per scheduler node + a worker
+    thread pool."""
 
     backend = "threads"
 
@@ -72,47 +94,108 @@ class ThreadSubstrate(Substrate):
         self.hier = hier
         self.max_wall_s = max_wall_s
         self.n_threads = n_threads or max(1, len(hier.workers))
-        self._inbox: queue.SimpleQueue = queue.SimpleQueue()
+        # one mailbox per scheduler node (the decentralized tier)
+        self._boxes: dict[str, queue.SimpleQueue] = {
+            s.core_id: queue.SimpleQueue() for s in hier.scheds
+        }
+        self._sched_by_id = {s.core_id: s for s in hier.scheds}
+        self._local = threading.local()    # .node = this thread's scheduler
         self._timers: list = []
         self._timer_seq = itertools.count()
         self._timer_lock = threading.Lock()
         self._stats_lock = threading.Lock()
-        self._inflight = 0
+        self._pending = 0                  # queued-but-unprocessed mailbox items
+        self._pending_lock = threading.Lock()
+        self._inflight = 0                 # running worker-pool jobs
         self._inflight_lock = threading.Lock()
         self._events = 0
+        self._events_lock = threading.Lock()
+        self._idle = threading.Event()     # nudges the monitor loop
         self._t0: float | None = None
         self._end: float | None = None
-        self._sched_tid: int | None = None
+        self._threads: list[threading.Thread] = []
         self._pool: ThreadPoolExecutor | None = None
         self._error: BaseException | None = None
         self._aborting = False
         self._max_events: int | None = None
 
+    # -- execution context ---------------------------------------------------
+
+    def executing_id(self) -> str | None:
+        node = getattr(self._local, "node", None)
+        return node.core_id if node is not None else None
+
+    @property
+    def scheduler_threads(self) -> int:
+        """Mailbox-draining threads: one per scheduler node."""
+        return len(self._boxes)
+
+    def _is_sched(self, node) -> bool:
+        return node is not None and node.core_id in self._boxes
+
     # -- messaging ----------------------------------------------------------
+
+    def _put(self, dst, payload) -> None:
+        with self._pending_lock:
+            self._pending += 1
+        self._boxes[dst.core_id].put((time.perf_counter(), payload))
+
+    def _done_item(self) -> None:
+        with self._pending_lock:
+            self._pending -= 1
+            quiet = self._pending == 0
+        if quiet:   # wake the monitor only at a possible idle point
+            self._idle.set()
+
     def send(self, src, dst, msg: Message, *,
              send_time: float | None = None) -> None:
         with self._stats_lock:
             st = src.core.stats
             st.msgs_sent += 1
             st.msg_bytes_sent += msg.payload_bytes
-        self._inbox.put((dst, msg))
+        if self._is_sched(dst):
+            self._put(dst, msg)
+        else:
+            # worker-destined messages have no shard state to protect:
+            # the handler just hands the body to the pool / resumes it
+            self.dispatch(msg.kind, msg.args)
 
     def local(self, node, msg: Message, *,
               at_time: float | None = None) -> None:
-        self._inbox.put((node, msg))
+        if self._is_sched(node):
+            self._put(node, msg)
+        else:
+            self.dispatch(msg.kind, msg.args)
+
+    def update(self, dst, fn, *args) -> None:
+        if not self._is_sched(dst) or self.executing_id() == dst.core_id:
+            fn(*args)       # already in (or needs no) owner context
+        else:
+            self._put(dst, _Update(fn, args))
+
+    def defer(self, dst, fn, *args) -> None:
+        # unconditionally to the back of dst's mailbox: the caller is
+        # parking this behind an adopt already queued ahead of it.
+        self._put(dst, _Update(fn, args))
 
     def call(self, kind: str, *args):
-        # aborting check first: after _shutdown clears _sched_tid a
-        # still-running pool thread must fail fast, not fall into the
-        # inline-dispatch branch (which would run scheduler handlers on
-        # a pool thread and stall pool teardown forever)
+        # aborting check first: after shutdown begins, a still-running
+        # pool thread must fail fast instead of marshalling a call no
+        # scheduler thread will ever answer.
         if self._aborting:
             raise RuntimeError("substrate is shutting down")
-        if self._sched_tid is None or \
-                threading.get_ident() == self._sched_tid:
+        dst = self._route(kind, args) if self._route is not None else None
+        ex = getattr(self._local, "node", None)
+        if dst is None or self._t0 is None or \
+                (ex is not None and ex.core_id == dst.core_id):
             return self.dispatch(kind, args)
+        if ex is not None:
+            raise AssertionError(
+                f"scheduler {ex.core_id} would block on a marshalled "
+                f"{kind} call to {dst.core_id}: runtime services are "
+                "worker-side entry points")
         req = _Call(kind, args)
-        self._inbox.put((None, req))
+        self._put(dst, req)
         req.done.wait()
         if req.error is not None:
             raise req.error
@@ -123,6 +206,7 @@ class ThreadSubstrate(Substrate):
             heapq.heappush(self._timers, (when, next(self._timer_seq), msg))
 
     # -- worker pool ---------------------------------------------------------
+
     def submit(self, fn, *args) -> None:
         """Run ``fn(*args)`` on a worker-pool thread; the run loop stays
         alive until every submitted job has finished."""
@@ -138,14 +222,17 @@ class ThreadSubstrate(Substrate):
         finally:
             with self._inflight_lock:
                 self._inflight -= 1
-            self._inbox.put(None)   # nudge the scheduler loop
+                quiet = self._inflight == 0
+            if quiet:
+                self._idle.set()
 
     def fail(self, e: BaseException) -> None:
         if self._error is None:
             self._error = e
-        self._inbox.put(None)
+        self._idle.set()
 
     # -- time / cores --------------------------------------------------------
+
     @property
     def now(self) -> float:
         if self._t0 is None:
@@ -184,7 +271,90 @@ class ThreadSubstrate(Substrate):
         with self._stats_lock:
             node.core.stats.dma_bytes += nbytes
 
-    # -- the scheduler loop ---------------------------------------------------
+    # -- scheduler threads ----------------------------------------------------
+
+    def _count_event(self) -> None:
+        with self._events_lock:
+            self._events += 1
+            over = (self._max_events is not None
+                    and self._events > self._max_events)
+        if over:
+            self.fail(RuntimeError(
+                f"threads backend processed more than {self._max_events} "
+                "messages (possible runaway spawn loop)"))
+
+    def _sched_loop(self, sched) -> None:
+        """One scheduler node: drain the mailbox, handlers touch only
+        this scheduler's shards."""
+        self._local.node = sched
+        box = self._boxes[sched.core_id]
+        while True:
+            try:
+                enq_t, payload = box.get(timeout=0.05)
+            except queue.Empty:
+                if self._aborting:
+                    break
+                continue
+            if payload is _STOP:
+                break
+            try:
+                self._handle(sched, enq_t, payload)
+            finally:
+                self._done_item()
+
+    def _handle(self, sched, enq_t: float, payload) -> None:
+        if isinstance(payload, _Call):
+            if self._aborting:
+                payload.error = self._error or RuntimeError(
+                    "substrate shut down")
+            else:
+                try:
+                    payload.result = self.dispatch(payload.kind, payload.args)
+                except BaseException as e:
+                    payload.error = e
+            payload.done.set()
+            # count after answering: tripping the cap mid-call must not
+            # leave the caller blocked on an unanswered request
+            self._count_event()
+            return
+        if isinstance(payload, _Update):
+            if not self._aborting:
+                try:
+                    payload.fn(*payload.args)
+                except BaseException as e:
+                    self.fail(e)
+            return
+        # a Message: measure mailbox delay + handler time on this core
+        if self._aborting:
+            return
+        t0 = time.perf_counter()
+        try:
+            self.dispatch(payload.kind, payload.args)
+        except BaseException as e:
+            self.fail(e)
+            return
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            st = sched.core.stats
+            st.busy_cycles += dt
+            st.events += 1
+            st.msgs_handled += 1
+            st.queue_delay_cycles += t0 - enq_t
+        self._count_event()
+
+    # -- the run monitor -------------------------------------------------------
+
+    def _fire_due_timers(self) -> None:
+        """Dispatch every due timer (monitor thread; timers are rare on
+        this backend — sim-only features return early)."""
+        while True:
+            with self._timer_lock:
+                if not self._timers or self._timers[0][0] > self.now:
+                    return
+                _, _, msg = heapq.heappop(self._timers)
+            self._count_event()
+            self.dispatch(msg.kind, msg.args)
+
     def run(self, until: float | None = None,
             max_events: int | None = None) -> None:
         if until is not None:
@@ -196,9 +366,15 @@ class ThreadSubstrate(Substrate):
         self._t0 = time.perf_counter()
         self._end = None
         self._aborting = False
-        self._sched_tid = threading.get_ident()
         self._pool = ThreadPoolExecutor(
             max_workers=self.n_threads, thread_name_prefix="myrmics-w")
+        self._threads = [
+            threading.Thread(target=self._sched_loop, args=(s,),
+                             name=f"myrmics-{s.core_id}", daemon=True)
+            for s in self.hier.scheds
+        ]
+        for t in self._threads:
+            t.start()
         deadline = self._t0 + self.max_wall_s
         try:
             while True:
@@ -208,19 +384,15 @@ class ThreadSubstrate(Substrate):
                     raise RuntimeError(
                         f"threads backend exceeded max_wall_s="
                         f"{self.max_wall_s}s (possible hang)")
-                timeout = self._fire_due_timers()
-                try:
-                    item = self._inbox.get(timeout=min(timeout, 0.05))
-                except queue.Empty:
-                    item = None
-                if item is not None:
-                    self._process(item)
-                    continue
-                # idle: no message arrived within the timeout
+                self._fire_due_timers()
+                with self._pending_lock:
+                    quiet = self._pending == 0
                 with self._inflight_lock:
-                    idle = self._inflight == 0
-                if idle and self._inbox.empty() and self._is_done():
+                    quiet = quiet and self._inflight == 0
+                if quiet and self._is_done():
                     break
+                self._idle.clear()
+                self._idle.wait(timeout=0.02)
         finally:
             self._end = time.perf_counter()
             self._shutdown()
@@ -228,14 +400,18 @@ class ThreadSubstrate(Substrate):
             raise self._error
 
     def _shutdown(self) -> None:
-        """Tear down the pool without orphaning worker threads: any
-        marshalled call still in (or entering) the inbox is answered
-        with the abort error so its caller unblocks — otherwise a
-        worker stuck in ``_Call.done.wait()`` would make
+        """Tear down scheduler threads and the pool without orphaning
+        anyone: every marshalled call still in (or entering) a mailbox
+        is answered with the abort error so its caller unblocks —
+        otherwise a worker stuck in ``_Call.done.wait()`` would make
         ``pool.shutdown(wait=True)`` hang forever."""
         self._aborting = True
+        for box in self._boxes.values():
+            box.put((0.0, _STOP))
+        for t in self._threads:
+            t.join()
+        self._threads = []
         pool, self._pool = self._pool, None
-        self._sched_tid = None
         down = threading.Event()
         waiter = threading.Thread(
             target=lambda: (pool.shutdown(wait=True), down.set()),
@@ -243,55 +419,20 @@ class ThreadSubstrate(Substrate):
         waiter.start()
         err = self._error or RuntimeError("substrate shut down")
         while not down.is_set():
-            try:
-                item = self._inbox.get(timeout=0.02)
-            except queue.Empty:
-                continue
-            if item is not None and isinstance(item[1], _Call):
-                item[1].error = err
-                item[1].done.set()
+            drained_call = False
+            for box in self._boxes.values():
+                try:
+                    while True:
+                        _, payload = box.get_nowait()
+                        if isinstance(payload, _Call):
+                            payload.error = err
+                            payload.done.set()
+                            drained_call = True
+                except queue.Empty:
+                    pass
+            if not drained_call:
+                down.wait(timeout=0.02)
         waiter.join()
-
-    def _count_event(self) -> None:
-        self._events += 1
-        if self._max_events is not None and self._events > self._max_events:
-            raise RuntimeError(
-                f"threads backend processed more than {self._max_events} "
-                "messages (possible runaway spawn loop)")
-
-    def _fire_due_timers(self) -> float:
-        """Dispatch every due timer; return seconds until the next one."""
-        while True:
-            with self._timer_lock:
-                if not self._timers or self._timers[0][0] > self.now:
-                    nxt = self._timers[0][0] if self._timers else None
-                    break
-                _, _, msg = heapq.heappop(self._timers)
-            self._count_event()
-            self.dispatch(msg.kind, msg.args)
-        return max(nxt - self.now, 0.0) if nxt is not None else 0.05
-
-    def _process(self, item) -> None:
-        if item is None:                      # wake-up nudge
-            return
-        dst, payload = item
-        if isinstance(payload, _Call):
-            try:
-                payload.result = self.dispatch(payload.kind, payload.args)
-            except BaseException as e:
-                payload.error = e
-            payload.done.set()
-            # count after answering: tripping the cap mid-call must not
-            # leave the caller blocked on an unanswered request
-            self._count_event()
-            return
-        self._count_event()
-        t0 = time.perf_counter()
-        self.dispatch(payload.kind, payload.args)
-        if dst is not None:
-            with self._stats_lock:
-                dst.core.stats.busy_cycles += time.perf_counter() - t0
-                dst.core.stats.events += 1
 
 
 # ---------------------------------------------------------------------------
@@ -315,6 +456,7 @@ class ThreadWorkerAgent:
     def __init__(self, rt):
         self.rt = rt
         self._suspended: dict[int, ThreadExec] = {}   # tid -> parked record
+        self._suspend_lock = threading.Lock()         # pool vs owner threads
 
     # ---- scale-out features: virtual-time only ------------------------------
 
@@ -361,9 +503,9 @@ class ThreadWorkerAgent:
     # ---- dispatch / execution ------------------------------------------------
 
     def h_dispatch(self, w: WorkerNode, task: Task) -> None:
-        """Scheduler-thread side of a dispatch: account the would-be DMA
-        (data is already addressable in the shared store) and hand the
-        body to the pool."""
+        """Dispatch intake (runs on the dispatching leaf scheduler's
+        thread): account the would-be DMA (data is already addressable
+        in the shared store) and hand the body to the pool."""
         rt = self.rt
         dma_bytes = sum(
             b for wid, b in task.pack_by_worker.items() if wid != w.core_id
@@ -412,14 +554,16 @@ class ThreadWorkerAgent:
         task.state = WAITING
         task.wait_remaining = len(spec.args)
         rt.sub.charge_task(w, rt.sub.now - rec.wall0, executed=False)
-        self._suspended[task.tid] = rec
+        with self._suspend_lock:
+            self._suspended[task.tid] = rec
         rt.sub.send(w, task.owner,
                     Message("s_wait", (task, list(spec.args))))
         # the pool thread returns here: the generator is parked and the
         # thread is free for other tasks until the wait quiesces.
 
     def h_resume(self, w: WorkerNode, task: Task) -> None:
-        rec = self._suspended.pop(task.tid)
+        with self._suspend_lock:
+            rec = self._suspended.pop(task.tid)
         self.rt.sub.submit(self._continue, w, rec)
 
     def _continue(self, w: WorkerNode, rec: ThreadExec) -> None:

@@ -1,4 +1,4 @@
-"""Hierarchical dependency analysis (paper SV-D).
+"""Hierarchical dependency analysis (paper SV-D), sharded per scheduler.
 
 Every region/object node keeps an in-order *dependency queue* plus
 counters tracking busy descendants.  A task is ready when its entry is
@@ -9,7 +9,28 @@ carrying cumulative "received" counters, which the parent compares with
 its "sent" counters to tolerate crossing messages (the paper's
 parent/child counter race protocol, Fig. 5b).
 
-The engine is a pure state machine: all cross-node notifications are
+Sharding model (mirroring :class:`~.regions.DirectoryShard`):
+
+* :class:`DepShard` — one scheduler's slice of the dependency state.
+  A node's :class:`DepNode` lives in the shard of the scheduler that
+  owns the node in the region directory; every mutation happens in
+  that scheduler's execution context (asserted), so shard contents are
+  single-threaded by construction — no locks on the hot path.
+* :class:`DepEngine` — the coordinator: routes an operation to the
+  owning shard.  When the operation is invoked from a *different*
+  scheduler's context (a message that crossed an SV-C ownership
+  migration in flight), it is re-homed to the owner through the
+  substrate's uncharged ``update`` channel — synchronous on the
+  virtual-time backend (bit-identical to the unsharded engine),
+  queue-to-queue on the threaded backend.
+* Migration hand-off: ``begin_handoff`` (on the old owner, atomically
+  with the directory owner-table flip) pops the moving ``DepNode``s and
+  marks them *in flight*; ``adopt`` (in the new owner's context)
+  installs them and clears the marker.  Operations that observe the
+  marker defer themselves behind the adopt so no scheduler ever acts
+  on dependency state it does not hold.
+
+The shard is a pure state machine: all cross-node notifications are
 emitted through an ``Effects`` interface so the runtime can charge
 scheduler processing costs and message latencies for hops that cross
 scheduler boundaries.
@@ -98,21 +119,43 @@ class Effects(Protocol):
                      recv_r: int, recv_w: int) -> None: ...
 
 
-class DepEngine:
-    """Per-node dependency state machine.
+class DepShard:
+    """One scheduler's slice of the dependency state machine.
 
     The runtime routes each operation to the handler of the owning
-    scheduler, then calls into this engine; emitted effects are again
+    scheduler, which acts on *its own* shard; emitted effects are again
     routed (and charged) by the runtime.  State per node is therefore
-    only ever touched 'on' its owner, matching the distributed design.
+    only ever touched 'on' its owner, matching the distributed design —
+    enforced by the execution-context assert on every mutation.
     """
 
-    def __init__(self, directory: Directory, effects: Effects):
+    def __init__(self, owner_id: str, directory: Directory, effects: Effects,
+                 engine: "DepEngine | None" = None):
+        self.owner_id = owner_id
         self.dir = directory
         self.fx = effects
+        self.eng = engine
         self.nodes: dict[int, DepNode] = {}
 
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __contains__(self, nid: int) -> bool:
+        return nid in self.nodes
+
+    def _check_context(self) -> None:
+        """Shard state may only be touched in its owner's execution
+        context (or outside any handler: program entry, tests)."""
+        sub = self.eng.sub if self.eng is not None else None
+        ex = sub.executing_id() if sub is not None else None
+        if ex is not None and ex != self.owner_id:
+            raise AssertionError(
+                f"DepShard[{self.owner_id}] touched from scheduler {ex}: "
+                "cross-owner dependency state access must go through "
+                "substrate messages")
+
     def node(self, nid: int) -> DepNode:
+        self._check_context()
         n = self.nodes.get(nid)
         if n is None:
             n = self.nodes[nid] = DepNode(nid)
@@ -273,3 +316,140 @@ class DepEngine:
         if edge.sent_r == recv_r and edge.sent_w == recv_w:
             edge.acked_r, edge.acked_w = recv_r, recv_w
             self.scan(parent_nid)
+
+    # -- teardown ---------------------------------------------------------------
+
+    def drop(self, nid: int) -> None:
+        """Discard a freed node's dependency state (sys_free/sys_rfree).
+        The node must be idle: freeing a node with queued or active
+        dependency entries is a programming error."""
+        self._check_context()
+        node = self.nodes.pop(nid, None)
+        if node is not None and not node.idle():
+            raise RuntimeError(f"freeing busy node {nid}")
+
+
+class DepEngine:
+    """Coordinator for the per-scheduler dependency shards.
+
+    Pure routing: resolves a node to the shard of its directory owner
+    and runs the operation in that owner's execution context.  An
+    operation arriving in the *wrong* context (its message was routed
+    before an ownership migration landed) is re-homed through the
+    substrate's uncharged ``update`` channel — synchronous under
+    virtual time, queue-to-queue on the threaded backend — and an
+    operation that observes a mid-flight hand-off defers itself until
+    the new owner has adopted the state.
+    """
+
+    def __init__(self, directory: Directory, effects: Effects, rt=None):
+        self.dir = directory
+        self.fx = effects
+        self.rt = rt
+        self.shards: dict[str, DepShard] = {}
+        #: nid -> new owner core_id while a migration hand-off is in
+        #: flight (set atomically with the owner-table flip, cleared by
+        #: ``adopt`` in the new owner's context).
+        self.in_flight: dict[int, str] = {}
+
+    @property
+    def sub(self):
+        return self.rt.sub if self.rt is not None else None
+
+    def shard(self, owner_id: str) -> DepShard:
+        s = self.shards.get(owner_id)
+        if s is None:
+            s = self.shards[owner_id] = DepShard(
+                owner_id, self.dir, self.fx, self)
+        return s
+
+    def shard_of(self, nid: int) -> DepShard:
+        return self.shard(self.dir.owner_of(nid))
+
+    # -- owner-context routing ------------------------------------------------
+
+    def _on_owner(self, nid: int, op: str, *args) -> None:
+        """Run ``shard.op(*args)`` in the owning scheduler's context.
+
+        Local when this already *is* the owner's context (the common
+        case: the runtime addressed the message to the owner); re-homed
+        through ``sub.update`` when the message crossed a migration, or
+        deferred behind the adopt while the hand-off is in flight."""
+        target = self.in_flight.get(nid)
+        sub = self.sub
+        if target is not None and sub is not None:
+            # mid-hand-off: park behind the adopt already queued at the
+            # new owner (defer never runs inline, so the adopt is
+            # guaranteed to be processed first)
+            sub.defer(self.rt.sched_of(target), self._on_owner,
+                      nid, op, *args)
+            return
+        owner = self.dir.owner_of(nid)
+        ex = sub.executing_id() if sub is not None else None
+        if sub is not None and ex is not None and ex != owner:
+            # the message crossed a migration: re-home to the owner
+            sub.update(self.rt.sched_of(owner), self._on_owner,
+                       nid, op, *args)
+            return
+        getattr(self.shard(owner), op)(*args)
+
+    # -- the operation surface (routed) ----------------------------------------
+
+    def node(self, nid: int) -> DepNode:
+        """Direct state access for the facade and tests (program entry:
+        no handler context).  Handlers use the routed operations."""
+        return self.shard_of(nid).node(nid)
+
+    def enqueue(self, nid: int, entry: Entry,
+                via_parent: int | None = None) -> None:
+        self._on_owner(nid, "enqueue", nid, entry, via_parent)
+
+    def release(self, nid: int, task) -> None:
+        self._on_owner(nid, "release", nid, task)
+
+    def recv_quiesce(self, parent_nid: int, child_nid: int,
+                     recv_r: int, recv_w: int) -> None:
+        self._on_owner(parent_nid, "recv_quiesce",
+                       parent_nid, child_nid, recv_r, recv_w)
+
+    def drop(self, nid: int) -> None:
+        self._on_owner(nid, "drop", nid)
+
+    # -- message-handler entry points (registered by the runtime) ---------------
+
+    def h_enqueue(self, nid: int, entry: Entry,
+                  via_parent: int | None) -> None:
+        self.enqueue(nid, entry, via_parent)
+
+    def h_release(self, nid: int, task) -> None:
+        if self.dir.is_live(nid):
+            self.release(nid, task)
+
+    # -- SV-C migration hand-off ------------------------------------------------
+
+    def begin_handoff(self, nids: list[int], old_owner: str,
+                      new_owner: str) -> dict:
+        """Old-owner side: pop the moving dependency state and mark it
+        in flight.  Must run atomically with the directory owner-table
+        flip (the caller holds the directory lock), so any observer
+        that sees the new owner also sees the in-flight marker."""
+        shard = self.shard(old_owner)
+        shard._check_context()
+        moved = {}
+        for nid in nids:
+            node = shard.nodes.pop(nid, None)
+            if node is not None:
+                moved[nid] = node
+                self.in_flight[nid] = new_owner
+        return moved
+
+    def adopt(self, nodes: dict, new_owner: str) -> None:
+        """New-owner side: install the handed-off dependency state and
+        clear the in-flight markers, unblocking deferred operations.
+        No scan: adopting state must not change activation (the old
+        owner's scans already ran after every mutation)."""
+        shard = self.shard(new_owner)
+        shard._check_context()
+        for nid, node in nodes.items():
+            shard.nodes[nid] = node
+            self.in_flight.pop(nid, None)

@@ -31,6 +31,7 @@ scheduler.
 from __future__ import annotations
 
 import itertools
+import threading
 from dataclasses import dataclass, field
 
 ROOT_RID = 0
@@ -60,10 +61,11 @@ class DirectoryShard:
     the runtime charges those on this shard's core.
     """
 
-    def __init__(self, owner_id: str):
+    def __init__(self, owner_id: str, lock: threading.RLock | None = None):
         self.owner_id = owner_id
         self.nodes: dict[int, NodeMeta] = {}
         self.served = 0    # forwarded lookups answered for other cores
+        self._lock = lock or threading.RLock()
 
     def __len__(self) -> int:
         return len(self.nodes)
@@ -73,8 +75,9 @@ class DirectoryShard:
 
     def live_regions(self) -> list[NodeMeta]:
         """Owned, live region nodes (migration candidates)."""
-        return [m for m in self.nodes.values()
-                if m.is_region and not m.freed]
+        with self._lock:
+            return [m for m in self.nodes.values()
+                    if m.is_region and not m.freed]
 
 
 class Directory:
@@ -91,6 +94,19 @@ class Directory:
         self._ids = itertools.count(1)
         self.shards: dict[str, DirectoryShard] = {}
         self._owner: dict[int, str] = {}
+        #: Serializes structural mutations and multi-node walks across
+        #: concurrent scheduler threads.  This is the software stand-in
+        #: for what the prototype gets from its transport: metadata
+        #: requests serialize at the owning scheduler's mailbox, and
+        #: the owner route is a free id-bit decode.  Single-field reads
+        #: (owner_of / parent_of / is_region) stay lock-free; the costs
+        #: of cross-shard reads are still charged through the
+        #: forwarding/packing messages, exactly as before.
+        self.lock = threading.RLock()
+        #: Bumped whenever node ownership can change under a reader
+        #: (SV-C migration) or nodes die (free): per-scheduler
+        #: AncestryCaches invalidate their owner entries against it.
+        self.version = 0
         self._place(NodeMeta(ROOT_RID, None, True, root_owner))
 
     # -- shard plumbing -----------------------------------------------------
@@ -98,15 +114,28 @@ class Directory:
     def shard(self, owner_id: str) -> DirectoryShard:
         s = self.shards.get(owner_id)
         if s is None:
-            s = self.shards[owner_id] = DirectoryShard(owner_id)
+            s = self.shards[owner_id] = DirectoryShard(owner_id, self.lock)
         return s
 
     def _place(self, meta: NodeMeta) -> None:
-        self.shard(meta.owner).nodes[meta.nid] = meta
-        self._owner[meta.nid] = meta.owner
+        with self.lock:
+            self.shard(meta.owner).nodes[meta.nid] = meta
+            self._owner[meta.nid] = meta.owner
 
     def _meta(self, nid: int) -> NodeMeta:
-        return self.shards[self._owner[nid]].nodes[nid]
+        # lock-free two-step read (owner route, then the owner's shard):
+        # a concurrent migration can complete between the two steps, so
+        # on a miss re-read the route — migrate_subtree publishes the
+        # node at the new home before unlinking the old one, and nodes
+        # are never unlinked otherwise (free only marks), so the retry
+        # is bounded by the number of in-flight migrations.
+        while True:
+            owner = self._owner[nid]
+            meta = self.shards[owner].nodes.get(nid)
+            if meta is not None:
+                return meta
+            if self._owner[nid] == owner:
+                raise KeyError(nid)
 
     # -- routing / liveness (free: owner bits are part of the id) -----------
 
@@ -134,80 +163,96 @@ class Directory:
         owner = self._owner[nid]
         if owner != requester:
             self.shards[owner].served += 1
-        return self.shards[owner].nodes[nid]
+        return self._meta(nid)
 
     # -- mutation (performed inside the owner's charged handler) ------------
 
     def new_region(self, parent: int, owner: str, level_hint: int) -> int:
         nid = next(self._ids)
-        self._place(NodeMeta(nid, parent, True, owner, level_hint=level_hint))
-        self._meta(parent).children.add(nid)
+        with self.lock:
+            self._place(NodeMeta(nid, parent, True, owner,
+                                 level_hint=level_hint))
+            self._meta(parent).children.add(nid)
         return nid
 
     def new_object(self, parent: int, owner: str, size: int) -> int:
         nid = next(self._ids)
-        self._place(NodeMeta(nid, parent, False, owner, size=size))
-        self._meta(parent).children.add(nid)
+        with self.lock:
+            self._place(NodeMeta(nid, parent, False, owner, size=size))
+            self._meta(parent).children.add(nid)
         return nid
 
     def free(self, nid: int) -> list[int]:
         """Recursively free a node; returns all freed nids."""
         freed = []
-        stack = [nid]
-        while stack:
-            cur = stack.pop()
-            meta = self._meta(cur)
-            if meta.freed:
-                continue
-            meta.freed = True
-            freed.append(cur)
-            stack.extend(meta.children)
-        parent = self._meta(nid).parent
-        if parent is not None:
-            self._meta(parent).children.discard(nid)
+        with self.lock:
+            stack = [nid]
+            while stack:
+                cur = stack.pop()
+                meta = self._meta(cur)
+                if meta.freed:
+                    continue
+                meta.freed = True
+                freed.append(cur)
+                stack.extend(meta.children)
+            parent = self._meta(nid).parent
+            if parent is not None:
+                self._meta(parent).children.discard(nid)
+            self.version += 1
         return freed
 
     # -- ownership migration (paper SV-C load balancing) ---------------------
 
     def owned_subtree_size(self, rid: int) -> int:
         """Number of live nodes in rid's subtree owned by rid's owner."""
-        owner = self._owner[rid]
-        n = 0
-        stack = [rid]
-        while stack:
-            cur = stack.pop()
-            meta = self._meta(cur)
-            if meta.freed:
-                continue
-            if self._owner[cur] == owner:
-                n += 1
-                stack.extend(meta.children)
-        return n
+        return len(self.subtree_owned_nids(rid))
+
+    def subtree_owned_nids(self, rid: int) -> list[int]:
+        """Live nodes in rid's subtree owned by rid's owner — exactly
+        the set :meth:`migrate_subtree` would move."""
+        with self.lock:
+            owner = self._owner[rid]
+            out = []
+            stack = [rid]
+            while stack:
+                cur = stack.pop()
+                meta = self._meta(cur)
+                if meta.freed:
+                    continue
+                if self._owner[cur] == owner:
+                    out.append(cur)
+                    stack.extend(meta.children)
+            return out
 
     def migrate_subtree(self, rid: int, new_owner: str) -> list[int]:
         """Re-home rid's subtree: every live node currently owned by
         rid's owner moves to ``new_owner``'s shard.  Nodes inside the
         subtree already delegated elsewhere stay put (their owners keep
         serving them).  Returns the migrated nids."""
-        old = self._owner[rid]
-        if old == new_owner:
-            return []
-        src, dst = self.shard(old), self.shard(new_owner)
-        moved = []
-        stack = [rid]
-        while stack:
-            cur = stack.pop()
-            meta = self._meta(cur)
-            if meta.freed:
-                continue
-            if self._owner[cur] == old:
-                del src.nodes[cur]
-                dst.nodes[cur] = meta
-                meta.owner = new_owner
-                self._owner[cur] = new_owner
-                moved.append(cur)
-                stack.extend(meta.children)
-        return moved
+        with self.lock:
+            old = self._owner[rid]
+            if old == new_owner:
+                return []
+            src, dst = self.shard(old), self.shard(new_owner)
+            moved = []
+            stack = [rid]
+            while stack:
+                cur = stack.pop()
+                meta = self._meta(cur)
+                if meta.freed:
+                    continue
+                if self._owner[cur] == old:
+                    # publish at the new home before unlinking the old
+                    # one: lock-free readers (_meta) never observe a
+                    # node that is in neither shard
+                    dst.nodes[cur] = meta
+                    meta.owner = new_owner
+                    self._owner[cur] = new_owner
+                    del src.nodes[cur]
+                    moved.append(cur)
+                    stack.extend(meta.children)
+            self.version += 1
+            return moved
 
     # -- structural walks (cost subsumed by the calling handler's charge) ----
 
@@ -264,17 +309,67 @@ class Directory:
         count a served forwarded lookup — the runtime charges the
         corresponding owner-side processing (paper Fig. 6a: S2 packs
         region A via S0 and S1)."""
-        out = []
-        stack = [nid]
-        while stack:
-            cur = stack.pop()
-            meta = self._meta(cur)
-            if meta.freed:
-                continue
-            if requester is not None and self._owner[cur] != requester:
-                self.shards[self._owner[cur]].served += 1
-            if meta.is_region:
-                stack.extend(meta.children)
-            else:
-                out.append(meta)
-        return out
+        with self.lock:
+            out = []
+            stack = [nid]
+            while stack:
+                cur = stack.pop()
+                meta = self._meta(cur)
+                if meta.freed:
+                    continue
+                if requester is not None and self._owner[cur] != requester:
+                    self.shards[self._owner[cur]].served += 1
+                if meta.is_region:
+                    stack.extend(meta.children)
+                else:
+                    out.append(meta)
+            return out
+
+
+class AncestryCache:
+    """One scheduler's local view of cross-shard routing facts.
+
+    The owner-lookup/ancestry protocol (paper SV-C/SV-D): a scheduler
+    handler may resolve *routing facts* about nodes it does not own —
+    who owns a node (free on hardware: the owner is encoded in the id
+    bits) and where a node sits in the region tree (parent pointers are
+    immutable once published) — without a charged message.  Everything
+    else about a foreign node goes through the substrate.
+
+    Owner answers are memoized per scheduler and invalidated against
+    ``Directory.version``, which bumps whenever ownership can change
+    under a reader (SV-C subtree migration) or nodes die (free).  A
+    stale answer between the bump and the next sync is harmless by
+    protocol: a message routed to the previous owner is re-homed,
+    uncharged, by the dependency coordinator's hand-off protocol.
+    """
+
+    def __init__(self, directory: Directory):
+        self.dir = directory
+        self._owner: dict[int, str] = {}
+        self._version = -1
+
+    def _sync(self) -> None:
+        if self._version != self.dir.version:
+            self._owner.clear()
+            self._version = self.dir.version
+
+    # -- owner route (cached, invalidated on migration/free) ----------------
+
+    def owner_of(self, nid: int) -> str:
+        self._sync()
+        owner = self._owner.get(nid)
+        if owner is None:
+            owner = self._owner[nid] = self.dir.owner_of(nid)
+        return owner
+
+    # -- ancestry walks (parent pointers are immutable; no caching needed) --
+
+    def path_down(self, origin: int, target: int) -> list[int]:
+        return self.dir.path_down(origin, target)
+
+    def covering_node(self, parent_arg_nids: list[int], target: int) -> int:
+        return self.dir.covering_node(parent_arg_nids, target)
+
+    def is_ancestor_or_self(self, anc: int, nid: int) -> bool:
+        return self.dir.is_ancestor_or_self(anc, nid)

@@ -29,10 +29,12 @@ which substrate executes it:
   ``duration=`` placeholders) run synchronously inside the event loop,
   so this backend is for scheduling studies, not throughput.
 * ``backend="threads"`` — :class:`~.backend_threads.ThreadSubstrate`:
-  a real concurrent executor.  Scheduler handlers drain a message
-  queue on a dedicated thread; worker cores are a thread pool running
-  actual Python/JAX task bodies in parallel against the object store;
-  DMA/compute charges become wall-clock measurements in the
+  a real concurrent executor with a decentralized scheduler tier.
+  Every scheduler node drains its own mailbox on a dedicated thread
+  (handlers for different shards run concurrently); worker cores are a
+  thread pool running actual Python/JAX task bodies in parallel
+  against the object store; DMA/compute charges become wall-clock
+  measurements — including per-scheduler queue delay — in the
   ``RunReport``.
 
 A task function has signature ``fn(ctx, *args)``.  Under the
@@ -46,6 +48,7 @@ until the waited arguments quiesce (sys_wait).
 from __future__ import annotations
 
 import itertools
+import threading
 from dataclasses import dataclass
 from typing import Any, Callable
 
@@ -289,6 +292,10 @@ class Myrmics:
         self.labels: dict[int, str] = {}   # nid -> app label (for oracles)
         self.policy_p = policy_p
         self.max_events = max_events
+        # shared run counters: mutated from whichever scheduler context
+        # handles the spawn/completion — under the threads backend those
+        # are different OS threads, so increments take this lock.
+        self.count_lock = threading.Lock()
         self.tasks_spawned = 0
         self.tasks_done = 0
         self.main_task: Task | None = None
@@ -310,9 +317,16 @@ class Myrmics:
         self.subtree_workers: dict[str, set[str]] = {
             s.core_id: s.subtree_worker_ids() for s in self.hier.scheds
         }
-        # -- role-scoped agents --
-        self.alloc_agent = AllocAgent(self)
-        self.sched_agent = SchedAgent(self)
+        # -- role-scoped agents, one per scheduler node (decentralized
+        #    scheduler tier: each owns its dep/dir shard, ancestry cache
+        #    and descent counters; peers are reached via the substrate) --
+        self.sched_agents = {
+            s.core_id: SchedAgent(self, s) for s in self.hier.scheds
+        }
+        self.alloc_agents = {
+            cid: AllocAgent(self, agent.cache)
+            for cid, agent in self.sched_agents.items()
+        }
         if backend == "threads":
             from .backend_threads import ThreadSubstrate, ThreadWorkerAgent
             self.sub = ThreadSubstrate(self.hier, max_wall_s=max_wall_s)
@@ -320,28 +334,64 @@ class Myrmics:
         else:
             self.sub = SimSubstrate(self.hier)
             self.worker_agent = WorkerAgent(self)
-        self.deps = DepEngine(self.dir, DepEffects(self))
-        self.sub.bind(self._handlers(), is_done=self._program_done)
+        self.deps = DepEngine(self.dir, DepEffects(self), rt=self)
+        self.sub.bind(self._handlers(), is_done=self._program_done,
+                      route=self._call_dest)
+
+    def agent_of(self, sched: SchedNode | str) -> "SchedAgent":
+        """The per-scheduler agent instance for a scheduler node."""
+        core_id = sched if isinstance(sched, str) else sched.core_id
+        return self.sched_agents[core_id]
+
+    def alloc_of(self, nid: int) -> "AllocAgent":
+        """The allocation agent of the scheduler owning ``nid``."""
+        return self.alloc_agents[self.dir.owner_of(nid)]
+
+    @property
+    def sched_agent(self) -> "SchedAgent":
+        """Back-compat alias: the root scheduler's agent."""
+        return self.sched_agents[self.hier.root.core_id]
+
+    @property
+    def alloc_agent(self) -> "AllocAgent":
+        """Back-compat alias: the root scheduler's allocation agent."""
+        return self.alloc_agents[self.hier.root.core_id]
+
+    def _call_dest(self, kind: str, args: tuple) -> SchedNode:
+        """Destination scheduler of a marshalled runtime-service call
+        (the threaded substrate routes the call to this scheduler's
+        mailbox; the sim substrate dispatches synchronously)."""
+        if kind == "sys_spawn":
+            return args[1].task.owner          # (task, ctx)
+        if kind == "sys_ralloc":
+            return self.node_owner(args[0])    # (parent_rid, ...)
+        if kind in ("sys_alloc", "sys_balloc"):
+            return self.node_owner(args[1])    # (size, rid, ...)
+        return self.node_owner(args[0])        # sys_free / sys_rfree
 
     def _handlers(self) -> dict:
         """The message-kind registry: every cross-core interaction the
         agents emit resolves to one of these callables (messages are
-        plain data, so substrates can marshal them across threads)."""
-        sa, wa, aa = self.sched_agent, self.worker_agent, self.alloc_agent
+        plain data, so substrates can marshal them across threads).
+        Scheduler-role kinds resolve to the *destination* scheduler's
+        agent instance, so each handler runs against its own shard and
+        cache — the decentralized-tier invariant."""
+        wa, deps = self.worker_agent, self.deps
+        agent = self.agent_of
         return {
             # charge-only messages (accounting; no destination effect)
             "noop": lambda *a: None,
-            # scheduler-role handlers
-            "s_spawn": sa.h_spawn,
-            "s_enqueue": sa.h_enqueue,
-            "s_mark_ready": sa.mark_ready,
-            "s_descend": sa.h_descend,
-            "s_wait": sa.h_wait,
-            "s_complete": sa.h_complete,
-            "s_release": sa.h_release,
-            "s_arg_ready": self.deps.fx._h_arg_ready,
-            "s_wait_ready": self.deps.fx._h_wait_ready,
-            "d_quiesce": self.deps.recv_quiesce,
+            # scheduler-role handlers (per-destination agent instances)
+            "s_spawn": lambda sched, task: agent(sched).h_spawn(task),
+            "s_enqueue": deps.h_enqueue,
+            "s_mark_ready": lambda task: agent(task.owner).mark_ready(task),
+            "s_descend": lambda sched, task: agent(sched).h_descend(task),
+            "s_wait": lambda task, args: agent(task.owner).h_wait(task, args),
+            "s_complete": lambda task: agent(task.owner).h_complete(task),
+            "s_release": deps.h_release,
+            "s_arg_ready": deps.fx._h_arg_ready,
+            "s_wait_ready": deps.fx._h_wait_ready,
+            "d_quiesce": deps.recv_quiesce,
             # worker-role handlers (dispatched to whichever worker agent
             # the backend installed)
             "w_dispatch": wa.h_dispatch,
@@ -351,13 +401,18 @@ class Myrmics:
             "w_resume_retry": wa.resume_retry,
             "w_backup_check": wa.backup_check,
             "w_kill": wa.do_kill,
-            # synchronous runtime services (task body -> scheduler side)
-            "sys_spawn": sa.sys_spawn,
-            "sys_ralloc": aa.sys_ralloc,
-            "sys_alloc": aa.sys_alloc,
-            "sys_balloc": aa.sys_balloc,
-            "sys_free": aa.sys_free,
-            "sys_rfree": aa.sys_rfree,
+            # synchronous runtime services (task body -> scheduler side),
+            # routed to the owning scheduler's agent (see _call_dest)
+            "sys_spawn": lambda task, ctx:
+                agent(ctx.task.owner).sys_spawn(task, ctx),
+            "sys_ralloc": lambda parent_rid, *a:
+                self.alloc_of(parent_rid).sys_ralloc(parent_rid, *a),
+            "sys_alloc": lambda size, rid, *a:
+                self.alloc_of(rid).sys_alloc(size, rid, *a),
+            "sys_balloc": lambda size, rid, *a:
+                self.alloc_of(rid).sys_balloc(size, rid, *a),
+            "sys_free": lambda oid, *a: self.alloc_of(oid).sys_free(oid, *a),
+            "sys_rfree": lambda rid, *a: self.alloc_of(rid).sys_rfree(rid, *a),
         }
 
     def _program_done(self) -> bool:
@@ -418,7 +473,7 @@ class Myrmics:
         self.deps.node(ROOT_RID).holders[main] = MODE_WRITE
         main.satisfied = len(main.dep_args)
         main.state = READY
-        self.sched_agent.begin_packing(main.owner, main)
+        self.agent_of(main.owner).begin_packing(main)
         self.sub.run(until=until, max_events=self.max_events)
         return self.report()
 

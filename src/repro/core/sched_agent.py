@@ -1,23 +1,38 @@
 """Scheduler-role agent: spawn, dependency traversal, descent, complete,
 quiesce, and region-ownership migration.
 
-Every handler in this module is work performed *on a scheduler core*:
-it is entered through the substrate (``rt.sub.send``/``local``) with
-the processing cost charged to (sim) or measured on (threads) that
-core.  Directory metadata is only read for nodes
-the handling scheduler owns (its :class:`~.regions.DirectoryShard`);
-reads that cross shard boundaries go through the forwarding helpers
+One :class:`SchedAgent` instance exists *per scheduler node* — the
+paper's decentralized design point (SIV): each scheduler owns its slice
+of runtime state (its :class:`~.regions.DirectoryShard`, its
+:class:`~.deps.DepShard`, its descent load counters, its
+:class:`~.regions.AncestryCache`) and talks to peers only through the
+substrate.  Every handler in this module is work performed *on* its
+scheduler core: it is entered through the substrate
+(``rt.sub.send``/``local``) with the processing cost charged to (sim)
+or measured on (threads) that core.  Cross-owner dependency operations
+ride substrate messages (``s_enqueue``/``s_release``/``d_quiesce``);
+cross-shard metadata reads go through the forwarding helpers
 (``forward_lookup``, the packing walk) and are charged to the owning
-scheduler, mirroring paper Fig. 6a where S2 packs region A via S0/S1.
+scheduler, mirroring paper Fig. 6a where S2 packs region A via S0/S1;
+owner routes and ancestry facts resolve through the per-scheduler
+:class:`~.regions.AncestryCache` (invalidated on SV-C migration);
+and bookkeeping another scheduler owns (descent-load decrements
+piggybacked on completions, migration adoption) is applied in the
+owner's execution context through the substrate's uncharged ``update``
+channel — synchronous under virtual time, queue-to-queue between
+scheduler threads.
 
 Ownership migration (paper SV-C): when a scheduler's ``region_load``
 exceeds the opt-in threshold, the agent picks its largest owned region
 subtree that fits inside half the load gap to the least-loaded sibling
 and re-homes it there.  The request is parent-routed — owner -> parent
 -> sibling — and the grant message is charged per migrated node, so
-rebalancing is visible in the virtual-time accounting.  With the
-feature disabled (default) no handler, message or charge differs from
-the unsharded runtime.
+rebalancing is visible in the virtual-time accounting.  The dependency
+state of the moved nodes is handed off with it (``begin_handoff`` on
+the old owner, atomically with the owner-table flip; ``adopt`` in the
+new owner's context), so no scheduler ever analyses dependencies for a
+node it does not own.  With the feature disabled (default) no handler,
+message or charge differs from the unsharded runtime.
 """
 
 from __future__ import annotations
@@ -26,7 +41,7 @@ from typing import TYPE_CHECKING
 
 from .api import nid_of
 from .deps import ARG, TRAVERSE, WAIT, Entry
-from .regions import MODE_WRITE, ROOT_RID, NodeMeta
+from .regions import MODE_WRITE, ROOT_RID, AncestryCache, NodeMeta
 from .runtime import DISPATCHED, DONE, READY, SPAWNED
 from .sched import SchedNode, score_candidates
 from .substrate import Message
@@ -36,10 +51,20 @@ if TYPE_CHECKING:  # pragma: no cover - import cycle guard
 
 
 class SchedAgent:
-    """Spawn / traverse / descend / complete / quiesce effects."""
+    """One scheduler node's agent: spawn / traverse / descend /
+    complete / quiesce effects, acting only on state this scheduler
+    owns."""
 
-    def __init__(self, rt: "Myrmics"):
+    def __init__(self, rt: "Myrmics", sched: SchedNode):
         self.rt = rt
+        self.sched = sched
+        self.cache = AncestryCache(rt.dir)
+
+    def owner_sched(self, nid: int) -> SchedNode:
+        """The scheduler owning ``nid``, via this agent's cached owner
+        route (the id-decode; stale-after-migration answers are
+        re-homed by the dependency coordinator)."""
+        return self.rt.sched_of(self.cache.owner_of(nid))
 
     # ---- shard forwarding ---------------------------------------------------
 
@@ -70,20 +95,22 @@ class SchedAgent:
         # every child argument must lie inside the spawner's footprint.
         parent_nids = ctx.task.arg_nids()
         for a in task.dep_args:
-            if not any(rt.dir.is_ancestor_or_self(p, a.nid)
+            if not any(self.cache.is_ancestor_or_self(p, a.nid)
                        for p in parent_nids):
                 raise ValueError(
                     f"{ctx.task} spawns {task} with arg node {a.nid} "
                     "outside the parent's declared footprint")
-        rt.tasks_spawned += 1
+        with rt.count_lock:
+            rt.tasks_spawned += 1
         # SPAWN message: worker -> owner of the parent task (routed via tree)
         rt.sub.send(ctx.worker, ctx.task.owner,
                     Message("s_spawn", (ctx.task.owner, task),
                             cost=rt.cost.spawn_proc),
                     send_time=ctx.now)
 
-    def h_spawn(self, sched: SchedNode, task: "Task") -> None:
-        """Spawn handling at the parent task's owner.
+    def h_spawn(self, task: "Task") -> None:
+        """Spawn handling at the parent task's owner (this agent's
+        scheduler).
 
         Ownership is delegated downward while a single child subtree owns
         every argument (paper SV-E); the delegation messages are charged
@@ -92,7 +119,8 @@ class SchedAgent:
         order — the origin node's FIFO queue then reflects program order.
         """
         rt = self.rt
-        arg_owners = {rt.dir.owner_of(a.nid) for a in task.dep_args}
+        sched = self.sched
+        arg_owners = {self.cache.owner_of(a.nid) for a in task.dep_args}
         owner = sched
         hop_src = sched
         while True:
@@ -114,33 +142,32 @@ class SchedAgent:
             return
         parent_nids = task.parent.arg_nids() if task.parent else [ROOT_RID]
         for i, a in enumerate(task.dep_args):
-            origin = rt.dir.covering_node(parent_nids, a.nid)
-            path = rt.dir.path_down(origin, a.nid)
+            origin = self.cache.covering_node(parent_nids, a.nid)
+            path = self.cache.path_down(origin, a.nid)
             if len(path) == 1:
                 entry = Entry(ARG, task, a.mode, (), i)
             else:
                 entry = Entry(TRAVERSE, task, a.mode, tuple(path[1:]), i)
-            rt.sub.send(sched, rt.node_owner(origin),
+            rt.sub.send(sched, self.owner_sched(origin),
                         Message("s_enqueue", (origin, entry, None),
                                 cost=rt.cost.dep_enqueue_per_arg))
 
     def mark_ready(self, task: "Task") -> None:
         task.state = READY
-        self.begin_packing(task.owner, task)
-
-    def h_enqueue(self, nid: int, entry: Entry, via_parent: int | None) -> None:
-        self.rt.deps.enqueue(nid, entry, via_parent)
+        self.begin_packing(task)
 
     # ---- packing + hierarchical scheduling descent --------------------------
 
-    def begin_packing(self, sched: SchedNode, task: "Task") -> None:
-        """Coalesce the task footprint by last producer (paper SV-E).
+    def begin_packing(self, task: "Task") -> None:
+        """Coalesce the task footprint by last producer (paper SV-E),
+        on this agent's scheduler (the task's owner).
 
         The footprint walk is a sharded-directory read: object metadata
         owned by other schedulers is served by their shards, and each
         remote owner is charged for answering (the pack_per_arg message
         below), replacing any free global-structure read."""
         rt = self.rt
+        sched = self.sched
         pack: dict[str, int] = {}
         remote_owners: set[str] = set()
         for a in task.dep_args:
@@ -168,8 +195,9 @@ class SchedAgent:
         return {w for w in rt.subtree_workers[sched.core_id]
                 if w not in rt.dead_workers}
 
-    def h_descend(self, sched: SchedNode, task: "Task") -> None:
+    def h_descend(self, task: "Task") -> None:
         rt = self.rt
+        sched = self.sched
         if sched.is_leaf and not sched.workers and sched.parent is not None:
             rt.sub.send(sched, sched.parent,
                         Message("s_descend", (sched.parent, task),
@@ -222,7 +250,7 @@ class SchedAgent:
         rt = self.rt
         for a in args:
             entry = Entry(WAIT, task, a.mode, (), -1)
-            rt.sub.send(task.owner, rt.node_owner(a.nid),
+            rt.sub.send(task.owner, self.owner_sched(a.nid),
                         Message("s_enqueue", (a.nid, entry, None),
                                 cost=rt.cost.dep_enqueue_per_arg))
 
@@ -235,50 +263,58 @@ class SchedAgent:
 
     # ---- completion ---------------------------------------------------------
 
+    @staticmethod
+    def _dec_load(sched: SchedNode, child_id: str) -> None:
+        """Descent-load decrement, applied in ``sched``'s execution
+        context (its counter, its thread)."""
+        if child_id in sched.load:
+            sched.load[child_id] = max(0, sched.load[child_id] - 1)
+
     def h_complete(self, task: "Task") -> None:
         rt = self.rt
         if task.completed:
             return  # backup copy finished second; first completion won
         task.completed = True
         task.state = DONE
-        rt.tasks_done += 1
+        with rt.count_lock:
+            rt.tasks_done += 1
         rt.worker_agent.note_service_time(
             getattr(task, "last_exec_cycles", 1.0))
-        # load decrements piggyback on the completion route (worker -> owner)
+        # load decrements piggyback on the completion route (worker ->
+        # owner); each counter is applied in its owning scheduler's
+        # context through the uncharged update channel.
         if task.worker is not None:
             node = task.worker
             while node is not task.owner and node.parent is not None:
-                if node.core_id in node.parent.load:
-                    node.parent.load[node.core_id] = max(
-                        0, node.parent.load[node.core_id] - 1)
+                rt.sub.update(node.parent, self._dec_load,
+                              node.parent, node.core_id)
                 node = node.parent
         owner = task.owner
         for a in task.dep_args:
-            rt.sub.send(owner, rt.node_owner(a.nid),
+            rt.sub.send(owner, self.owner_sched(a.nid),
                         Message("s_release", (a.nid, task),
                                 cost=rt.cost.traverse_hop))
         if task is rt.main_task:
             rt.deps.release(ROOT_RID, task)
 
-    def h_release(self, nid: int, task: "Task") -> None:
-        rt = self.rt
-        if rt.dir.is_live(nid):
-            rt.deps.release(nid, task)
-
     # ---- ownership migration (paper SV-C) -----------------------------------
 
-    def maybe_migrate(self, owner: SchedNode) -> None:
-        """Opt-in load balancing: if ``owner`` holds more directory nodes
-        than ``rt.migrate_threshold``, hand its largest fitting region
-        subtree to the least-loaded sibling.
+    def maybe_migrate(self) -> None:
+        """Opt-in load balancing: if this agent's scheduler holds more
+        directory nodes than ``rt.migrate_threshold``, hand its largest
+        fitting region subtree to the least-loaded sibling.
 
-        Following the simulation's convention (mutations synchronous,
-        cycle costs travel as messages), the shard hand-off is applied
-        immediately while the parent-routed protocol — owner -> parent
-        request, parent -> sibling grant carrying the subtree metadata —
-        is charged through ``Hierarchy.send`` with a per-node transfer
+        Runs in the owner's execution context (the alloc agent routes
+        it there).  Following the simulation's convention (mutations
+        synchronous, cycle costs travel as messages), the shard hand-off
+        is applied immediately — directory flip and dependency-state pop
+        atomically under the directory lock, adoption in the new owner's
+        context — while the parent-routed protocol (owner -> parent
+        request, parent -> sibling grant carrying the subtree metadata)
+        is charged through the substrate with a per-node transfer
         cost."""
         rt = self.rt
+        owner = self.sched
         th = rt.migrate_threshold
         if th is None or owner.parent is None or owner.migrate_no_fit:
             return
@@ -305,13 +341,23 @@ class SchedAgent:
             # by this scheduler appears (cleared in AllocAgent.sys_ralloc)
             owner.migrate_no_fit = True
             return
-        moved = rt.dir.migrate_subtree(best.nid, target.core_id)
-        if not moved:
+        # directory flip + dependency-state pop are atomic under the
+        # directory lock: any observer that sees the new owner also sees
+        # the in-flight marker, and defers behind the adopt.
+        with rt.dir.lock:
+            nids = rt.dir.subtree_owned_nids(best.nid)
+            handoff = rt.deps.begin_handoff(
+                nids, owner.core_id, target.core_id)
+            moved = rt.dir.migrate_subtree(best.nid, target.core_id)
+        if not moved:   # pragma: no cover - target is never the owner
+            rt.deps.adopt(handoff, owner.core_id)
             return
         owner.region_load -= len(moved)
-        target.region_load += len(moved)
-        rt.migrations += 1
-        rt.nodes_migrated += len(moved)
+        rt.sub.update(target, self._adopt_migration,
+                      target, handoff, len(moved))
+        with rt.count_lock:
+            rt.migrations += 1
+            rt.nodes_migrated += len(moved)
         # parent-routed hand-off: request, then grant + metadata transfer
         rt.sub.send(owner, owner.parent,
                     Message("noop", cost=rt.cost.migrate_proc))
@@ -320,10 +366,19 @@ class SchedAgent:
                             cost=rt.cost.migrate_proc
                             + rt.cost.migrate_per_node * len(moved)))
 
+    def _adopt_migration(self, target: SchedNode, handoff: dict,
+                         n_moved: int) -> None:
+        """New-owner side of a hand-off (runs in target's context)."""
+        self.rt.deps.adopt(handoff, target.core_id)
+        target.region_load += n_moved
+
 
 class DepEffects:
     """DepEngine effects: every callback is work on the owner of the
-    destination node; route + charge accordingly."""
+    destination node; route + charge accordingly.  The effects object
+    is deliberately stateless — it runs inside whichever shard's scan
+    emitted the effect, so any per-scheduler state it needed would
+    belong to that shard, not here."""
 
     def __init__(self, rt: "Myrmics"):
         self.rt = rt
@@ -351,7 +406,7 @@ class DepEffects:
         task.satisfied += 1
         if task.satisfied == len(task.dep_args) and task.state == SPAWNED:
             task.state = READY
-            self.rt.sched_agent.begin_packing(task.owner, task)
+            self.rt.agent_of(task.owner).begin_packing(task)
 
     def wait_activated(self, task, nid: int) -> None:
         rt = self.rt
@@ -362,7 +417,7 @@ class DepEffects:
     def _h_wait_ready(self, task) -> None:
         task.wait_remaining -= 1
         if task.wait_remaining == 0:
-            self.rt.sched_agent.resume_task(task)
+            self.rt.agent_of(task.owner).resume_task(task)
 
     def send_quiesce(self, child_nid: int, parent_nid: int,
                      recv_r: int, recv_w: int) -> None:

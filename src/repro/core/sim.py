@@ -161,7 +161,8 @@ class CostModel:
 
 @dataclass
 class CoreStats:
-    """Per-core accounting used by the breakdown / traffic figures."""
+    """Per-core accounting used by the breakdown / traffic figures and
+    the per-scheduler occupancy/queue-delay summary (sched_scaling)."""
 
     busy_cycles: float = 0.0
     task_cycles: float = 0.0          # workers: cycles inside task bodies
@@ -171,6 +172,11 @@ class CoreStats:
     dma_bytes: int = 0
     tasks_executed: int = 0
     events: int = 0
+    #: messages/work items that waited for this core, and the total time
+    #: they spent queued before processing started (sim: virtual cycles,
+    #: threads: wall seconds spent in the scheduler mailbox).
+    msgs_handled: int = 0
+    queue_delay_cycles: float = 0.0
 
 
 class Core:
@@ -191,6 +197,8 @@ class Core:
         self.next_free = end
         self.stats.busy_cycles += cost
         self.stats.events += 1
+        self.stats.msgs_handled += 1
+        self.stats.queue_delay_cycles += start - arrival
         return end
 
     def exec_at(self, arrival: float, cost: float, fn: Callable, *args: Any) -> float:

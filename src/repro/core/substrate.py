@@ -32,9 +32,9 @@ virtual-cycle costs carried by the message.  The two implementations:
   with paper-calibrated cycle charges.  Deterministic and
   bit-reproducible; used for all scaling studies.
 * :class:`~.backend_threads.ThreadSubstrate` — the real concurrent
-  backend: scheduler handlers drain a queue on a dedicated thread,
-  worker cores are a thread pool executing actual Python/JAX task
-  bodies, and charges are wall-clock measurements.
+  backend: every scheduler node drains its own mailbox on a dedicated
+  thread, worker cores are a thread pool executing actual Python/JAX
+  task bodies, and charges are wall-clock measurements.
 """
 
 from __future__ import annotations
@@ -66,16 +66,30 @@ class Substrate:
     def __init__(self) -> None:
         self.handlers: dict[str, Callable] = {}
         self._is_done: Callable[[], bool] = lambda: True
+        self._route: Callable[[str, tuple], Any] | None = None
 
     def bind(self, handlers: dict[str, Callable],
-             is_done: Callable[[], bool] | None = None) -> None:
-        """Install the runtime's handler registry (kind -> callable)."""
+             is_done: Callable[[], bool] | None = None,
+             route: Callable[[str, tuple], Any] | None = None) -> None:
+        """Install the runtime's handler registry (kind -> callable).
+        ``route`` maps a marshalled service call to its destination
+        scheduler node (used by substrates that run one execution
+        context per scheduler)."""
         self.handlers = handlers
         if is_done is not None:
             self._is_done = is_done
+        if route is not None:
+            self._route = route
 
     def dispatch(self, kind: str, args: tuple) -> Any:
         return self.handlers[kind](*args)
+
+    def executing_id(self) -> str | None:
+        """Core id of the node whose handler is currently executing on
+        this substrate (None outside any handler — e.g. the program
+        entry).  Shard-owned state uses this to assert that it is only
+        ever touched in its owner's execution context."""
+        return None
 
     # -- messaging ----------------------------------------------------------
     def send(self, src: Any, dst: Any, msg: Message, *,
@@ -89,6 +103,26 @@ class Substrate:
     def call(self, kind: str, *args: Any) -> Any:
         """Synchronous runtime service from inside a task body."""
         raise NotImplementedError
+
+    def update(self, dst: Any, fn: Callable, *args: Any) -> None:
+        """Apply a state mutation *in dst's execution context*, without
+        any cost or message charge.
+
+        This is the seam for bookkeeping that the simulation convention
+        applies synchronously at the call site (load-counter decrements
+        piggybacked on completions, shard hand-offs, drop-on-free of
+        foreign dep nodes): the virtual-time substrate runs ``fn`` right
+        away — bit-identical to the pre-sharding runtime — while a
+        concurrent substrate marshals it to dst's mailbox so the state
+        is only ever touched by its owning scheduler thread."""
+        raise NotImplementedError
+
+    def defer(self, dst: Any, fn: Callable, *args: Any) -> None:
+        """Like :meth:`update`, but never applied inline: on queueing
+        substrates the mutation goes to the *back* of dst's mailbox
+        even from dst's own context.  Used to park an operation behind
+        an in-flight hand-off adopt that is already queued ahead."""
+        self.update(dst, fn, *args)
 
     def timer(self, when: float, msg: Message) -> None:
         raise NotImplementedError
@@ -131,23 +165,48 @@ class SimSubstrate(Substrate):
         super().__init__()
         self.hier = hier
         self.engine = hier.engine
+        self._executing: Any = None   # node whose handler is running
+
+    def executing_id(self) -> str | None:
+        ex = self._executing
+        return ex.core_id if ex is not None else None
+
+    def _dispatch_on(self, dst, kind: str, args: tuple):
+        """Run a handler with ``dst`` recorded as the executing core, so
+        shard ownership asserts hold through the event loop."""
+        prev, self._executing = self._executing, dst
+        try:
+            return self.dispatch(kind, args)
+        finally:
+            self._executing = prev
 
     # -- messaging ----------------------------------------------------------
     def send(self, src, dst, msg: Message, *,
              send_time: float | None = None) -> None:
-        self.hier.send(src, dst, msg.cost, self.dispatch, msg.kind, msg.args,
+        self.hier.send(src, dst, msg.cost, self._dispatch_on, dst,
+                       msg.kind, msg.args,
                        send_time=send_time, payload_bytes=msg.payload_bytes)
 
     def local(self, node, msg: Message, *,
               at_time: float | None = None) -> None:
-        self.hier.local(node, msg.cost, self.dispatch, msg.kind, msg.args,
-                        at_time=at_time)
+        self.hier.local(node, msg.cost, self._dispatch_on, node,
+                        msg.kind, msg.args, at_time=at_time)
 
     def call(self, kind: str, *args):
         # the simulation convention: runtime-service mutations apply
         # synchronously at the call site; their cycle costs travel as
         # charge messages issued by the handler itself.
         return self.dispatch(kind, args)
+
+    def update(self, dst, fn, *args) -> None:
+        # uncharged bookkeeping applies synchronously (the pre-sharding
+        # semantics), but inside dst's execution context so shard
+        # ownership asserts see the right owner.
+        prev, self._executing = self._executing, dst
+        try:
+            fn(*args)
+        finally:
+            self._executing = prev
 
     def timer(self, when: float, msg: Message) -> None:
         self.engine.at(when, self.dispatch, msg.kind, msg.args)

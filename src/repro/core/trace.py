@@ -1,4 +1,4 @@
-"""Chrome-trace export for the Myrmics runtime.
+"""Chrome-trace export + per-scheduler summaries for the Myrmics runtime.
 
 Records per-core busy intervals (task execution, scheduler processing,
 DMA transfers) during a run and writes the Chrome tracing JSON format —
@@ -9,6 +9,10 @@ scheduler lanes, DMA overlap, straggler backups, failures.
     tracer = attach_tracer(rt)
     rt.run(main)
     tracer.write("trace.json")
+
+:func:`sched_summary` renders a run's per-scheduler decentralization
+stats (messages handled, mailbox queue delay, occupancy) as rows — the
+data the ``sched_scaling`` benchmark row sweeps over scheduler counts.
 """
 
 from __future__ import annotations
@@ -45,6 +49,24 @@ class Tracer:
         }
         with open(path, "w") as f:
             json.dump(doc, f)
+
+
+def sched_summary(report, ndigits: int = 6) -> list[dict]:
+    """Per-scheduler stat rows for a :class:`~.api.RunReport`, in
+    deterministic core-id order: messages handled, total and mean
+    mailbox queue delay, and occupancy (busy fraction of the run).
+    Works for both backends — virtual cycles on ``sim``, wall seconds
+    on ``threads``."""
+    return [
+        {
+            "sched": core_id,
+            "msgs_handled": s["msgs_handled"],
+            "queue_delay": round(s["queue_delay"], ndigits),
+            "mean_queue_delay": round(s["mean_queue_delay"], ndigits),
+            "occupancy": round(s["occupancy"], ndigits),
+        }
+        for core_id, s in sorted(report.sched_summary().items())
+    ]
 
 
 def attach_tracer(rt) -> Tracer:

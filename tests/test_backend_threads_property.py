@@ -36,7 +36,7 @@ def wait_programs(draw):
 
 @settings(max_examples=20, deadline=None)
 @given(desc=wait_programs(), nw=st.sampled_from([2, 4]),
-       levels=st.sampled_from([[1], [1, 2]]))
+       levels=st.sampled_from([[1], [1, 2], [1, 4]]))
 def test_threads_random_dags_match_serial_oracle(desc, nw, levels):
     app = build_wait_app(desc)
     sr = SerialRuntime()

@@ -1,0 +1,271 @@
+"""The decentralized scheduler tier.
+
+Tentpole contracts of the per-scheduler dep/dir sharding:
+
+1. Dependency state is sharded per owning scheduler (``DepShard``), no
+   global node table remains, and a shard can only be touched in its
+   owner's execution context — cross-owner operations ride substrate
+   messages (re-homed, uncharged, when they cross a migration).
+2. ``DepEngine.drop``/``DepShard.drop`` is the only free-path teardown
+   (no module reaches into dep internals).
+3. SV-C migration hands the dependency state off with the directory
+   subtree — atomically with the owner-table flip — on both backends.
+4. The threads backend runs one mailbox + thread per scheduler node;
+   multi-scheduler runs (with and without migration) match the serial
+   oracle and the sim backend.
+5. Per-scheduler stats (messages handled, queue delay, occupancy) are
+   reported on both backends, and the ``sched_scaling`` row shows peak
+   queue delay decreasing as schedulers are added.
+"""
+
+import pytest
+
+from repro.core import InOut, Myrmics, Out, Safe, SerialRuntime, task
+from repro.core.deps import ARG, DepEngine, Entry
+from repro.core.regions import MODE_WRITE, ROOT_RID, AncestryCache, Directory
+
+
+# ---------------------------------------------------------------------------
+# shard structure + ownership context enforcement
+# ---------------------------------------------------------------------------
+
+
+def skewed_app(n_groups=12, objs=6):
+    def main(ctx, root):
+        top = ctx.ralloc(root, 1, label="top")
+        for g in range(n_groups):
+            sub = ctx.ralloc(top, 10**9, label=f"sub{g}")
+            oids = ctx.balloc(64, sub, objs, label=f"x{g}")
+            for i, o in enumerate(oids):
+                ctx.spawn(lambda c, oo, v=g * objs + i: c.write(oo, v),
+                          [Out(o)], duration=1e4)
+        yield ctx.wait([InOut(root)])
+    return main
+
+
+def test_dep_engine_has_no_global_node_table():
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2])
+    assert not hasattr(rt.deps, "nodes")
+    rt.run(skewed_app(n_groups=4, objs=2))
+    # state landed in per-owner shards, aligned with directory ownership
+    assert len(rt.deps.shards) >= 1
+    for owner_id, shard in rt.deps.shards.items():
+        for nid in shard.nodes:
+            assert rt.dir.owner_of(nid) == owner_id
+
+
+def test_dep_shard_rejects_foreign_context():
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2])
+    leaf = next(s for s in rt.hier.scheds if s.parent is not None)
+    root_shard = rt.deps.shard(rt.hier.root.core_id)
+    # outside any handler context: allowed (program entry, tests)
+    root_shard.node(ROOT_RID)
+    # inside another scheduler's context: a hard error
+    rt.sub._executing = leaf
+    try:
+        with pytest.raises(AssertionError, match="cross-owner"):
+            root_shard.node(ROOT_RID)
+    finally:
+        rt.sub._executing = None
+
+
+def test_dep_ops_rehome_to_owner_context():
+    """An operation invoked from the wrong scheduler context is re-homed
+    through the substrate's update channel, not applied in place."""
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2])
+    rid = rt.alloc_agent.sys_ralloc(ROOT_RID, 1, None)
+    owner_id = rt.dir.owner_of(rid)
+    other = next(s for s in rt.hier.scheds
+                 if s.core_id != owner_id and s.parent is not None)
+    class Stub:
+        parent = None
+        owner = rt.hier.root
+        satisfied = 0
+        dep_args = [None, None]
+        state = None
+
+    entry = Entry(ARG, Stub(), MODE_WRITE, (), 0)
+    rt.sub._executing = other     # simulate handling on the wrong core
+    try:
+        rt.deps.enqueue(rid, entry)
+    finally:
+        rt.sub._executing = None
+    assert rid in rt.deps.shard(owner_id).nodes
+    assert all(rid not in s.nodes for oid, s in rt.deps.shards.items()
+               if oid != owner_id)
+
+
+# ---------------------------------------------------------------------------
+# drop() — the free-path teardown API
+# ---------------------------------------------------------------------------
+
+
+def test_drop_removes_idle_state_and_rejects_busy():
+    d = Directory(root_owner="s0")
+    eng = DepEngine(d, effects=None)
+    oid = d.new_object(ROOT_RID, "s0", 8)
+    eng.node(oid)
+    eng.drop(oid)                       # idle: dropped silently
+    assert oid not in eng.shard("s0").nodes
+    node = eng.node(oid)
+    node.holders[object()] = MODE_WRITE
+    with pytest.raises(RuntimeError, match="freeing busy node"):
+        eng.drop(oid)
+
+
+def test_free_path_goes_through_drop(monkeypatch):
+    """alloc's free handlers never reach into dep internals: they call
+    DepEngine.drop for every freed nid."""
+    rt = Myrmics(n_workers=2, sched_levels=[1])
+    dropped = []
+    orig = rt.deps.drop
+    monkeypatch.setattr(rt.deps, "drop",
+                        lambda nid: (dropped.append(nid), orig(nid)))
+
+    def app(ctx, root):
+        rid = ctx.ralloc(root, 1, label="r")
+        oids = ctx.balloc(8, rid, 3)
+        for o in oids:
+            ctx.spawn(lambda c, oo: c.write(oo, 1), [Out(o)])
+        yield ctx.wait([InOut(root)])
+        ctx.rfree(rid)
+
+    rt.run(app)
+    assert len(dropped) == 4            # the region + its three objects
+
+
+# ---------------------------------------------------------------------------
+# migration hands dependency state off with the directory subtree
+# ---------------------------------------------------------------------------
+
+
+def _assert_dep_dir_alignment(rt):
+    for owner_id, shard in rt.deps.shards.items():
+        for nid in shard.nodes:
+            assert rt.dir.owner_of(nid) == owner_id, \
+                f"dep state for {nid} on {owner_id}, directory says " \
+                f"{rt.dir.owner_of(nid)}"
+    assert rt.deps.in_flight == {}
+
+
+def test_sim_migration_hands_off_dep_state():
+    rt = Myrmics(n_workers=8, sched_levels=[1, 2], migrate_threshold=6)
+    rep = rt.run(skewed_app())
+    assert rep.migrations > 0
+    _assert_dep_dir_alignment(rt)
+
+
+def test_threads_migration_matches_sim_and_serial():
+    """Satellite: SV-C migration under the threads backend — migrated
+    subtree ownership stays consistent and outputs match sim/serial."""
+    app = skewed_app()
+    sr = SerialRuntime()
+    sr.run(app)
+    sim = Myrmics(n_workers=8, sched_levels=[1, 2], migrate_threshold=6)
+    sim.run(app)
+    rt = Myrmics(n_workers=8, sched_levels=[1, 2], migrate_threshold=6,
+                 backend="threads")
+    rep = rt.run(app)
+    assert rep.tasks_spawned == rep.tasks_done
+    assert rt.labelled_storage() == sr.labelled_storage()
+    assert rt.labelled_storage() == sim.labelled_storage()
+    # every directory node lives in exactly the shard its owner table says
+    for nid, owner_id in rt.dir._owner.items():
+        assert nid in rt.dir.shard(owner_id)
+        assert all(nid not in s.nodes for oid, s in rt.dir.shards.items()
+                   if oid != owner_id)
+    _assert_dep_dir_alignment(rt)
+
+
+def test_threads_migration_under_four_leaf_schedulers():
+    app = skewed_app(n_groups=16, objs=4)
+    sr = SerialRuntime()
+    sr.run(app)
+    rt = Myrmics(n_workers=8, sched_levels=[1, 4], migrate_threshold=5,
+                 backend="threads")
+    rep = rt.run(app)
+    assert rep.tasks_spawned == rep.tasks_done
+    assert rt.labelled_storage() == sr.labelled_storage()
+    _assert_dep_dir_alignment(rt)
+
+
+# ---------------------------------------------------------------------------
+# one mailbox + thread per scheduler node
+# ---------------------------------------------------------------------------
+
+
+def test_threads_backend_runs_one_thread_per_scheduler():
+    rt = Myrmics(n_workers=4, sched_levels=[1, 4], backend="threads")
+    assert rt.sub.scheduler_threads == len(rt.hier.scheds) == 5
+
+    @task
+    def put(ctx, o: Out, v: Safe):
+        o.write(v)
+
+    def app(ctx, root):
+        rids = [ctx.ralloc(root, 1, label=f"r{g}") for g in range(4)]
+        oids = [ctx.alloc(8, r, label=f"o{i}") for i, r in enumerate(rids)]
+        for i, o in enumerate(oids):
+            ctx.spawn(put, o, i * 11)
+        yield ctx.wait([InOut(root)])
+
+    rep = rt.run(app)
+    assert rep.tasks_spawned == rep.tasks_done
+    assert rt.labelled_storage()["o2"] == 22
+    # with level-1 regions, messages were handled on leaf mailboxes too,
+    # not just the root's
+    summ = rep.sched_summary()
+    handled = {cid: s["msgs_handled"] for cid, s in summ.items()}
+    leaves = [cid for cid in handled if cid != rt.hier.root.core_id]
+    assert sum(handled[c] for c in leaves) > 0
+
+
+# ---------------------------------------------------------------------------
+# per-scheduler stats + the sched_scaling row
+# ---------------------------------------------------------------------------
+
+
+def test_sched_summary_reports_all_schedulers_sim():
+    from repro.core.trace import sched_summary
+
+    rt = Myrmics(n_workers=8, sched_levels=[1, 2])
+    rep = rt.run(skewed_app(n_groups=4, objs=2))
+    summ = rep.sched_summary()
+    assert set(summ) == {s.core_id for s in rt.hier.scheds}
+    assert summ[rt.hier.root.core_id]["msgs_handled"] > 0
+    for s in summ.values():
+        assert s["msgs_handled"] >= 0
+        assert s["queue_delay"] >= 0.0
+        assert 0.0 <= s["occupancy"] <= 1.0
+    rows = sched_summary(rep)
+    assert [r["sched"] for r in rows] == sorted(summ)
+    assert rows[0]["mean_queue_delay"] == pytest.approx(
+        rows[0]["queue_delay"] / rows[0]["msgs_handled"], rel=1e-3)
+
+
+def test_sched_summary_reports_queue_delay_threads():
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2], backend="threads")
+    rep = rt.run(skewed_app(n_groups=4, objs=2))
+    summ = rep.sched_summary()
+    assert set(summ) == {s.core_id for s in rt.hier.scheds}
+    assert sum(s["msgs_handled"] for s in summ.values()) > 0
+    assert all(s["queue_delay"] >= 0.0 for s in summ.values())
+
+
+def test_sched_scaling_peak_queue_delay_decreases():
+    from benchmarks.paper_figs import sched_scaling
+
+    rows = sched_scaling(workers=16, scheds=(1, 4), tasks_per_worker=2)
+    assert [r["schedulers"] for r in rows] == [1, 5]
+    assert rows[-1]["peak_queue_delay"] < rows[0]["peak_queue_delay"]
+    assert len(rows[-1]["per_sched"]) == 5
+
+
+def test_ancestry_cache_invalidates_on_migration():
+    d = Directory(root_owner="s0")
+    rid = d.new_region(ROOT_RID, "s1", 1)
+    cache = AncestryCache(d)
+    assert cache.owner_of(rid) == "s1"
+    d.migrate_subtree(rid, "s2")
+    assert cache.owner_of(rid) == "s2"   # version bump dropped the entry
+    assert cache.path_down(ROOT_RID, rid) == [ROOT_RID, rid]
