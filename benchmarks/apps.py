@@ -54,10 +54,10 @@ class AppResult:
 
 
 def _run(main, n_workers, levels, policy_p=20, cost=None,
-         backend="sim") -> AppResult:
+         backend="sim", coalesce=True) -> AppResult:
     rt = Myrmics(n_workers=n_workers, sched_levels=levels,
                  cost=cost or CostModel.heterogeneous(), policy_p=policy_p,
-                 backend=backend)
+                 backend=backend, coalesce=coalesce)
     rep = rt.run(main)
     assert rep.tasks_spawned == rep.tasks_done, "benchmark app hung"
     total = rep.total_cycles or 1.0
@@ -585,12 +585,14 @@ APPS = {
 
 
 def run_app(name: str, n_workers: int, mode: str, *, policy_p: int = 20,
-            cost: CostModel | None = None, backend: str = "sim", **kw):
+            cost: CostModel | None = None, backend: str = "sim",
+            coalesce: bool = True, **kw):
     """mode: mpi (analytic cycles) | flat | hier (AppResult).
 
     ``backend="threads"`` runs the app on the concurrent executor with
     real payloads (``real=True`` is implied); timings in the result are
-    wall-clock seconds."""
+    wall-clock seconds.  ``coalesce=False`` runs the per-arg message
+    stream (the pre-coalescing virtual-time figures)."""
     builder, mpi_model = APPS[name]
     cost = cost or CostModel.heterogeneous()
     if mode == "mpi":
@@ -605,8 +607,8 @@ def run_app(name: str, n_workers: int, mode: str, *, policy_p: int = 20,
         kw.setdefault("real", True)
     if mode == "flat":
         return _run(builder(n_workers, hier=False, **kw), n_workers, [1],
-                    policy_p, cost, backend)
+                    policy_p, cost, backend, coalesce)
     if mode == "hier":
         return _run(builder(n_workers, hier=True, **kw), n_workers,
-                    hier_levels(n_workers), policy_p, cost, backend)
+                    hier_levels(n_workers), policy_p, cost, backend, coalesce)
     raise ValueError(mode)

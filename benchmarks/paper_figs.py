@@ -90,7 +90,7 @@ def granularity(task_sizes=(100e3, 1e6, 10e6),
 # -- Fig. 8: scaling of the six benchmarks -----------------------------------------
 
 def scaling(names=None, workers=(8, 16, 32, 64, 128),
-            total_work: float = 512e6) -> list[dict]:
+            total_work: float = 512e6, coalesce: bool = True) -> list[dict]:
     rows = []
     for name in names or list(APPS):
         base = {}
@@ -99,7 +99,7 @@ def scaling(names=None, workers=(8, 16, 32, 64, 128),
                 kw = {}
                 if name not in ("bitonic", "matmul"):
                     kw["total_work"] = total_work
-                r = run_app(name, w, mode, **kw)
+                r = run_app(name, w, mode, coalesce=coalesce, **kw)
                 cycles = r if mode == "mpi" else r.cycles
                 key = mode
                 if key not in base:
@@ -265,6 +265,90 @@ def sched_scaling(workers: int = 64, scheds=(1, 2, 4, 8),
             "max_occupancy": round(max(occs), 3),
             "mean_occupancy": round(sum(occs) / len(occs), 3),
             "per_sched": per_sched,
+        })
+    return rows
+
+
+# -- Message coalescing: the batched control plane ---------------------------------
+
+
+@task
+def combine6(ctx, a: InOut, b: InOut, c: InOut, d: In, e: In, f: In):
+    """Virtual 6-arg task: three read-write args in one group region,
+    three read args in a neighbour group (paper-style stencil/reduce
+    footprint) — per-arg dependency traffic crosses two owner shards."""
+
+
+def _coalescing_app(n_groups_: int, per_group: int, n_tasks: int,
+                    task_size: float):
+    def main(ctx, root):
+        rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(n_groups_)]
+        objs = [ctx.balloc(64, rids[g], per_group) for g in range(n_groups_)]
+        nxt = [0] * n_groups_
+        for i in range(n_tasks):
+            g, g2 = i % n_groups_, (i + 3) % n_groups_
+            picks = []
+            for grp, n in ((g, 3), (g2, 3)):
+                for _ in range(n):
+                    picks.append(objs[grp][nxt[grp] % per_group])
+                    nxt[grp] += 1
+            ctx.spawn(combine6, *picks, duration=task_size)
+        yield ctx.wait([InOut(root)])
+
+    return main
+
+
+def msg_coalescing(workers=(64, 256), tasks_per_worker: int = 4,
+                   task_size: float = 22_500.0) -> list[dict]:
+    """The batched control plane, measured: a fig8-sized saturation
+    workload (near-empty 6-arg tasks over level-1 group regions,
+    MicroBlaze cost model — the paper's SVI-E regime where per-argument
+    dependency traffic bounds the schedulers) run with coalescing off
+    vs on.  Reports per-task total and dependency-control message
+    counts, bytes, and end-to-end cycles.  The derived reduction must
+    hold >= 2x and the coalesced schedule must not be slower — asserted
+    here so the CI perf smoke fails on a silent regression to per-arg
+    sends."""
+    cm = CostModel.microblaze()
+    rows = []
+    for w in workers:
+        levels = hier_levels(w)
+        per: dict[bool, dict] = {}
+        for co in (False, True):
+            rt = Myrmics(n_workers=w, sched_levels=levels, cost=cm,
+                         coalesce=co)
+            rep = rt.run(_coalescing_app(8, w, w * tasks_per_worker,
+                                         task_size))
+            assert rep.tasks_spawned == rep.tasks_done
+            ms = rep.msg_summary()
+            per[co] = {
+                "cycles": rep.total_cycles,
+                "msgs_per_task": ms["msgs_per_task"],
+                "dep_per_task": ms["dep_ctrl_msgs_per_task"],
+                "bytes": ms["total_bytes"],
+            }
+        reduction = per[False]["dep_per_task"] / per[True]["dep_per_task"]
+        speedup = per[False]["cycles"] / per[True]["cycles"]
+        assert reduction >= 2.0, (
+            f"coalescing regressed to per-arg sends at {w} workers: "
+            f"dep msgs/task {per[False]['dep_per_task']:.2f} -> "
+            f"{per[True]['dep_per_task']:.2f} (<2x)")
+        assert speedup >= 1.0, (
+            f"coalesced schedule slower at {w} workers: "
+            f"{per[False]['cycles']:.0f} -> {per[True]['cycles']:.0f}")
+        rows.append({
+            "workers": w,
+            "levels": levels,
+            "cycles_uncoalesced": round(per[False]["cycles"]),
+            "cycles_coalesced": round(per[True]["cycles"]),
+            "speedup": round(speedup, 3),
+            "msgs_per_task": [round(per[False]["msgs_per_task"], 2),
+                              round(per[True]["msgs_per_task"], 2)],
+            "dep_msgs_per_task": [round(per[False]["dep_per_task"], 2),
+                                  round(per[True]["dep_per_task"], 2)],
+            "dep_reduction": round(reduction, 2),
+            "msg_mb": [round(per[False]["bytes"] / 1e6, 2),
+                       round(per[True]["bytes"] / 1e6, 2)],
         })
     return rows
 

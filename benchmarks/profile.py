@@ -1,0 +1,56 @@
+"""cProfile harness over a fig8-sized virtual-time run.
+
+    PYTHONPATH=src python -m benchmarks.profile [--app jacobi]
+                                                [--workers 64]
+                                                [--mode hier]
+                                                [--top 25]
+                                                [--no-coalesce]
+
+Profiles one simulator run of a paper benchmark and prints the top-N
+functions by *cumulative* time, so perf PRs target measured hot spots
+instead of guessed ones.  The default (jacobi, 64 workers, hier) is the
+fig8 mid-point: big enough that the dependency/packing/scheduling hot
+path dominates, small enough to finish in seconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import cProfile
+import pstats
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default="jacobi",
+                    help="benchmark app name (see benchmarks.apps.APPS)")
+    ap.add_argument("--workers", type=int, default=64)
+    ap.add_argument("--mode", default="hier", choices=("flat", "hier"))
+    ap.add_argument("--top", type=int, default=25,
+                    help="functions to print (cumulative time order)")
+    ap.add_argument("--no-coalesce", dest="coalesce", action="store_false",
+                    help="profile the per-arg (uncoalesced) message path")
+    args = ap.parse_args()
+
+    from .apps import APPS, run_app
+    if args.app not in APPS:
+        print(f"error: unknown app {args.app!r}; known: "
+              + ", ".join(APPS), file=sys.stderr)
+        sys.exit(2)
+
+    prof = cProfile.Profile()
+    prof.enable()
+    result = run_app(args.app, args.workers, args.mode,
+                     coalesce=args.coalesce)
+    prof.disable()
+
+    print(f"# {args.app} mode={args.mode} workers={args.workers} "
+          f"coalesce={args.coalesce}: {result.tasks} tasks, "
+          f"{result.cycles:.3e} virtual cycles")
+    stats = pstats.Stats(prof, stream=sys.stdout)
+    stats.strip_dirs().sort_stats("cumulative").print_stats(args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import platform
 import statistics
+import subprocess
 import sys
 import time
 
@@ -76,6 +78,11 @@ def _row_fns():
         rows = F.sched_scaling(scheds=scheds)
         return rows, len(rows)
 
+    def msg_coalescing(full):
+        workers = (64, 128, 256) if full else (64, 256)
+        rows = F.msg_coalescing(workers=workers)
+        return rows, 2 * len(rows)
+
     def fig12b(full):
         workers = (32, 64, 128, 256) if full else (32, 64, 128)
         rows = F.hierarchy_depth(workers=workers)
@@ -101,6 +108,7 @@ def _row_fns():
         ("fig11_locality_sweep", fig11),
         ("svc_region_ownership", svc),
         ("sched_scaling", sched_scaling),
+        ("msg_coalescing", msg_coalescing),
         ("fig12b_hierarchy_depth", fig12b),
         ("threads_smoke", threads_smoke),
         ("roofline_table", roofline),
@@ -117,6 +125,7 @@ ROWS = (
     "fig11_locality_sweep",
     "svc_region_ownership",
     "sched_scaling",
+    "msg_coalescing",
     "fig12b_hierarchy_depth",
     "threads_smoke",
     "roofline_table",
@@ -125,6 +134,35 @@ ROWS = (
 
 #: Rows emitted by this invocation (the ``--out`` JSON payload).
 EMITTED: list[dict] = []
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.TimeoutExpired):
+        return "unknown"
+
+
+def _out_meta(args) -> dict:
+    """The ``--out`` JSON metadata header: enough provenance to compare
+    BENCH_*.json files across the perf trajectory without guessing what
+    produced them."""
+    from repro.core.sim import CostModel
+    return {
+        "git_sha": _git_sha(),
+        "grid": "full" if args.full else "reduced",
+        "repeat": args.repeat,
+        "only": args.only,
+        "backend": "sim (threads_smoke row: threads)",
+        "cost_model": CostModel.heterogeneous().name
+        + " (microblaze rows: microblaze)",
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
 
 
 def _emit(name: str, us_per_call: float, samples_us: list[float],
@@ -185,7 +223,7 @@ def main() -> None:
 
     if args.out is not None:
         with open(args.out, "w") as f:
-            json.dump(EMITTED, f, indent=1)
+            json.dump({"meta": _out_meta(args), "rows": EMITTED}, f, indent=1)
 
 
 if __name__ == "__main__":

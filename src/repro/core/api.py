@@ -366,7 +366,14 @@ def task(fn=None, *, name: str | None = None):
 _REPORT_FIELDS = (
     "total_cycles", "tasks_spawned", "tasks_done", "events",
     "workers", "scheds", "region_load", "migrations", "nodes_migrated",
-    "backend",
+    "backend", "msg_kinds",
+)
+
+#: Message kinds that carry per-argument dependency control traffic —
+#: the traffic coalescing batches.  Prefix-matched so the ``*_batch``
+#: variants count toward the same family.
+_DEP_CONTROL_PREFIXES = (
+    "s_enqueue", "s_release", "d_quiesce", "s_arg_ready", "s_wait_ready",
 )
 
 
@@ -394,6 +401,9 @@ class RunReport:
     migrations: int
     nodes_migrated: int
     backend: str = "sim"
+    #: per-kind wire-message accounting: kind -> {"count", "bytes"}
+    #: (sim counts cross-core sends; threads counts every send)
+    msg_kinds: dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {name: getattr(self, name) for name in _REPORT_FIELDS}
@@ -402,6 +412,30 @@ class RunReport:
         if key not in _REPORT_FIELDS:
             raise KeyError(key)
         return getattr(self, key)
+
+    def msg_summary(self) -> dict:
+        """Wire-message accounting for the run: per-kind counts/bytes,
+        totals, and the per-task rates — in particular
+        ``dep_ctrl_msgs_per_task``, the per-argument dependency-control
+        traffic (enqueue/release/quiesce/ready families) that message
+        coalescing batches; the ``msg_coalescing`` benchmark row and the
+        CI perf smoke assert its >=2x reduction.  Works on both
+        backends; :func:`repro.core.trace.msg_summary` renders the
+        per-kind table as rows."""
+        per_kind = {k: dict(v) for k, v in sorted(self.msg_kinds.items())}
+        total = sum(v["count"] for v in per_kind.values())
+        total_bytes = sum(v["bytes"] for v in per_kind.values())
+        dep = sum(v["count"] for k, v in per_kind.items()
+                  if k.startswith(_DEP_CONTROL_PREFIXES))
+        tasks = self.tasks_done or 1
+        return {
+            "per_kind": per_kind,
+            "total_msgs": total,
+            "total_bytes": total_bytes,
+            "dep_ctrl_msgs": dep,
+            "msgs_per_task": total / tasks,
+            "dep_ctrl_msgs_per_task": dep / tasks,
+        }
 
     def sched_summary(self) -> dict[str, dict]:
         """Per-scheduler decentralization stats: messages handled,

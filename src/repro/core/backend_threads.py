@@ -25,7 +25,13 @@ agents as the virtual-time simulation, but over this substrate:
   are marshalled as synchronous calls to the mailbox of the *owning*
   scheduler (``Myrmics._call_dest``): footprint validation and
   directory mutation happen in the owner's execution context, never
-  concurrently with another handler for the same shard.
+  concurrently with another handler for the same shard.  With message
+  coalescing on (the default), ``ctx.spawn``s are buffered on the task
+  context and flushed as **one** marshalled ``sys_spawn_batch`` call
+  at the next wait / runtime call / body end — legal because
+  dependencies are only observable at a wait — and each scheduler
+  mailbox drains its whole queue per wakeup instead of one blocking
+  get per message.
 * **accounting** — message costs are not charged: ``busy_cycles`` /
   ``task_cycles`` / ``queue_delay_cycles`` in the
   :class:`~.api.RunReport` are wall-clock seconds measured around each
@@ -153,6 +159,7 @@ class ThreadSubstrate(Substrate):
             st = src.core.stats
             st.msgs_sent += 1
             st.msg_bytes_sent += msg.payload_bytes
+            self._note_msg(msg.kind, msg.payload_bytes)
         if self._is_sched(dst):
             self._put(dst, msg)
         else:
@@ -285,22 +292,45 @@ class ThreadSubstrate(Substrate):
 
     def _sched_loop(self, sched) -> None:
         """One scheduler node: drain the mailbox, handlers touch only
-        this scheduler's shards."""
+        this scheduler's shards.  Each wakeup drains *everything*
+        already queued in one sweep (coalescing at the executor level:
+        one blocking get per burst instead of one per message), then
+        processes the swept items in arrival order."""
         self._local.node = sched
         box = self._boxes[sched.core_id]
         while True:
             try:
-                enq_t, payload = box.get(timeout=0.05)
+                batch = [box.get(timeout=0.05)]
             except queue.Empty:
                 if self._aborting:
                     break
                 continue
-            if payload is _STOP:
+            while True:   # sweep the rest of the queue without blocking
+                try:
+                    batch.append(box.get_nowait())
+                except queue.Empty:
+                    break
+            stopping = False
+            for i, (enq_t, payload) in enumerate(batch):
+                if payload is _STOP:
+                    # items swept after the sentinel were pulled out of
+                    # the box, so _shutdown's drain cannot answer them:
+                    # abort their calls here before exiting the loop
+                    err = self._error or RuntimeError("substrate shut down")
+                    for _, rest in batch[i + 1:]:
+                        if isinstance(rest, _Call):
+                            rest.error = err
+                            rest.done.set()
+                        if rest is not _STOP:
+                            self._done_item()
+                    stopping = True
+                    break
+                try:
+                    self._handle(sched, enq_t, payload)
+                finally:
+                    self._done_item()
+            if stopping:
                 break
-            try:
-                self._handle(sched, enq_t, payload)
-            finally:
-                self._done_item()
 
     def _handle(self, sched, enq_t: float, payload) -> None:
         if isinstance(payload, _Call):
@@ -531,6 +561,7 @@ class ThreadWorkerAgent:
             task.gen = result
             self._drive(w, rec)
         else:
+            ctx.flush_spawns()   # coalesced spawns: body end is a flush point
             self._finish(w, rec)
 
     def _drive(self, w: WorkerNode, rec: ThreadExec) -> None:
@@ -538,6 +569,7 @@ class ThreadWorkerAgent:
             with active_ctx(rec.ctx):
                 yielded = next(rec.task.gen)
         except StopIteration:
+            rec.ctx.flush_spawns()
             self._finish(w, rec)
             return
         if not isinstance(yielded, WaitSpec):
@@ -551,6 +583,7 @@ class ThreadWorkerAgent:
                  spec: WaitSpec) -> None:
         rt = self.rt
         task = rec.task
+        rec.ctx.flush_spawns()   # children must enqueue before the WAIT
         task.state = WAITING
         task.wait_remaining = len(spec.args)
         rt.sub.charge_task(w, rt.sub.now - rec.wall0, executed=False)

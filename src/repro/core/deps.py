@@ -38,6 +38,7 @@ scheduler boundaries.
 
 from __future__ import annotations
 
+import contextlib
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Protocol
@@ -415,7 +416,56 @@ class DepEngine:
     def drop(self, nid: int) -> None:
         self._on_owner(nid, "drop", nid)
 
+    # -- batched operation routing (message coalescing) --------------------------
+
+    def _fx_scope(self):
+        """The effects object's outgoing-message coalescing scope, when
+        it provides one (a no-op otherwise — e.g. bare-engine tests)."""
+        scope = getattr(self.fx, "coalesce_scope", None)
+        return scope() if scope is not None else contextlib.nullcontext()
+
+    def _batch_on_owner(self, op: str, items: list) -> None:
+        """Run ``shard.op(*item)`` for every item (item[0] is the nid) in
+        the owning scheduler's context, preserving item order per
+        destination.  Items whose owner's context this is run inline;
+        items that crossed an SV-C migration are re-homed to the new
+        owner — as whole sub-batches — through the same uncharged
+        ``update``/``defer`` channels the per-item path uses."""
+        sub = self.sub
+        ex = sub.executing_id() if sub is not None else None
+        deferred: dict[str, list] = {}
+        rehomed: dict[str, list] = {}
+        for item in items:
+            nid = item[0]
+            target = self.in_flight.get(nid)
+            if target is not None and sub is not None:
+                deferred.setdefault(target, []).append(item)
+                continue
+            owner = self.dir.owner_of(nid)
+            if sub is not None and ex is not None and ex != owner:
+                rehomed.setdefault(owner, []).append(item)
+                continue
+            getattr(self.shard(owner), op)(*item)
+        for owner, group in rehomed.items():
+            sub.update(self.rt.sched_of(owner), self._h_batch_group,
+                       op, group)
+        for target, group in deferred.items():
+            sub.defer(self.rt.sched_of(target), self._h_batch_group,
+                      op, group)
+
+    def _h_batch_group(self, op: str, items: list) -> None:
+        """Re-homed/deferred sub-batch, re-entering in (what is now) the
+        owner's context; re-partitions in case ownership moved again."""
+        with self._fx_scope():
+            self._batch_on_owner(op, items)
+
     # -- message-handler entry points (registered by the runtime) ---------------
+    # Singleton handlers do NOT open the effects' coalescing scope:
+    # their notifications (one arg-ready, one quiesce) are
+    # latency-critical single hops, and buffering them measurably
+    # lengthens the end-to-end schedule.  Only the *batch* handlers
+    # below buffer their cascades — a burst of k ops naturally emits a
+    # burst of same-destination notifications worth grouping.
 
     def h_enqueue(self, nid: int, entry: Entry,
                   via_parent: int | None) -> None:
@@ -424,6 +474,26 @@ class DepEngine:
     def h_release(self, nid: int, task) -> None:
         if self.dir.is_live(nid):
             self.release(nid, task)
+
+    def h_enqueue_batch(self, items: tuple) -> None:
+        """One coalesced enqueue batch: items are (nid, entry,
+        via_parent) in program order for this (origin, owner) pair."""
+        with self._fx_scope():
+            self._batch_on_owner("enqueue", list(items))
+
+    def h_release_batch(self, nids: tuple, task) -> None:
+        """One coalesced release batch: every argument node of ``task``
+        owned by this scheduler."""
+        with self._fx_scope():
+            self._batch_on_owner(
+                "release", [(nid, task) for nid in nids
+                            if self.dir.is_live(nid)])
+
+    def h_quiesce_batch(self, items: tuple) -> None:
+        """One coalesced quiesce batch: items are (parent_nid, child_nid,
+        recv_r, recv_w) tuples addressed to this parent-owner."""
+        with self._fx_scope():
+            self._batch_on_owner("recv_quiesce", list(items))
 
     # -- SV-C migration hand-off ------------------------------------------------
 

@@ -363,6 +363,20 @@ class AncestryCache:
             owner = self._owner[nid] = self.dir.owner_of(nid)
         return owner
 
+    def owners_of(self, nids) -> dict[int, str]:
+        """Batch owner routes: one version sync for the whole group, one
+        memoized lookup per distinct nid — the fast path batch routing
+        groups destinations with (message coalescing)."""
+        self._sync()
+        cached = self._owner
+        out: dict[int, str] = {}
+        for nid in nids:
+            owner = cached.get(nid)
+            if owner is None:
+                owner = cached[nid] = self.dir.owner_of(nid)
+            out[nid] = owner
+        return out
+
     # -- ancestry walks (parent pointers are immutable; no caching needed) --
 
     def path_down(self, origin: int, target: int) -> list[int]:

@@ -134,6 +134,23 @@ class TaskContext:
         self.worker = worker
         self.t0 = t0
         self.cursor = 0.0   # virtual cycles consumed so far by this activation
+        self._spawn_buf: list[Task] | None = None   # threads-backend coalescing
+
+    # --- coalesced spawn flushing (threads backend) -----------------------------
+    def buffer_spawn(self, task: Task) -> None:
+        if self._spawn_buf is None:
+            self._spawn_buf = []
+        self._spawn_buf.append(task)
+
+    def flush_spawns(self) -> None:
+        """Flush buffered child spawns as one marshalled batch call.
+        Legal because dependencies are only observable at a wait: spawn
+        processing (footprint validation, dependency enqueues) defers to
+        the next wait / runtime call / body end, collapsing per-spawn
+        mailbox round-trips into one."""
+        buf, self._spawn_buf = self._spawn_buf, None
+        if buf:
+            self.rt.sub.call("sys_spawn_batch", tuple(buf), self)
 
     # --- time -----------------------------------------------------------------
     def compute(self, cycles: float) -> None:
@@ -151,6 +168,7 @@ class TaskContext:
     def ralloc(self, parent_rid: int | RegionRef = ROOT_RID,
                level_hint: int = 10**9,
                label: str | None = None) -> RegionRef:
+        self.flush_spawns()   # keep spawn/alloc ordering observable
         self.cursor += self.rt.cost.worker_alloc_call
         rid = self.rt.sub.call("sys_ralloc", nid_of(parent_rid), level_hint,
                                self, label)
@@ -158,12 +176,14 @@ class TaskContext:
 
     def alloc(self, size: int, rid: int | RegionRef = ROOT_RID,
               label: str | None = None) -> ObjRef:
+        self.flush_spawns()
         self.cursor += self.rt.cost.worker_alloc_call
         oid = self.rt.sub.call("sys_alloc", size, nid_of(rid), self, label)
         return ObjRef(oid, label, self.rt.dir)
 
     def balloc(self, size: int, rid: int | RegionRef, num: int,
                label: str | None = None) -> list[ObjRef]:
+        self.flush_spawns()
         self.cursor += self.rt.cost.worker_alloc_call
         oids = self.rt.sub.call("sys_balloc", size, nid_of(rid), num, self,
                                 label)
@@ -171,10 +191,12 @@ class TaskContext:
                 for i, o in enumerate(oids)]
 
     def free(self, oid: int | ObjRef) -> None:
+        self.flush_spawns()
         self.cursor += self.rt.cost.worker_alloc_call
         self.rt.sub.call("sys_free", free_nid(oid, False, "free"), self)
 
     def rfree(self, rid: int | RegionRef) -> None:
+        self.flush_spawns()
         self.cursor += self.rt.cost.worker_alloc_call
         self.rt.sub.call("sys_rfree", free_nid(rid, True, "rfree"), self)
 
@@ -208,6 +230,7 @@ class TaskContext:
 
     def wait(self, args: list[Arg]) -> WaitSpec:
         """Use as ``yield ctx.wait([...])`` inside a generator task."""
+        self.flush_spawns()   # dependencies become observable here
         self.cursor += self.rt.cost.worker_wait_call
         return WaitSpec(args)
 
@@ -267,13 +290,22 @@ class Myrmics:
     a scheduler owning more than that many directory nodes offers
     subtrees to underloaded siblings (default off — virtual-time results
     are then identical to the pre-sharding runtime).
+    ``coalesce`` (default on) batches the per-argument control-plane
+    messages: dependency enqueues, releases and the quiesce/ready
+    notification cascades travel as one ``*_batch`` message per
+    (source, owner) pair, and — on the threads backend — a task body's
+    ``ctx.spawn``s flush as one marshalled batch at the next
+    wait/runtime call/body end.  ``coalesce=False`` is the escape hatch
+    reproducing the per-arg message stream (and its virtual-time
+    figures) byte-identically.
     """
 
     def __init__(self, n_workers: int = 4, sched_levels: list[int] | None = None,
                  cost: CostModel | None = None, policy_p: int = 20,
                  max_events: int | None = 50_000_000,
                  migrate_threshold: int | None = None,
-                 backend: str = "sim", max_wall_s: float = 600.0):
+                 backend: str = "sim", max_wall_s: float = 600.0,
+                 coalesce: bool = True):
         from .alloc import AllocAgent
         from .sched_agent import DepEffects, SchedAgent
         from .worker_agent import WorkerAgent
@@ -281,6 +313,7 @@ class Myrmics:
         if backend not in ("sim", "threads"):
             raise ValueError(f"unknown backend {backend!r}: sim | threads")
         self.backend = backend
+        self.coalesce = coalesce
         self.engine = Engine()
         self.cost = cost or CostModel.heterogeneous()
         self.hier = Hierarchy.build(
@@ -361,8 +394,8 @@ class Myrmics:
         """Destination scheduler of a marshalled runtime-service call
         (the threaded substrate routes the call to this scheduler's
         mailbox; the sim substrate dispatches synchronously)."""
-        if kind == "sys_spawn":
-            return args[1].task.owner          # (task, ctx)
+        if kind in ("sys_spawn", "sys_spawn_batch"):
+            return args[1].task.owner          # (task(s), ctx)
         if kind == "sys_ralloc":
             return self.node_owner(args[0])    # (parent_rid, ...)
         if kind in ("sys_alloc", "sys_balloc"):
@@ -392,6 +425,12 @@ class Myrmics:
             "s_arg_ready": deps.fx._h_arg_ready,
             "s_wait_ready": deps.fx._h_wait_ready,
             "d_quiesce": deps.recv_quiesce,
+            # coalesced control-plane batches (one message, many ops)
+            "s_enqueue_batch": deps.h_enqueue_batch,
+            "s_release_batch": deps.h_release_batch,
+            "d_quiesce_batch": deps.h_quiesce_batch,
+            "s_arg_ready_batch": deps.fx._h_arg_ready_batch,
+            "s_wait_ready_batch": deps.fx._h_wait_ready_batch,
             # worker-role handlers (dispatched to whichever worker agent
             # the backend installed)
             "w_dispatch": wa.h_dispatch,
@@ -405,6 +444,8 @@ class Myrmics:
             # routed to the owning scheduler's agent (see _call_dest)
             "sys_spawn": lambda task, ctx:
                 agent(ctx.task.owner).sys_spawn(task, ctx),
+            "sys_spawn_batch": lambda tasks, ctx:
+                [agent(ctx.task.owner).sys_spawn(t, ctx) for t in tasks],
             "sys_ralloc": lambda parent_rid, *a:
                 self.alloc_of(parent_rid).sys_ralloc(parent_rid, *a),
             "sys_alloc": lambda size, rid, *a:
@@ -449,6 +490,13 @@ class Myrmics:
                   call: tuple | None = None) -> Task:
         task = Task(fn, args, parent=ctx.task, duration=duration, name=name,
                     call=call)
+        if (self.coalesce and self.backend == "threads"
+                and self.sub.executing_id() is None):
+            # worker-side coalescing: buffer the spawn; it flushes as
+            # one marshalled sys_spawn_batch at the next wait / runtime
+            # call / body end (dependencies only observable at wait)
+            ctx.buffer_spawn(task)
+            return task
         self.sub.call("sys_spawn", task, ctx)
         return task
 
@@ -502,6 +550,7 @@ class Myrmics:
             migrations=self.migrations,
             nodes_migrated=self.nodes_migrated,
             backend=self.backend,
+            msg_kinds=self.sub.msg_kind_summary(),
         )
 
 

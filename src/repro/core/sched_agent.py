@@ -37,6 +37,8 @@ message or charge differs from the unsharded runtime.
 
 from __future__ import annotations
 
+import threading
+from contextlib import contextmanager
 from typing import TYPE_CHECKING
 
 from .api import nid_of
@@ -44,6 +46,7 @@ from .deps import ARG, TRAVERSE, WAIT, Entry
 from .regions import MODE_WRITE, ROOT_RID, AncestryCache, NodeMeta
 from .runtime import DISPATCHED, DONE, READY, SPAWNED
 from .sched import SchedNode, score_candidates
+from .sim import batch_payload_bytes
 from .substrate import Message
 
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard
@@ -141,6 +144,7 @@ class SchedAgent:
             rt.sub.local(owner, Message("s_mark_ready", (task,)))
             return
         parent_nids = task.parent.arg_nids() if task.parent else [ROOT_RID]
+        enqueues = []
         for i, a in enumerate(task.dep_args):
             origin = self.cache.covering_node(parent_nids, a.nid)
             path = self.cache.path_down(origin, a.nid)
@@ -148,9 +152,51 @@ class SchedAgent:
                 entry = Entry(ARG, task, a.mode, (), i)
             else:
                 entry = Entry(TRAVERSE, task, a.mode, tuple(path[1:]), i)
-            rt.sub.send(sched, self.owner_sched(origin),
-                        Message("s_enqueue", (origin, entry, None),
-                                cost=rt.cost.dep_enqueue_per_arg))
+            enqueues.append((origin, entry, None))
+        self._send_enqueues(sched, enqueues)
+
+    # ---- coalesced dependency sends (perf: batched control plane) -----------
+
+    def _grouped_by_owner(self, keyed_items) -> dict[str, list]:
+        """Group (nid, item) pairs by owning scheduler, resolving every
+        route through one :meth:`~.regions.AncestryCache.owners_of`
+        pass — the batch-routing fast path shared by the enqueue and
+        release coalescers."""
+        keyed = list(keyed_items)
+        owners = self.cache.owners_of(nid for nid, _ in keyed)
+        groups: dict[str, list] = {}
+        for nid, item in keyed:
+            groups.setdefault(owners[nid], []).append(item)
+        return groups
+
+    def _send_enqueues(self, src: SchedNode, items: list[tuple]) -> None:
+        """Send dependency enqueues, grouped per owning scheduler when
+        coalescing is on: one ``s_enqueue_batch`` per (src, owner) pair,
+        charged by :meth:`~.sim.CostModel.batch_cost` and sized in
+        64-byte packets.  Singleton groups keep the legacy per-arg
+        message with its legacy charge, so 1-arg spawn paths (the fig7a
+        calibration) are identical with coalescing on or off."""
+        rt = self.rt
+        if not rt.coalesce:
+            for nid, entry, via in items:
+                rt.sub.send(src, self.owner_sched(nid),
+                            Message("s_enqueue", (nid, entry, via),
+                                    cost=rt.cost.dep_enqueue_per_arg))
+            return
+        groups = self._grouped_by_owner((it[0], it) for it in items)
+        for owner_id, group in groups.items():
+            dst = rt.sched_of(owner_id)
+            if len(group) == 1:
+                for nid, entry, via in group:
+                    rt.sub.send(src, dst,
+                                Message("s_enqueue", (nid, entry, via),
+                                        cost=rt.cost.dep_enqueue_per_arg))
+            else:
+                rt.sub.send(src, dst, Message(
+                    "s_enqueue_batch", (tuple(group),),
+                    cost=rt.cost.batch_cost(rt.cost.dep_enqueue_per_arg,
+                                            len(group)),
+                    payload_bytes=batch_payload_bytes(len(group))))
 
     def mark_ready(self, task: "Task") -> None:
         task.state = READY
@@ -247,12 +293,9 @@ class SchedAgent:
     # ---- sys_wait -----------------------------------------------------------
 
     def h_wait(self, task: "Task", args: list) -> None:
-        rt = self.rt
-        for a in args:
-            entry = Entry(WAIT, task, a.mode, (), -1)
-            rt.sub.send(task.owner, self.owner_sched(a.nid),
-                        Message("s_enqueue", (a.nid, entry, None),
-                                cost=rt.cost.dep_enqueue_per_arg))
+        self._send_enqueues(
+            task.owner,
+            [(a.nid, Entry(WAIT, task, a.mode, (), -1), None) for a in args])
 
     def resume_task(self, task: "Task") -> None:
         rt = self.rt
@@ -290,10 +333,30 @@ class SchedAgent:
                               node.parent, node.core_id)
                 node = node.parent
         owner = task.owner
-        for a in task.dep_args:
-            rt.sub.send(owner, self.owner_sched(a.nid),
-                        Message("s_release", (a.nid, task),
-                                cost=rt.cost.traverse_hop))
+        if rt.coalesce and len(task.dep_args) > 1:
+            # one s_release_batch per (owner, arg-owner) pair instead of
+            # one s_release per argument; singletons keep the legacy
+            # message and charge
+            groups = self._grouped_by_owner(
+                (a.nid, a.nid) for a in task.dep_args)
+            for owner_id, nids in groups.items():
+                dst = rt.sched_of(owner_id)
+                if len(nids) == 1:
+                    for nid in nids:
+                        rt.sub.send(owner, dst,
+                                    Message("s_release", (nid, task),
+                                            cost=rt.cost.traverse_hop))
+                else:
+                    rt.sub.send(owner, dst, Message(
+                        "s_release_batch", (tuple(nids), task),
+                        cost=rt.cost.batch_cost(rt.cost.traverse_hop,
+                                                len(nids)),
+                        payload_bytes=batch_payload_bytes(len(nids))))
+        else:
+            for a in task.dep_args:
+                rt.sub.send(owner, self.owner_sched(a.nid),
+                            Message("s_release", (a.nid, task),
+                                    cost=rt.cost.traverse_hop))
         if task is rt.main_task:
             rt.deps.release(ROOT_RID, task)
 
@@ -376,12 +439,77 @@ class SchedAgent:
 class DepEffects:
     """DepEngine effects: every callback is work on the owner of the
     destination node; route + charge accordingly.  The effects object
-    is deliberately stateless — it runs inside whichever shard's scan
-    emitted the effect, so any per-scheduler state it needed would
-    belong to that shard, not here."""
+    is deliberately stateless apart from the thread-local outgoing
+    coalescing buffer — it runs inside whichever shard's scan emitted
+    the effect, so any per-scheduler state it needed would belong to
+    that shard, not here.
+
+    With coalescing on, a *batch* dependency handler opens
+    :meth:`coalesce_scope` around its scan cascade: the per-entry
+    effects it emits (traversal-forwarding ``s_enqueue``, ``d_quiesce``,
+    ``s_arg_ready``, ``s_wait_ready``) are buffered per (source,
+    destination) pair and flushed grouped at scope exit — one
+    ``*_batch`` message per pair, charged by
+    :meth:`~.sim.CostModel.batch_cost_mixed`.  Singleton groups flush
+    as the legacy message with the legacy charge, and singleton
+    handlers never buffer (their one notification is a latency-critical
+    hop).  The buffer is thread-local so concurrent scheduler threads
+    never interleave buffers."""
 
     def __init__(self, rt: "Myrmics"):
         self.rt = rt
+        self._local = threading.local()
+
+    # ---- outgoing-message coalescing ----------------------------------------
+
+    @contextmanager
+    def coalesce_scope(self):
+        """Buffer batchable effect messages for the dynamic extent of
+        one dependency-handler cascade; no-op (and no buffer) when
+        coalescing is off or a scope is already open on this thread."""
+        if not self.rt.coalesce or \
+                getattr(self._local, "buf", None) is not None:
+            yield
+            return
+        self._local.buf = {}
+        try:
+            yield
+        finally:
+            buf, self._local.buf = self._local.buf, None
+            self._flush(buf)
+
+    def _emit(self, src: SchedNode, dst: SchedNode, kind: str,
+              item: tuple, cost: float) -> None:
+        buf = getattr(self._local, "buf", None)
+        if buf is None:
+            self.rt.sub.send(src, dst, Message(kind, item, cost=cost))
+            return
+        buf.setdefault((src.core_id, dst.core_id, kind), []).append(
+            (item, cost))
+
+    def _flush(self, buf: dict) -> None:
+        rt = self.rt
+        for (src_id, dst_id, kind), entries in buf.items():
+            src, dst = rt.sched_of(src_id), rt.sched_of(dst_id)
+            if len(entries) == 1:
+                item, cost = entries[0]
+                rt.sub.send(src, dst, Message(kind, item, cost=cost))
+            else:
+                items = tuple(item for item, _ in entries)
+                rt.sub.send(src, dst, Message(
+                    f"{kind}_batch", (items,),
+                    cost=rt.cost.batch_cost_mixed(c for _, c in entries),
+                    payload_bytes=batch_payload_bytes(len(entries))))
+
+    # ---- batch-message handler entry points ----------------------------------
+
+    def _h_arg_ready_batch(self, items: tuple) -> None:
+        for (task,) in items:
+            self._h_arg_ready(task)
+
+    def _h_wait_ready_batch(self, items: tuple) -> None:
+        for (task,) in items:
+            self._h_wait_ready(task)
 
     def forward_traverse(self, from_nid: int, entry: Entry) -> None:
         rt = self.rt
@@ -393,14 +521,12 @@ class DepEffects:
         else:
             new = Entry(ARG, entry.task, entry.mode, (), entry.arg_index)
             cost = rt.cost.dep_enqueue_per_arg
-        rt.sub.send(rt.node_owner(from_nid), rt.node_owner(nxt),
-                    Message("s_enqueue", (nxt, new, from_nid), cost=cost))
+        self._emit(rt.node_owner(from_nid), rt.node_owner(nxt),
+                   "s_enqueue", (nxt, new, from_nid), cost)
 
     def arg_activated(self, task, arg_index: int, nid: int) -> None:
-        rt = self.rt
-        rt.sub.send(rt.node_owner(nid), task.owner,
-                    Message("s_arg_ready", (task,),
-                            cost=rt.cost.arg_ready_proc))
+        self._emit(self.rt.node_owner(nid), task.owner,
+                   "s_arg_ready", (task,), self.rt.cost.arg_ready_proc)
 
     def _h_arg_ready(self, task) -> None:
         task.satisfied += 1
@@ -409,10 +535,8 @@ class DepEffects:
             self.rt.agent_of(task.owner).begin_packing(task)
 
     def wait_activated(self, task, nid: int) -> None:
-        rt = self.rt
-        rt.sub.send(rt.node_owner(nid), task.owner,
-                    Message("s_wait_ready", (task,),
-                            cost=rt.cost.arg_ready_proc))
+        self._emit(self.rt.node_owner(nid), task.owner,
+                   "s_wait_ready", (task,), self.rt.cost.arg_ready_proc)
 
     def _h_wait_ready(self, task) -> None:
         task.wait_remaining -= 1
@@ -422,7 +546,6 @@ class DepEffects:
     def send_quiesce(self, child_nid: int, parent_nid: int,
                      recv_r: int, recv_w: int) -> None:
         rt = self.rt
-        rt.sub.send(rt.node_owner(child_nid), rt.node_owner(parent_nid),
-                    Message("d_quiesce",
-                            (parent_nid, child_nid, recv_r, recv_w),
-                            cost=rt.cost.quiesce_proc))
+        self._emit(rt.node_owner(child_nid), rt.node_owner(parent_nid),
+                   "d_quiesce", (parent_nid, child_nid, recv_r, recv_w),
+                   rt.cost.quiesce_proc)

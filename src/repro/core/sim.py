@@ -139,6 +139,25 @@ class CostModel:
         "dma_startup", "dma_bytes_per_cycle",
     })
 
+    def batch_cost(self, per_item_cost: float, n_items: int) -> float:
+        """Destination charge of one coalesced control-plane batch.
+
+        The paper (SIII) processes back-to-back messages at a fixed
+        per-packet rate, so a batch charges ``msg_proc`` once per
+        64-byte packet of items (the transport share), plus each item's
+        *work increment*: its legacy per-message charge net of the
+        message-processing share it no longer pays.  A batch is
+        therefore never dearer at the destination than the per-arg
+        message stream it replaces."""
+        return self.batch_cost_mixed((per_item_cost,) * n_items)
+
+    def batch_cost_mixed(self, per_item_costs) -> float:
+        """:meth:`batch_cost` for a batch whose items carry different
+        legacy charges (e.g. traverse hops mixed with arg enqueues)."""
+        costs = list(per_item_costs)
+        return (self.msg_proc * batch_packets(len(costs))
+                + sum(max(0.0, c - self.msg_proc) for c in costs))
+
     @staticmethod
     def heterogeneous() -> "CostModel":
         """Cortex-A9 schedulers + MicroBlaze workers (the default)."""
@@ -210,3 +229,21 @@ class Core:
 
 
 MESSAGE_SIZE = 64  # bytes; paper SV-B: fixed 64-byte messages (1 cache line)
+
+#: Batch entries per 64-byte packet: one coalesced item (node id + task
+#: id + mode/kind bits, or a quiesce counter pair) fits in 16 bytes, so
+#: four ride in one cache-line message; longer batches span packets.
+BATCH_ENTRIES_PER_MSG = 4
+
+
+def batch_packets(n_items: int) -> int:
+    """Packets a coalesced batch occupies: ceil(items/entries-per-packet),
+    at least one.  Single source of the packetization used by both the
+    charging rule (``CostModel.batch_cost``) and the wire size below —
+    the two must never disagree."""
+    return max(1, -(-n_items // BATCH_ENTRIES_PER_MSG))
+
+
+def batch_payload_bytes(n_items: int) -> int:
+    """Wire size of a coalesced batch: whole fixed-size packets."""
+    return batch_packets(n_items) * MESSAGE_SIZE

@@ -67,6 +67,23 @@ class Substrate:
         self.handlers: dict[str, Callable] = {}
         self._is_done: Callable[[], bool] = lambda: True
         self._route: Callable[[str, tuple], Any] | None = None
+        #: per-kind wire-message accounting: kind -> [count, bytes].
+        #: Follows each backend's msgs_sent convention (sim counts
+        #: cross-core sends, threads counts every send); read through
+        #: :meth:`msg_kind_summary`.
+        self.msg_kinds: dict[str, list] = {}
+
+    def _note_msg(self, kind: str, payload_bytes: int) -> None:
+        rec = self.msg_kinds.get(kind)
+        if rec is None:
+            rec = self.msg_kinds[kind] = [0, 0]
+        rec[0] += 1
+        rec[1] += payload_bytes
+
+    def msg_kind_summary(self) -> dict[str, dict]:
+        """Snapshot of the per-kind message counts and bytes."""
+        return {k: {"count": c, "bytes": b}
+                for k, (c, b) in self.msg_kinds.items()}
 
     def bind(self, handlers: dict[str, Callable],
              is_done: Callable[[], bool] | None = None,
@@ -183,6 +200,8 @@ class SimSubstrate(Substrate):
     # -- messaging ----------------------------------------------------------
     def send(self, src, dst, msg: Message, *,
              send_time: float | None = None) -> None:
+        if src is not dst:   # same-core sends are not wire messages
+            self._note_msg(msg.kind, msg.payload_bytes)
         self.hier.send(src, dst, msg.cost, self._dispatch_on, dst,
                        msg.kind, msg.args,
                        send_time=send_time, payload_bytes=msg.payload_bytes)

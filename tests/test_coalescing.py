@@ -1,0 +1,215 @@
+"""Message coalescing: the batched control plane.
+
+Contracts:
+
+1. **Equivalence** — coalescing changes message grouping and timing,
+   never results: for seeded random DAGs (mixed In/Out/InOut args,
+   mid-body waits), labelled storage is bit-identical across
+   ``coalesce`` on/off x ``migrate_threshold`` on/off x 1 and 4 leaf
+   schedulers (sim), and the threads backend with coalescing on matches
+   the serial oracle.
+2. **Escape hatch** — ``coalesce=False`` runs the per-arg message
+   stream: no ``*_batch`` kind ever appears.
+3. **Reduction** — on a multi-arg saturation DAG, the per-task
+   dependency-control message count (enqueue/release/quiesce/ready
+   families) drops >= 2x with coalescing on, observable from
+   ``RunReport.msg_summary()`` / ``trace.msg_summary`` alone.
+4. **Charging rule** — a coalesced batch is never dearer at the
+   destination than the per-arg stream it replaces, and its payload is
+   whole 64-byte packets.
+"""
+
+import random
+
+import pytest
+
+from benchmarks.paper_figs import _coalescing_app as saturation_app
+from repro.core import InOut, Myrmics, Out, Safe, SerialRuntime, task
+from repro.core.sim import (
+    BATCH_ENTRIES_PER_MSG,
+    MESSAGE_SIZE,
+    CostModel,
+    batch_payload_bytes,
+)
+
+from test_backend_threads import build_wait_app, random_program
+
+
+# ---------------------------------------------------------------------------
+# equivalence sweep: coalesce x migration x scheduler count (sim)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("levels", [[1], [1, 4]])
+@pytest.mark.parametrize("migrate", [None, 4])
+def test_sim_coalescing_matches_serial_and_uncoalesced(seed, levels, migrate):
+    rng = random.Random(seed)
+    app = build_wait_app(random_program(rng))
+    sr = SerialRuntime()
+    sr.run(app)
+    stores = {}
+    for co in (False, True):
+        rt = Myrmics(n_workers=4, sched_levels=levels,
+                     migrate_threshold=migrate, coalesce=co)
+        rep = rt.run(app)
+        assert rep.tasks_spawned == rep.tasks_done, "program hung"
+        stores[co] = rt.labelled_storage()
+        assert stores[co] == sr.labelled_storage()
+    assert stores[False] == stores[True]
+
+
+@pytest.mark.parametrize("seed", [0, 3, 5, 9])
+@pytest.mark.parametrize("levels", [[1], [1, 4]])
+def test_threads_coalescing_matches_serial(seed, levels):
+    rng = random.Random(seed)
+    app = build_wait_app(random_program(rng))
+    sr = SerialRuntime()
+    sr.run(app)
+    rt = Myrmics(n_workers=4, sched_levels=levels, backend="threads",
+                 coalesce=True)
+    rep = rt.run(app)
+    assert rep.tasks_spawned == rep.tasks_done, "program hung"
+    assert rt.labelled_storage() == sr.labelled_storage()
+
+
+def test_threads_spawn_flush_batches_and_matches_serial():
+    """A body spawning many children before its wait exercises the
+    worker-side batched flush path explicitly."""
+
+    @task
+    def put(ctx, o: Out, v: Safe):
+        o.write(v)
+
+    def app(ctx, root):
+        rid = ctx.ralloc(root, 1, label="r")
+        oids = ctx.balloc(8, rid, 12, label="o")
+        for i, o in enumerate(oids):          # 12 buffered spawns,
+            ctx.spawn(put, o, i * 3)          # flushed at the wait
+        yield ctx.wait([InOut(root)])
+
+    sr = SerialRuntime()
+    sr.run(app)
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2], backend="threads")
+    rep = rt.run(app)
+    assert rep.tasks_done == rep.tasks_spawned == 13
+    assert rt.labelled_storage() == sr.labelled_storage()
+
+
+# ---------------------------------------------------------------------------
+# the saturation DAG: multi-arg tasks spanning two owner shards
+# (the msg_coalescing benchmark row's builder — imported, not copied, so
+# the tests and the CI perf smoke exercise the same workload)
+# ---------------------------------------------------------------------------
+
+
+def _run_saturation(coalesce: bool, n_workers: int = 16):
+    rt = Myrmics(n_workers=n_workers, sched_levels=[1, 4],
+                 cost=CostModel.microblaze(), coalesce=coalesce)
+    rep = rt.run(saturation_app(8, 32, n_workers * 4, 22_500.0))
+    assert rep.tasks_spawned == rep.tasks_done
+    return rep
+
+
+def test_dep_ctrl_messages_per_task_halve():
+    off = _run_saturation(False).msg_summary()
+    on = _run_saturation(True).msg_summary()
+    assert off["dep_ctrl_msgs_per_task"] >= 2 * on["dep_ctrl_msgs_per_task"]
+    assert on["total_msgs"] < off["total_msgs"]
+    assert on["total_bytes"] < off["total_bytes"]
+
+
+def test_escape_hatch_emits_no_batch_kinds():
+    off = _run_saturation(False)
+    assert not any(k.endswith("_batch") for k in off.msg_kinds)
+    on = _run_saturation(True)
+    assert any(k.endswith("_batch") for k in on.msg_kinds)
+
+
+def test_msg_summary_math_and_trace_rows():
+    from repro.core.trace import msg_summary
+
+    rep = _run_saturation(True)
+    summ = rep.msg_summary()
+    assert summ["total_msgs"] == sum(
+        v["count"] for v in rep.msg_kinds.values())
+    assert summ["total_bytes"] == sum(
+        v["bytes"] for v in rep.msg_kinds.values())
+    assert summ["msgs_per_task"] == pytest.approx(
+        summ["total_msgs"] / rep.tasks_done)
+    rows = msg_summary(rep)
+    assert [r["kind"] for r in rows[:2]] == \
+        [r["kind"] for r in sorted(rows, key=lambda r: -r["count"])[:2]]
+    assert {r["kind"] for r in rows} == set(rep.msg_kinds)
+    top = msg_summary(rep, top=3)
+    assert len(top) == 3
+    # dict view carries the accounting too (legacy JSON surface)
+    assert rep.to_dict()["msg_kinds"] == rep.msg_kinds
+
+
+def test_threads_backend_reports_msg_kinds():
+    sr = SerialRuntime()
+    app = saturation_app(4, 8, 12, 0.0)
+    sr.run(app)
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2], backend="threads")
+    rep = rt.run(app)
+    assert rt.labelled_storage() == sr.labelled_storage()
+    summ = rep.msg_summary()
+    assert summ["total_msgs"] > 0
+    assert "s_complete" in rep.msg_kinds
+
+
+# ---------------------------------------------------------------------------
+# the charging rule
+# ---------------------------------------------------------------------------
+
+
+def test_batch_cost_never_dearer_than_per_arg_stream():
+    cm = CostModel.heterogeneous()
+    for legacy in (cm.dep_enqueue_per_arg, cm.traverse_hop,
+                   cm.arg_ready_proc, cm.quiesce_proc):
+        for k in (2, 3, 4, 5, 8, 17):
+            assert cm.batch_cost(legacy, k) <= k * legacy, (legacy, k)
+    # mixed batches obey the same bound against their own item costs
+    costs = [cm.traverse_hop, cm.dep_enqueue_per_arg, cm.traverse_hop]
+    assert cm.batch_cost_mixed(costs) <= sum(costs)
+    # the microblaze scaling applies to the batch transport share too
+    mb = CostModel.microblaze()
+    assert mb.batch_cost(mb.dep_enqueue_per_arg, 4) == pytest.approx(
+        3.617 * cm.batch_cost(cm.dep_enqueue_per_arg, 4))
+
+
+def test_batch_payload_is_whole_packets():
+    assert batch_payload_bytes(1) == MESSAGE_SIZE
+    assert batch_payload_bytes(BATCH_ENTRIES_PER_MSG) == MESSAGE_SIZE
+    assert batch_payload_bytes(BATCH_ENTRIES_PER_MSG + 1) == 2 * MESSAGE_SIZE
+    assert batch_payload_bytes(4 * BATCH_ENTRIES_PER_MSG) == 4 * MESSAGE_SIZE
+
+
+# ---------------------------------------------------------------------------
+# migration interaction: batches re-home through the hand-off protocol
+# ---------------------------------------------------------------------------
+
+
+def test_sim_migration_with_coalescing_keeps_shard_alignment():
+    rt = Myrmics(n_workers=8, sched_levels=[1, 4], migrate_threshold=4,
+                 coalesce=True)
+    rep = rt.run(saturation_app(12, 8, 32, 22_500.0))
+    assert rep.migrations > 0
+    assert rep.tasks_spawned == rep.tasks_done
+    for owner_id, shard in rt.deps.shards.items():
+        for nid in shard.nodes:
+            assert rt.dir.owner_of(nid) == owner_id
+    assert rt.deps.in_flight == {}
+
+
+def test_threads_migration_with_coalescing_matches_serial():
+    app = saturation_app(12, 8, 32, 0.0)
+    sr = SerialRuntime()
+    sr.run(app)
+    rt = Myrmics(n_workers=8, sched_levels=[1, 4], migrate_threshold=4,
+                 backend="threads", coalesce=True)
+    rep = rt.run(app)
+    assert rep.tasks_spawned == rep.tasks_done
+    assert rt.labelled_storage() == sr.labelled_storage()
+    assert rt.deps.in_flight == {}

@@ -382,7 +382,8 @@ def test_run_report_typed_and_legacy_views():
     d = rep.to_dict()
     assert set(d) == {
         "total_cycles", "tasks_spawned", "tasks_done", "events", "workers",
-        "scheds", "region_load", "migrations", "nodes_migrated", "backend"}
+        "scheds", "region_load", "migrations", "nodes_migrated", "backend",
+        "msg_kinds"}
     assert d["backend"] == "sim"
     assert d["total_cycles"] == rep.total_cycles
     with pytest.raises(KeyError):
