@@ -54,10 +54,10 @@ class AppResult:
 
 
 def _run(main, n_workers, levels, policy_p=20, cost=None,
-         backend="sim", coalesce=True) -> AppResult:
+         backend="sim", coalesce=True, steal=True) -> AppResult:
     rt = Myrmics(n_workers=n_workers, sched_levels=levels,
                  cost=cost or CostModel.heterogeneous(), policy_p=policy_p,
-                 backend=backend, coalesce=coalesce)
+                 backend=backend, coalesce=coalesce, steal=steal)
     rep = rt.run(main)
     assert rep.tasks_spawned == rep.tasks_done, "benchmark app hung"
     total = rep.total_cycles or 1.0
@@ -586,13 +586,15 @@ APPS = {
 
 def run_app(name: str, n_workers: int, mode: str, *, policy_p: int = 20,
             cost: CostModel | None = None, backend: str = "sim",
-            coalesce: bool = True, **kw):
+            coalesce: bool = True, steal: bool = True, **kw):
     """mode: mpi (analytic cycles) | flat | hier (AppResult).
 
     ``backend="threads"`` runs the app on the concurrent executor with
     real payloads (``real=True`` is implied); timings in the result are
     wall-clock seconds.  ``coalesce=False`` runs the per-arg message
-    stream (the pre-coalescing virtual-time figures)."""
+    stream (the pre-coalescing virtual-time figures); ``steal=False``
+    runs without work stealing / region-affinity placement (the
+    pre-stealing schedules)."""
     builder, mpi_model = APPS[name]
     cost = cost or CostModel.heterogeneous()
     if mode == "mpi":
@@ -607,8 +609,9 @@ def run_app(name: str, n_workers: int, mode: str, *, policy_p: int = 20,
         kw.setdefault("real", True)
     if mode == "flat":
         return _run(builder(n_workers, hier=False, **kw), n_workers, [1],
-                    policy_p, cost, backend, coalesce)
+                    policy_p, cost, backend, coalesce, steal)
     if mode == "hier":
         return _run(builder(n_workers, hier=True, **kw), n_workers,
-                    hier_levels(n_workers), policy_p, cost, backend, coalesce)
+                    hier_levels(n_workers), policy_p, cost, backend, coalesce,
+                    steal)
     raise ValueError(mode)

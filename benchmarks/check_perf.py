@@ -1,0 +1,108 @@
+"""Compare a fresh ``benchmarks.run --out`` JSON against a committed
+baseline and fail on virtual-cycle regressions.
+
+    PYTHONPATH=src python -m benchmarks.check_perf FRESH BASELINE
+                                                   [--tol 0.05]
+                                                   [--rows NAME[,NAME...]]
+
+For every benchmark row present in both files (optionally restricted by
+``--rows``), derived entries are matched up positionally — their
+identity keys (``bench``, ``mode``, ``workers``, ``levels``,
+``backend``, ``policy_p``) must agree, so a silently reshaped grid is
+an error, not a skipped comparison — and every ``cycles*`` field is
+checked: the fresh value may not exceed the baseline by more than
+``--tol`` (relative).  Only virtual cycles are compared; wall-clock
+fields (``us_per_call``, ``samples_us``) are runner-dependent noise and
+deliberately ignored.  Improvements (fewer cycles) always pass — the
+baseline is a ceiling, not a pin; byte-identity pins live in the test
+suite.
+
+Exit status: 0 clean, 1 regression(s), 2 usage/shape error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: derived-entry keys that identify a config (grid point), not a result
+IDENTITY_KEYS = ("bench", "mode", "workers", "levels", "backend", "policy_p")
+
+
+def _rows_by_name(payload: dict) -> dict[str, list[dict]]:
+    return {r["name"]: r["derived"] for r in payload["rows"]}
+
+
+def compare(fresh: dict, base: dict, tol: float,
+            only: set[str] | None = None) -> list[str]:
+    """All regression/shape complaints, empty when clean."""
+    fresh_rows, base_rows = _rows_by_name(fresh), _rows_by_name(base)
+    names = sorted(set(fresh_rows) & set(base_rows))
+    if only is not None:
+        missing = only - set(names)
+        if missing:
+            return [f"row(s) {sorted(missing)} not present in both files"]
+        names = sorted(only)
+    if not names:
+        return ["no benchmark rows in common between the two files"]
+    bad: list[str] = []
+    for name in names:
+        f_entries, b_entries = fresh_rows[name], base_rows[name]
+        if len(f_entries) != len(b_entries):
+            bad.append(f"{name}: grid reshaped "
+                       f"({len(b_entries)} -> {len(f_entries)} entries)")
+            continue
+        for i, (fe, be) in enumerate(zip(f_entries, b_entries)):
+            ident = {k: be[k] for k in IDENTITY_KEYS if k in be}
+            if {k: fe.get(k) for k in ident} != ident:
+                bad.append(f"{name}[{i}]: config mismatch {ident} vs "
+                           f"{ {k: fe.get(k) for k in ident} }")
+                continue
+            for key, bv in be.items():
+                if not key.startswith("cycles"):
+                    continue
+                fv = fe.get(key)
+                if not isinstance(fv, (int, float)) or \
+                        not isinstance(bv, (int, float)):
+                    continue
+                if fv > bv * (1.0 + tol):
+                    bad.append(
+                        f"{name}[{i}] {ident}: {key} regressed "
+                        f"{bv:.0f} -> {fv:.0f} "
+                        f"(+{100 * (fv / bv - 1):.1f}% > {100 * tol:.0f}%)")
+    return bad
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh")
+    ap.add_argument("baseline")
+    ap.add_argument("--tol", type=float, default=0.05)
+    ap.add_argument("--rows", default=None,
+                    help="comma-separated row names to compare "
+                    "(default: every row common to both files)")
+    args = ap.parse_args()
+    try:
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+        with open(args.baseline) as f:
+            base = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        sys.exit(2)
+    only = set(args.rows.split(",")) if args.rows else None
+    bad = compare(fresh, base, args.tol, only)
+    shape_errors = [b for b in bad if "regressed" not in b]
+    if shape_errors:
+        print("\n".join(shape_errors), file=sys.stderr)
+        sys.exit(2)
+    if bad:
+        print("\n".join(bad), file=sys.stderr)
+        sys.exit(1)
+    print(f"ok: no cycles regression > {100 * args.tol:.0f}% "
+          f"({args.fresh} vs {args.baseline})")
+
+
+if __name__ == "__main__":
+    main()

@@ -90,7 +90,8 @@ def granularity(task_sizes=(100e3, 1e6, 10e6),
 # -- Fig. 8: scaling of the six benchmarks -----------------------------------------
 
 def scaling(names=None, workers=(8, 16, 32, 64, 128),
-            total_work: float = 512e6, coalesce: bool = True) -> list[dict]:
+            total_work: float = 512e6, coalesce: bool = True,
+            steal: bool = True) -> list[dict]:
     rows = []
     for name in names or list(APPS):
         base = {}
@@ -99,7 +100,8 @@ def scaling(names=None, workers=(8, 16, 32, 64, 128),
                 kw = {}
                 if name not in ("bitonic", "matmul"):
                     kw["total_work"] = total_work
-                r = run_app(name, w, mode, coalesce=coalesce, **kw)
+                r = run_app(name, w, mode, coalesce=coalesce, steal=steal,
+                            **kw)
                 cycles = r if mode == "mpi" else r.cycles
                 key = mode
                 if key not in base:
@@ -350,6 +352,120 @@ def msg_coalescing(workers=(64, 256), tasks_per_worker: int = 4,
             "msg_mb": [round(per[False]["bytes"] / 1e6, 2),
                        round(per[True]["bytes"] / 1e6, 2)],
         })
+    return rows
+
+
+# -- Work stealing: skewed/bursty DAGs ----------------------------------------------
+
+
+@task
+def fill_region(ctx, r: Out):
+    """Produce every object of a region from one worker (virtual
+    compute) — concentrates ``last_producer`` for later readers."""
+
+
+@task
+def hot_scan(ctx, r: In, s: Out):
+    """Power-law compute reading the hot region into a scratch object
+    (virtual compute)."""
+
+
+def _skewed_app(n_workers: int, n_bursts: int = 2, big_per_worker: int = 2,
+                small_per_worker: int = 2, hot_objs: int = 32,
+                seed: int = 0):
+    """Locality-trap workload: each burst writes a small hot region from
+    a single producer, then spawns power-law-sized readers of it plus a
+    trickle of small independent tasks.  With a high locality policy
+    the readers' packed bytes all point at the one producing worker, so
+    placement herds the heavy tail onto one leaf subtree while the rest
+    of the machine sits idle — exactly the skew work stealing exists to
+    unwind.  The small tasks spread by load balance and keep every
+    leaf's completion-driven steal trigger alive.  All durations come
+    from a seeded RNG: the schedule is deterministic per (workers,
+    seed)."""
+    import random as _random
+
+    rng = _random.Random(seed)
+    bursts = []
+    for _ in range(n_bursts):
+        bigs = [50e3 * rng.paretovariate(1.1)
+                for _ in range(big_per_worker * n_workers)]
+        smalls = [5e3 * rng.paretovariate(1.5)
+                  for _ in range(small_per_worker * n_workers)]
+        bursts.append((bigs, smalls))
+
+    def main(ctx, root):
+        for b, (bigs, smalls) in enumerate(bursts):
+            hot = ctx.ralloc(root, 0, label=f"hot{b}")
+            ctx.balloc(64, hot, hot_objs)
+            ctx.spawn(fill_region, hot, duration=10e3)
+            for i, d in enumerate(smalls):
+                o = ctx.alloc(64, root, label=f"s{b}_{i}")
+                ctx.spawn(produce, o, duration=d)
+            for i, d in enumerate(bigs):
+                o = ctx.alloc(64, root, label=f"b{b}_{i}")
+                ctx.spawn(hot_scan, hot, o, duration=d)
+            yield ctx.wait([InOut(root)])
+
+    return main
+
+
+def skewed_dag(workers=(64, 256), policy_p: int = 80,
+               min_speedup: float = 1.15) -> list[dict]:
+    """Work stealing on a skewed, bursty DAG: the locality trap run with
+    ``steal`` off vs on at each worker count (sim backend, deterministic
+    virtual time).  Reports makespan, the steal counters and the
+    per-worker occupancy coefficient of variation.  The steal-on run
+    must beat the trap by ``min_speedup`` and flatten occupancy —
+    asserted here so the CI perf smoke fails if the steal tier stops
+    redistributing.  A threads-backend sub-row reruns the smallest
+    config concurrently and checks the report stays self-consistent
+    (wall-clock timing, so no cycle asserts there)."""
+    cm = CostModel.heterogeneous()
+    rows = []
+    for w in workers:
+        per: dict[bool, dict] = {}
+        for st in (False, True):
+            rt = Myrmics(n_workers=w, sched_levels=hier_levels(w), cost=cm,
+                         policy_p=policy_p, steal=st)
+            rep = rt.run(_skewed_app(w))
+            assert rep.tasks_spawned == rep.tasks_done
+            per[st] = {"cycles": rep.total_cycles, **rep.steal_summary()}
+        speedup = per[False]["cycles"] / per[True]["cycles"]
+        assert speedup >= min_speedup, (
+            f"work stealing stopped paying off at {w} workers: "
+            f"{per[False]['cycles']:.0f} -> {per[True]['cycles']:.0f} "
+            f"({speedup:.2f}x < {min_speedup}x)")
+        assert per[True]["occupancy_cv"] < per[False]["occupancy_cv"], (
+            f"stealing did not flatten occupancy at {w} workers: cv "
+            f"{per[False]['occupancy_cv']:.3f} -> "
+            f"{per[True]['occupancy_cv']:.3f}")
+        assert per[False]["tasks_moved"] == 0   # steal=False moves nothing
+        rows.append({
+            "workers": w,
+            "levels": hier_levels(w),
+            "cycles_nosteal": round(per[False]["cycles"]),
+            "cycles_steal": round(per[True]["cycles"]),
+            "speedup": round(speedup, 3),
+            "occupancy_cv": [round(per[False]["occupancy_cv"], 3),
+                             round(per[True]["occupancy_cv"], 3)],
+            "steals_attempted": per[True]["attempted"],
+            "steals_granted": per[True]["granted"],
+            "tasks_moved": per[True]["tasks_moved"],
+            "kb_moved": round(per[True]["bytes_moved"] / 1024),
+        })
+    # threads sub-row: same app shape, concurrent executor; completeness
+    # is the signal (virtual durations are ignored off the sim backend)
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2], backend="threads",
+                 steal=True)
+    rep = rt.run(_skewed_app(4, n_bursts=1))
+    assert rep.tasks_spawned == rep.tasks_done
+    rows.append({
+        "workers": 4,
+        "levels": [1, 2],
+        "backend": "threads",
+        "tasks": rep.tasks_done,
+    })
     return rows
 
 

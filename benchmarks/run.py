@@ -88,6 +88,11 @@ def _row_fns():
         rows = F.hierarchy_depth(workers=workers)
         return rows, len(rows)
 
+    def skewed_dag(full):
+        workers = (64, 128, 256) if full else (64, 256)
+        rows = F.skewed_dag(workers=workers)
+        return rows, 2 * len(rows)
+
     def threads_smoke(full):
         rows = F.threads_smoke()
         return rows, len(rows)
@@ -109,6 +114,7 @@ def _row_fns():
         ("svc_region_ownership", svc),
         ("sched_scaling", sched_scaling),
         ("msg_coalescing", msg_coalescing),
+        ("skewed_dag", skewed_dag),
         ("fig12b_hierarchy_depth", fig12b),
         ("threads_smoke", threads_smoke),
         ("roofline_table", roofline),
@@ -126,6 +132,7 @@ ROWS = (
     "svc_region_ownership",
     "sched_scaling",
     "msg_coalescing",
+    "skewed_dag",
     "fig12b_hierarchy_depth",
     "threads_smoke",
     "roofline_table",
@@ -152,6 +159,10 @@ def _out_meta(args) -> dict:
     BENCH_*.json files across the perf trajectory without guessing what
     produced them."""
     from repro.core.sim import CostModel
+    from repro.core import Myrmics
+    import inspect
+
+    defaults = inspect.signature(Myrmics.__init__).parameters
     return {
         "git_sha": _git_sha(),
         "grid": "full" if args.full else "reduced",
@@ -160,6 +171,11 @@ def _out_meta(args) -> dict:
         "backend": "sim (threads_smoke row: threads)",
         "cost_model": CostModel.heterogeneous().name
         + " (microblaze rows: microblaze)",
+        # runtime feature flags the rows ran under (their Myrmics
+        # defaults): coalesce was missing from BENCH_5.json and earlier
+        # — absent means coalesce=True, steal not yet implemented.
+        "coalesce": defaults["coalesce"].default,
+        "steal": defaults["steal"].default,
         "python": platform.python_version(),
         "platform": platform.platform(),
     }

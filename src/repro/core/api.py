@@ -366,7 +366,7 @@ def task(fn=None, *, name: str | None = None):
 _REPORT_FIELDS = (
     "total_cycles", "tasks_spawned", "tasks_done", "events",
     "workers", "scheds", "region_load", "migrations", "nodes_migrated",
-    "backend", "msg_kinds",
+    "backend", "msg_kinds", "steals",
 )
 
 #: Message kinds that carry per-argument dependency control traffic —
@@ -404,6 +404,9 @@ class RunReport:
     #: per-kind wire-message accounting: kind -> {"count", "bytes"}
     #: (sim counts cross-core sends; threads counts every send)
     msg_kinds: dict[str, Any] = field(default_factory=dict)
+    #: work-stealing outcome counters: attempted/granted requests,
+    #: tasks and packed bytes re-homed (all zero with ``steal=False``)
+    steals: dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {name: getattr(self, name) for name in _REPORT_FIELDS}
@@ -436,6 +439,26 @@ class RunReport:
             "msgs_per_task": total / tasks,
             "dep_ctrl_msgs_per_task": dep / tasks,
         }
+
+    def steal_summary(self) -> dict:
+        """Work-stealing outcome for the run: requests attempted and
+        granted, tasks and packed bytes re-homed, plus the per-worker
+        occupancy coefficient of variation — std/mean of per-worker busy
+        time, the imbalance quantity the ``skewed_dag`` benchmark row
+        asserts stealing lowers.  Counters are zero with ``steal=False``
+        (the cv is still computed); works on both backends.
+        :func:`repro.core.trace.steal_summary` renders the rounded
+        view."""
+        busys = [st.busy_cycles for st in self.workers.values()]
+        n = len(busys) or 1
+        mean = sum(busys) / n
+        var = sum((b - mean) ** 2 for b in busys) / n
+        cv = (var ** 0.5) / mean if mean else 0.0
+        out = {"attempted": 0, "granted": 0,
+               "tasks_moved": 0, "bytes_moved": 0}
+        out.update(self.steals)
+        out["occupancy_cv"] = cv
+        return out
 
     def sched_summary(self) -> dict[str, dict]:
         """Per-scheduler decentralization stats: messages handled,

@@ -51,6 +51,7 @@ import itertools
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
@@ -487,6 +488,11 @@ class ThreadWorkerAgent:
         self.rt = rt
         self._suspended: dict[int, ThreadExec] = {}   # tid -> parked record
         self._suspend_lock = threading.Lock()         # pool vs owner threads
+        # per-worker dispatch queues (steal=True): what stealing raids.
+        # _active holds workers with a drain job running on the pool.
+        self._queues: dict[str, deque] = {}
+        self._active: set[str] = set()
+        self._qlock = threading.Lock()
 
     # ---- scale-out features: virtual-time only ------------------------------
 
@@ -535,14 +541,71 @@ class ThreadWorkerAgent:
     def h_dispatch(self, w: WorkerNode, task: Task) -> None:
         """Dispatch intake (runs on the dispatching leaf scheduler's
         thread): account the would-be DMA (data is already addressable
-        in the shared store) and hand the body to the pool."""
+        in the shared store) and hand the body to the pool.
+
+        With ``steal`` on, the task goes through a per-worker queue
+        drained serially by one pool job — the queue is what work
+        stealing raids; an idle worker (drained queue) nudges its leaf
+        scheduler's mailbox with ``s_steal_check``.  With ``steal``
+        off, the body is submitted to the pool directly (the original
+        free-for-all path, preserved as the escape hatch)."""
         rt = self.rt
         dma_bytes = sum(
             b for wid, b in task.pack_by_worker.items() if wid != w.core_id
         )
         if dma_bytes > 0:
             rt.sub.add_dma(w, dma_bytes)
-        rt.sub.submit(self._exec, w, task)
+        if not rt.steal:
+            rt.sub.submit(self._exec, w, task)
+            return
+        with self._qlock:
+            q = self._queues.setdefault(w.core_id, deque())
+            q.append(task)
+            kick = w.core_id not in self._active
+            if kick:
+                self._active.add(w.core_id)
+        if kick:
+            rt.sub.submit(self._drain, w)
+
+    def _drain(self, w: WorkerNode) -> None:
+        """Pool job: run ``w``'s queued tasks one at a time.  The active
+        flag is cleared under the same lock that finds the queue empty,
+        so a concurrent enqueue either sees the flag (and lets this
+        drain pick the task up) or kicks a fresh drain — tasks are never
+        stranded.  On going idle, trigger the leaf's steal check through
+        its mailbox, same protocol as the sim backend."""
+        rt = self.rt
+        while True:
+            with self._qlock:
+                q = self._queues[w.core_id]
+                if not q:
+                    self._active.discard(w.core_id)
+                    break
+                task = q.popleft()
+            self._exec(w, task)
+        rt.sub.send(w, w.parent,
+                    Message("s_steal_check", (w.parent,),
+                            cost=rt.cost.steal_proc))
+
+    # ---- work-stealing queue interface --------------------------------------
+
+    def queued_stealable(self, w: WorkerNode) -> list[Task]:
+        with self._qlock:
+            return list(self._queues.get(w.core_id, ()))
+
+    def remove_queued(self, w: WorkerNode, task: Task) -> bool:
+        """Remove a queued task (victim side of a steal); False when the
+        drain loop already popped it for execution — the same lock
+        serializes both, so a task runs exactly once."""
+        with self._qlock:
+            q = self._queues.get(w.core_id)
+            if q is None:
+                return False
+            try:
+                q.remove(task)
+            except ValueError:
+                return False
+            return True
 
     def _exec(self, w: WorkerNode, task: Task) -> None:
         """Pool thread: one task activation, measured in wall time."""

@@ -108,6 +108,8 @@ class Task:
         self.extra: tuple = ()          # extra main() positional args
         self.completed = False          # monotonic (backup-safe) flag
         self.backup_spawned = False
+        self.occ_weight = 1.0           # queued-work estimate (set at packing)
+        self.stolen = 0                 # times re-homed by work stealing
 
     def __repr__(self) -> str:
         return f"<Task {self.name}#{self.tid}>"
@@ -298,6 +300,15 @@ class Myrmics:
     wait/runtime call/body end.  ``coalesce=False`` is the escape hatch
     reproducing the per-arg message stream (and its virtual-time
     figures) byte-identically.
+    ``steal`` (default on) enables work stealing between worker pools
+    plus the region-affinity placement term: a leaf scheduler whose live
+    workers are starving first rebalances its own queues, then sends a
+    charged ``s_steal_req`` up the tree; the most-loaded subtree serves
+    as the victim, re-homing queued-but-undispatched tasks when the
+    steal gate passes (estimated compute saved > DMA cost of moving the
+    task's packed footprint).  ``steal=False`` is the escape hatch
+    reproducing the steal-free schedules byte-identically (pinned like
+    ``coalesce``).
     """
 
     def __init__(self, n_workers: int = 4, sched_levels: list[int] | None = None,
@@ -305,7 +316,7 @@ class Myrmics:
                  max_events: int | None = 50_000_000,
                  migrate_threshold: int | None = None,
                  backend: str = "sim", max_wall_s: float = 600.0,
-                 coalesce: bool = True):
+                 coalesce: bool = True, steal: bool = True):
         from .alloc import AllocAgent
         from .sched_agent import DepEffects, SchedAgent
         from .worker_agent import WorkerAgent
@@ -314,6 +325,7 @@ class Myrmics:
             raise ValueError(f"unknown backend {backend!r}: sim | threads")
         self.backend = backend
         self.coalesce = coalesce
+        self.steal = steal
         self.engine = Engine()
         self.cost = cost or CostModel.heterogeneous()
         self.hier = Hierarchy.build(
@@ -342,6 +354,15 @@ class Myrmics:
         self.migrate_threshold = migrate_threshold
         self.migrations = 0
         self.nodes_migrated = 0
+        # -- work stealing (default on; counters under count_lock) --
+        self.steals_attempted = 0
+        self.steals_granted = 0
+        self.steal_tasks_moved = 0
+        self.steal_bytes_moved = 0
+        # request hop budget: generous bound on up+down relays so stale
+        # occupancy counters can never ping-pong a request forever
+        depth = max(s.depth for s in self.hier.scheds)
+        self.steal_ttl = 4 * (depth + 1) + 4
         # subtree membership caches: scheduler core_id -> ids below it
         self.subtree_ids: dict[str, set[str]] = {
             s.core_id: {x.core_id for x in s.subtree_scheds()}
@@ -421,6 +442,13 @@ class Myrmics:
             "s_descend": lambda sched, task: agent(sched).h_descend(task),
             "s_wait": lambda task, args: agent(task.owner).h_wait(task, args),
             "s_complete": lambda task: agent(task.owner).h_complete(task),
+            # work stealing: starvation check, parent-relayed request,
+            # victim grant (the thief leaf re-dispatches)
+            "s_steal_check": lambda sched: agent(sched).maybe_steal(),
+            "s_steal_req": lambda sched, thief_id, ttl:
+                agent(sched).h_steal_req(thief_id, ttl),
+            "s_steal_grant": lambda sched, tasks:
+                agent(sched).h_steal_grant(tasks),
             "s_release": deps.h_release,
             "s_arg_ready": deps.fx._h_arg_ready,
             "s_wait_ready": deps.fx._h_wait_ready,
@@ -551,6 +579,12 @@ class Myrmics:
             nodes_migrated=self.nodes_migrated,
             backend=self.backend,
             msg_kinds=self.sub.msg_kind_summary(),
+            steals={
+                "attempted": self.steals_attempted,
+                "granted": self.steals_granted,
+                "tasks_moved": self.steal_tasks_moved,
+                "bytes_moved": self.steal_bytes_moved,
+            },
         )
 
 

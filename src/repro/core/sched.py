@@ -36,6 +36,18 @@ class SchedNode:
         # outstanding dispatched tasks per direct child (core_id -> count);
         # incremented during descent, decremented as completions route back.
         self.load: dict[str, int] = {}
+        # pack-bytes-weighted outstanding work per direct child (same keys
+        # as ``load``): the occupancy estimate work stealing uses to match
+        # starving leaves against loaded victims.  Maintained at the same
+        # points as ``load`` — pure bookkeeping, no messages or charges.
+        self.occ: dict[str, float] = {}
+        self.steal_pending = False        # one outstanding s_steal_req at a time
+        # starving-thief registry (non-leaf): leaf ids whose steal
+        # requests this scheduler relayed.  The next task descent through
+        # here re-nudges the oldest entry (new work arriving = a new
+        # steal opportunity) — retries piggyback on existing dispatch
+        # traffic instead of timers, so a drained machine stays quiet.
+        self.starving: list[str] = []
         self._rr = 0                                  # deterministic tie-break
 
     @property
@@ -110,6 +122,7 @@ class Hierarchy:
                 if parent is not None:
                     parent.children.append(s)
                     parent.load[s.core_id] = 0
+                    parent.occ[s.core_id] = 0.0
                 row.append(s)
                 scheds.append(s)
             levels.append(row)
@@ -120,6 +133,7 @@ class Hierarchy:
             wn = WorkerNode(engine, f"w{w}", leaf)
             leaf.workers.append(wn)
             leaf.load[wn.core_id] = 0
+            leaf.occ[wn.core_id] = 0.0
             workers.append(wn)
         h = Hierarchy(engine, cost, levels[0][0], scheds, workers)
         for s in scheds:
@@ -189,13 +203,48 @@ def score_candidates(
     pack_bytes_by_worker: dict[str, int],
     candidates: list[tuple[Any, set[str], int]],
     policy_p: int,
+    region_affinity: list[float] | None = None,
 ) -> Any:
     """Combine locality and load-balance scores (paper SV-E).
 
     candidates: (node, worker_ids_in_subtree, load) triples.
+
+    The locality score L of a candidate is the fraction of the task's
+    packed footprint (bytes grouped by last producer) already inside the
+    candidate subtree.  ``region_affinity`` — one entry per candidate in
+    ``[0, 1]``, or None — is the work-stealing tier's region-ownership
+    term: the fraction of the task's fetched dependency-argument nodes
+    whose owning scheduler lies inside the candidate subtree.  It is a
+    *tie-break* among the balance winners: only when the task has no
+    packed bytes at all (nothing has produced its inputs yet) and the
+    candidate is tied for the least load does L take the affinity
+    value, steering first-touch tasks toward the subtree that owns
+    their In/InOut regions — where the dependency analysis for them is
+    sharded anyway.  Real producer bytes always win, and a less-loaded
+    non-owner always beats a loaded owner: region ownership is often
+    concentrated on one shard, and letting it outbid balance would herd
+    whole first sweeps onto that subtree.  With
+    ``region_affinity=None`` the scoring is byte-identical to the
+    pre-stealing runtime.
+
+    Degenerate case (documented contract): when ``pack_bytes_by_worker``
+    is empty — typical for first-spawn tasks whose arguments have no
+    producer yet — and no affinity is given, L is 0 for *every*
+    candidate, so ``T = (100-p)/100 * B``: for any ``policy_p < 100``
+    the ordering is pure load balance (the weight rescales every score
+    equally).  At exactly ``policy_p=100`` the balance weight is zero
+    too, all scores collapse to 0.0, and the choice falls through to
+    list order — a pure-locality policy with no locality information
+    expresses no preference (which is why locality-trap workloads at
+    high p herd).  With equal loads, candidates likewise tie-break on
+    list order (earliest wins, via :func:`choose`'s stable secondary
+    key).  This order is pinned by
+    ``tests/test_core_sched.py::TestScoreCandidates`` so placement of
+    first-spawn tasks cannot silently shift under scoring changes.
     """
     total = sum(pack_bytes_by_worker.values())
     max_load = max((load for _, _, load in candidates), default=0)
+    min_load = min((load for _, _, load in candidates), default=0)
     scored = []
     for i, (node, wids, load) in enumerate(candidates):
         if total > 0:
@@ -203,6 +252,8 @@ def score_candidates(
                 b for wid, b in pack_bytes_by_worker.items() if wid in wids
             )
             loc = 1024.0 * produced / total
+        elif region_affinity is not None and load == min_load:
+            loc = 1024.0 * region_affinity[i]
         else:
             loc = 0.0
         bal = 1024.0 * (1.0 - (load / max_load if max_load > 0 else 0.0))

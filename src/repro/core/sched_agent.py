@@ -58,6 +58,16 @@ class SchedAgent:
     complete / quiesce effects, acting only on state this scheduler
     owns."""
 
+    # steal-gate hysteresis: required ratio of compute saved to one-shot
+    # re-fetch DMA before a queued task may be re-homed (see
+    # :meth:`_pick_steals`)
+    STEAL_GATE_FACTOR = 2.0
+    # minimum gate-passing backlog on a victim worker before any of it
+    # may be stolen: shallow queues (a balanced app draining at a
+    # barrier) re-balance themselves faster than a steal round-trip, and
+    # re-homing their tasks scatters the next iteration's locality
+    STEAL_MIN_VICTIM_QUEUE = 3
+
     def __init__(self, rt: "Myrmics", sched: SchedNode):
         self.rt = rt
         self.sched = sched
@@ -227,6 +237,12 @@ class SchedAgent:
         task.pack_by_worker = {
             k: v for k, v in pack.items() if k != "_unborn"
         }
+        # queued-work estimate for the occupancy counters: compute plus
+        # the DMA time of the packed footprint (pack-bytes-weighted
+        # depth).  Set once here so descent increments and completion
+        # decrements always cancel exactly.
+        task.occ_weight = max(1.0, task.duration) + (
+            sum(task.pack_by_worker.values()) / rt.cost.dma_bytes_per_cycle)
         cost = rt.cost.schedule_base + rt.cost.pack_per_arg * max(
             1, len(task.dep_args))
         # packing requires messages to the schedulers owning parts of
@@ -244,33 +260,18 @@ class SchedAgent:
     def h_descend(self, task: "Task") -> None:
         rt = self.rt
         sched = self.sched
-        if sched.is_leaf and not sched.workers and sched.parent is not None:
+        if sched.is_leaf and not sched.workers:
+            if sched.parent is None:
+                raise RuntimeError(
+                    f"h_descend: no live workers left anywhere in the "
+                    f"hierarchy to dispatch {task} — every worker domain "
+                    "has been killed; the run cannot make progress")
             rt.sub.send(sched, sched.parent,
                         Message("s_descend", (sched.parent, task),
                                 cost=rt.cost.dispatch_proc))
             return
         if sched.is_leaf:
-            cands = [
-                (w, {w.core_id}, sched.load[w.core_id]) for w in sched.workers
-            ]
-            w = score_candidates(task.pack_by_worker, cands, rt.policy_p)
-            sched.load[w.core_id] += 1
-            task.worker = w
-            task.state = DISPATCHED
-            # from now on the chosen worker is the last producer of all
-            # write arguments (paper SV-E); NOTRANSFER tasks never touch
-            # the data, so they leave producers unchanged.  The updates
-            # land in the owning shards, piggybacked on the dispatch
-            # message (fixed 64-byte messages have spare payload).
-            for a in task.dep_args:
-                if a.mode == MODE_WRITE and not a.notransfer:
-                    for meta in rt.dir.objects_under(
-                            a.nid, requester=sched.core_id):
-                        meta.last_producer = w.core_id
-            rt.sub.send(sched, w,
-                        Message("w_dispatch", (w, task),
-                                cost=rt.cost.worker_dispatch_recv))
-            rt.worker_agent.maybe_backup(task)
+            self._leaf_dispatch(task)
             return
         cands = [
             (c, rt.subtree_workers[c.core_id], sched.load[c.core_id])
@@ -278,17 +279,87 @@ class SchedAgent:
             if self.live_workers(c)
         ]
         if not cands:
+            if sched.parent is None:
+                # exhaustion at the root: no subtree has live workers,
+                # and bouncing to a child would just ping-pong the
+                # descend message forever — fail the run loudly instead.
+                raise RuntimeError(
+                    f"h_descend: no live workers left anywhere in the "
+                    f"hierarchy to dispatch {task} — every worker domain "
+                    "has been killed; the run cannot make progress")
             # no live workers below: bounce back up to the parent
-            target = sched.parent or sched
-            rt.sub.send(sched, target,
-                        Message("s_descend", (target, task),
+            rt.sub.send(sched, sched.parent,
+                        Message("s_descend", (sched.parent, task),
                                 cost=rt.cost.dispatch_proc))
             return
-        c = score_candidates(task.pack_by_worker, cands, rt.policy_p)
+        aff = None
+        if rt.steal and sum(task.pack_by_worker.values()) == 0:
+            # region-affinity term: when nothing has produced this
+            # task's inputs yet (no packed bytes to steer by), prefer
+            # the subtree whose schedulers own the In/InOut nodes it
+            # will fetch (Directory ownership via the per-agent
+            # AncestryCache — a pure cached read, no message or
+            # charge), so the owner-side dependency traffic and the
+            # compute land in the same subtree and fewer steals are
+            # needed in the first place.  Out-only args are excluded:
+            # they carry no fetch, and herding first-touch producers
+            # onto the owning shard would fight load balance for no
+            # data-movement win.
+            reads = [a for a in task.dep_args if a.fetch]
+            if reads:
+                owners = self.cache.owners_of(a.nid for a in reads)
+                n = len(reads)
+                aff = [
+                    sum(1 for a in reads
+                        if owners[a.nid] in rt.subtree_ids[c.core_id]) / n
+                    for c, _, _ in cands
+                ]
+        c = score_candidates(task.pack_by_worker, cands, rt.policy_p,
+                             region_affinity=aff)
         sched.load[c.core_id] += 1
+        sched.occ[c.core_id] = sched.occ.get(c.core_id, 0.0) + task.occ_weight
         rt.sub.send(sched, c,
                     Message("s_descend", (c, task),
                             cost=rt.cost.dispatch_proc))
+        if rt.steal and sched.starving:
+            # new work entered this subtree: re-nudge the oldest thief
+            # whose request we relayed, so starvation retries ride on
+            # dispatch traffic (a drained machine sends nothing).
+            thief = rt.sched_of(sched.starving.pop(0))
+            rt.sub.send(sched, thief,
+                        Message("s_steal_check", (thief,),
+                                cost=rt.cost.steal_proc))
+
+    def _leaf_dispatch(self, task: "Task", only: list | None = None) -> None:
+        """Leaf-level dispatch: score this leaf's workers (optionally a
+        restricted subset), pin the task and send ``w_dispatch``.  Used
+        by the normal descent and — unchanged, so stolen tasks behave
+        exactly like first dispatches — by the thief side of a steal."""
+        rt = self.rt
+        sched = self.sched
+        workers = only if only else sched.workers
+        cands = [
+            (w, {w.core_id}, sched.load[w.core_id]) for w in workers
+        ]
+        w = score_candidates(task.pack_by_worker, cands, rt.policy_p)
+        sched.load[w.core_id] += 1
+        sched.occ[w.core_id] = sched.occ.get(w.core_id, 0.0) + task.occ_weight
+        task.worker = w
+        task.state = DISPATCHED
+        # from now on the chosen worker is the last producer of all
+        # write arguments (paper SV-E); NOTRANSFER tasks never touch
+        # the data, so they leave producers unchanged.  The updates
+        # land in the owning shards, piggybacked on the dispatch
+        # message (fixed 64-byte messages have spare payload).
+        for a in task.dep_args:
+            if a.mode == MODE_WRITE and not a.notransfer:
+                for meta in rt.dir.objects_under(
+                        a.nid, requester=sched.core_id):
+                    meta.last_producer = w.core_id
+        rt.sub.send(sched, w,
+                    Message("w_dispatch", (w, task),
+                            cost=rt.cost.worker_dispatch_recv))
+        rt.worker_agent.maybe_backup(task)
 
     # ---- sys_wait -----------------------------------------------------------
 
@@ -306,12 +377,37 @@ class SchedAgent:
 
     # ---- completion ---------------------------------------------------------
 
-    @staticmethod
-    def _dec_load(sched: SchedNode, child_id: str) -> None:
-        """Descent-load decrement, applied in ``sched``'s execution
-        context (its counter, its thread)."""
+    def _note_complete(self, child_id: str, weight: float) -> None:
+        """Descent load/occupancy decrement, applied in this agent's
+        scheduler's execution context (its counters, its thread).  At a
+        leaf, a live worker's counter reaching zero is the starvation
+        signal — the steal check piggybacks on it, so the happy path
+        needs no new message kinds."""
+        sched = self.sched
         if child_id in sched.load:
             sched.load[child_id] = max(0, sched.load[child_id] - 1)
+            sched.occ[child_id] = max(
+                0.0, sched.occ.get(child_id, 0.0) - weight)
+            if (self.rt.steal and sched.is_leaf
+                    and sched.load[child_id] == 0):
+                self.maybe_steal()
+
+    def _retract_load(self, child_id: str, weight: float) -> None:
+        """Victim-side counter retraction for a stolen task (no steal
+        trigger: the victim must not recurse into stealing mid-grant)."""
+        sched = self.sched
+        if child_id in sched.load:
+            sched.load[child_id] = max(0, sched.load[child_id] - 1)
+            sched.occ[child_id] = max(
+                0.0, sched.occ.get(child_id, 0.0) - weight)
+
+    def _credit_load(self, child_id: str, weight: float) -> None:
+        """Thief-side counter credit for a stolen task's new descent
+        path (mirrors the increments h_descend would have applied)."""
+        sched = self.sched
+        if child_id in sched.load:
+            sched.load[child_id] += 1
+            sched.occ[child_id] = sched.occ.get(child_id, 0.0) + weight
 
     def h_complete(self, task: "Task") -> None:
         rt = self.rt
@@ -329,9 +425,10 @@ class SchedAgent:
         if task.worker is not None:
             node = task.worker
             while node is not task.owner and node.parent is not None:
-                rt.sub.update(node.parent, self._dec_load,
-                              node.parent, node.core_id)
-                node = node.parent
+                parent = node.parent
+                rt.sub.update(parent, rt.agent_of(parent)._note_complete,
+                              node.core_id, task.occ_weight)
+                node = parent
         owner = task.owner
         if rt.coalesce and len(task.dep_args) > 1:
             # one s_release_batch per (owner, arg-owner) pair instead of
@@ -359,6 +456,217 @@ class SchedAgent:
                                     cost=rt.cost.traverse_hop))
         if task is rt.main_task:
             rt.deps.release(ROOT_RID, task)
+
+    # ---- work stealing (dask-style, with a data-movement gate) ---------------
+
+    def maybe_steal(self) -> None:
+        """Starvation check at a leaf scheduler: if live workers sit
+        idle, first rebalance this leaf's own queues (no protocol
+        messages), then — at most one outstanding request at a time —
+        send a charged ``s_steal_req`` up the tree.
+
+        The check piggybacks on traffic that already exists: the
+        completion-walk counter decrement (sim + threads), the threads
+        backend's idle-worker ``s_steal_check`` nudge, and the
+        starving-thief re-nudges relayed on task descents."""
+        rt = self.rt
+        sched = self.sched
+        if not rt.steal or not sched.is_leaf:
+            return
+        live = [w for w in sched.workers
+                if w.core_id not in rt.dead_workers]
+        idle = [w for w in live if sched.load.get(w.core_id, 0) == 0]
+        if not idle:
+            return
+        if self._steal_local(idle):
+            return
+        if sched.steal_pending or sched.parent is None:
+            return
+        sched.steal_pending = True
+        with rt.count_lock:
+            rt.steals_attempted += 1
+        rt.sub.send(sched, sched.parent,
+                    Message("s_steal_req",
+                            (sched.parent, sched.core_id, rt.steal_ttl),
+                            cost=rt.cost.steal_proc))
+
+    def _steal_local(self, idle: list) -> bool:
+        """Intra-leaf rebalance: re-home queued-but-undispatched tasks
+        from this leaf's loaded workers onto its idle ones.  No protocol
+        messages — the re-dispatch itself is charged like any dispatch."""
+        rt = self.rt
+        idle_ids = {w.core_id for w in idle}
+        picks, moved = self._pick_steals(idle_ids, exclude=idle_ids)
+        if not picks:
+            return False
+        with rt.count_lock:
+            rt.steal_tasks_moved += len(picks)
+            rt.steal_bytes_moved += moved
+        for task in picks:
+            self._leaf_dispatch(task, only=idle)
+        return True
+
+    def h_steal_req(self, thief_id: str, ttl: int) -> None:
+        """Steal-request routing (charged, parent-relayed).  A non-leaf
+        match point forwards the request to its most pack-occupied child
+        subtree with live workers — excluding the thief's own subtree —
+        or escalates to its parent; at the root with no candidate (or an
+        exhausted hop budget) the thief gets an empty grant so its
+        pending flag clears.  A leaf serves as the victim."""
+        rt = self.rt
+        sched = self.sched
+        if sched.is_leaf:
+            self._serve_steal(thief_id)
+            return
+        if thief_id not in sched.starving:
+            # remember the thief: if this round comes up empty, the next
+            # descent through here re-nudges it (see :meth:`h_descend`)
+            sched.starving.append(thief_id)
+        thief = rt.sched_of(thief_id)
+        if ttl <= 0:
+            rt.sub.send(sched, thief,
+                        Message("s_steal_grant", (thief, ()),
+                                cost=rt.cost.steal_proc))
+            return
+        best, best_occ = None, 0.0
+        for c in sched.children:
+            if thief_id in rt.subtree_ids[c.core_id]:
+                continue
+            if sched.load.get(c.core_id, 0) <= 0 or not self.live_workers(c):
+                continue
+            o = sched.occ.get(c.core_id, 0.0)
+            if best is None or o > best_occ:
+                best, best_occ = c, o
+        if best is not None:
+            rt.sub.send(sched, best,
+                        Message("s_steal_req", (best, thief_id, ttl - 1),
+                                cost=rt.cost.steal_proc))
+        elif sched.parent is not None:
+            rt.sub.send(sched, sched.parent,
+                        Message("s_steal_req",
+                                (sched.parent, thief_id, ttl - 1),
+                                cost=rt.cost.steal_proc))
+        else:
+            rt.sub.send(sched, thief,
+                        Message("s_steal_grant", (thief, ()),
+                                cost=rt.cost.steal_proc))
+
+    def _serve_steal(self, thief_id: str) -> None:
+        """Victim side: pick the stealable half of this leaf's queued
+        work (gate-passing, see :meth:`_pick_steals`) and grant it to
+        the thief leaf in one charged message."""
+        rt = self.rt
+        sched = self.sched
+        if thief_id == sched.core_id:   # degenerate routing: nothing to do
+            picks, moved = [], 0
+        else:
+            picks, moved = self._pick_steals(rt.subtree_workers[thief_id])
+        thief = rt.sched_of(thief_id)
+        if picks:
+            with rt.count_lock:
+                rt.steals_granted += 1
+                rt.steal_tasks_moved += len(picks)
+                rt.steal_bytes_moved += moved
+        rt.sub.send(sched, thief, Message(
+            "s_steal_grant", (thief, tuple(picks)),
+            cost=rt.cost.steal_proc + rt.cost.dispatch_proc * len(picks),
+            payload_bytes=batch_payload_bytes(max(1, len(picks)))))
+
+    def _pick_steals(self, thief_wids: set[str],
+                     exclude: set[str] | None = None) -> tuple[list, int]:
+        """Steal-half selection with the data-movement gate.
+
+        A queued-but-undispatched task passes the gate when the compute
+        it would save (its declared duration, falling back to the
+        service-time EWMA) exceeds ``STEAL_GATE_FACTOR`` times the DMA
+        cost of re-fetching the part of its packed footprint that lives
+        outside the thief subtree, at the cost model's per-byte rate.
+        The factor > 1 is hysteresis: a steal also scatters the task's
+        *future* locality (its outputs re-home to the thief), a cost the
+        one-shot DMA estimate cannot see, so marginal steals are worse
+        than they look and the gate demands a clear win.  Per victim
+        worker the *later*
+        half of what passes is taken (dask-style steal-half) — all of it
+        when the worker has other outstanding work beyond the passing
+        set.  Picked tasks are removed from the victim queues and their
+        descent-path counters retracted."""
+        rt = self.rt
+        sched = self.sched
+        cost = rt.cost
+        picks: list = []
+        moved = 0
+        for w in sched.workers:
+            if exclude and w.core_id in exclude:
+                continue
+            passing = []
+            for task in rt.worker_agent.queued_stealable(w):
+                if task.completed or task.state != DISPATCHED:
+                    continue
+                if task.stolen >= 2:    # ping-pong guard
+                    continue
+                est = task.duration or rt.service_ewma or 0.0
+                foreign = sum(b for wid, b in task.pack_by_worker.items()
+                              if wid not in thief_wids)
+                dma = (cost.dma_startup + foreign / cost.dma_bytes_per_cycle
+                       if foreign else 0.0)
+                if est > self.STEAL_GATE_FACTOR * dma:
+                    passing.append((task, foreign))
+            if len(passing) < self.STEAL_MIN_VICTIM_QUEUE:
+                continue
+            if sched.load.get(w.core_id, 0) > len(passing):
+                take = passing
+            else:
+                take = passing[(len(passing) + 1) // 2:]
+            for task, foreign in take:
+                if not rt.worker_agent.remove_queued(w, task):
+                    continue   # raced into execution
+                task.stolen += 1
+                task.worker = None
+                moved += foreign
+                picks.append(task)
+                self._retract_path(w, task)
+        return picks, moved
+
+    def _retract_path(self, node, task: "Task") -> None:
+        """Undo the descent-path load/occ increments for a task leaving
+        ``node``'s queue (victim side), each counter applied in its
+        owning scheduler's context via the uncharged update channel."""
+        rt = self.rt
+        while node is not task.owner and node.parent is not None:
+            parent = node.parent
+            rt.sub.update(parent, rt.agent_of(parent)._retract_load,
+                          node.core_id, task.occ_weight)
+            node = parent
+
+    def h_steal_grant(self, tasks: tuple) -> None:
+        """Thief side: granted tasks are dispatched across this leaf's
+        workers with the normal scoring — their ``last_producer``
+        updates land in the owning directory shards exactly like a first
+        dispatch — and the descent-path counters toward each task's
+        owner are re-credited along the new path.  An empty grant just
+        clears the pending flag (no immediate retry: the next completion
+        or idle nudge re-triggers the check, keeping the protocol
+        quiescent when the whole machine drains)."""
+        rt = self.rt
+        sched = self.sched
+        sched.steal_pending = False
+        for task in tasks:
+            if task.completed or task.state != DISPATCHED:
+                continue
+            if not sched.workers:
+                # every worker here died while the grant was in flight:
+                # hand the task back to its owner for a fresh descent
+                rt.sub.local(task.owner,
+                             Message("s_descend", (task.owner, task),
+                                     cost=rt.cost.schedule_base))
+                continue
+            self._leaf_dispatch(task)
+            node = sched
+            while node is not task.owner and node.parent is not None:
+                parent = node.parent
+                rt.sub.update(parent, rt.agent_of(parent)._credit_load,
+                              node.core_id, task.occ_weight)
+                node = parent
 
     # ---- ownership migration (paper SV-C) -----------------------------------
 

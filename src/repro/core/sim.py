@@ -121,6 +121,8 @@ class CostModel:
     shard_lookup_proc: float = 650.0   # answer a cross-shard metadata read
     migrate_proc: float = 2500.0       # migration request/grant bookkeeping
     migrate_per_node: float = 150.0    # per directory node handed over
+    # --- work stealing (worker-tier load redistribution) ---
+    steal_proc: float = 650.0          # steal request match/relay/grant
 
     # --- DMA engine (paper SIII: a DMA can be started in 24 cycles) ---
     dma_startup: float = 24.0

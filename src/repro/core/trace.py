@@ -90,6 +90,17 @@ def msg_summary(report, top: int | None = None) -> list[dict]:
     return rows[:top] if top is not None else rows
 
 
+def steal_summary(report, ndigits: int = 6) -> dict:
+    """Work-stealing rollup for a :class:`~.api.RunReport`: requests
+    attempted/granted, tasks and packed bytes re-homed, and the
+    per-worker occupancy coefficient of variation (rounded) — the
+    redistribution quantities the ``skewed_dag`` benchmark row tracks.
+    All counters are zero for a ``steal=False`` run."""
+    s = report.steal_summary()
+    s["occupancy_cv"] = round(s["occupancy_cv"], ndigits)
+    return s
+
+
 def attach_tracer(rt) -> Tracer:
     """Instrument a Myrmics runtime instance (monkey-patch the two
     choke points: worker-agent task completion and core occupancy)."""

@@ -79,6 +79,7 @@ class WorkerAgent:
         w.parent.workers = [x for x in w.parent.workers
                             if x.core_id != worker_id]
         w.parent.load.pop(worker_id, None)
+        w.parent.occ.pop(worker_id, None)
         for t in victims:
             if t.state in (DISPATCHED, RUNNING, WAITING):
                 rt.tasks_rescheduled += 1
@@ -96,6 +97,7 @@ class WorkerAgent:
         w = WorkerNode(rt.engine, wid, leaf)
         leaf.workers.append(w)
         leaf.load[wid] = 0
+        leaf.occ[wid] = 0.0
         rt.hier.workers.append(w)
         rt.hier.by_id[wid] = w
         for s in rt.hier.scheds:
@@ -130,6 +132,23 @@ class WorkerAgent:
             rt.sub.local(task.owner,
                          Message("s_descend", (task.owner, task),
                                  cost=rt.cost.schedule_base))
+
+    # ---- work-stealing queue interface --------------------------------------
+
+    def queued_stealable(self, w: WorkerNode) -> list[Task]:
+        """Queued-but-undispatched tasks on ``w`` (steal candidates), in
+        queue order.  The running task is never in here — ``try_start``
+        pops it before execution."""
+        return [rec.task for rec in w.queue]
+
+    def remove_queued(self, w: WorkerNode, task: Task) -> bool:
+        """Remove a queued task record (victim side of a steal); False
+        when the task already left the queue for execution."""
+        for i, rec in enumerate(w.queue):
+            if rec.task is task:
+                del w.queue[i]
+                return True
+        return False
 
     # ---- dispatch intake + DMA ----------------------------------------------
 

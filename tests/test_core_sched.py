@@ -97,3 +97,55 @@ class TestScoreCandidates:
     def test_zero_footprint_zero_load_defaults_first(self):
         cands = [("a", {"w0"}, 0), ("b", {"w1"}, 0)]
         assert score_candidates({}, cands, policy_p=20) == "a"
+
+    # -- degenerate-case contract (empty pack_bytes_by_worker) ------------
+
+    def test_empty_pack_is_pure_balance_below_p100(self):
+        # no producer bytes: L is 0 everywhere and T = (100-p)/100 * B,
+        # so any policy_p < 100 yields the pure-balance choice
+        cands = [("a", {"w0"}, 7), ("b", {"w1"}, 2), ("c", {"w2"}, 4)]
+        assert {score_candidates({}, cands, policy_p=p)
+                for p in (0, 20, 50, 80, 99)} == {"b"}
+
+    def test_empty_pack_at_p100_expresses_no_preference(self):
+        # at exactly p=100 the balance weight is zero too: every score
+        # collapses to 0.0 and list order decides — the documented
+        # reason pure-locality policies herd on producer-less DAGs
+        cands = [("a", {"w0"}, 7), ("b", {"w1"}, 2), ("c", {"w2"}, 4)]
+        assert score_candidates({}, cands, policy_p=100) == "a"
+
+    def test_empty_pack_equal_load_list_order_pinned(self):
+        # the documented fallback order: balance first, then list
+        # position — placement of first-spawn tasks must not shift
+        cands = [("a", {"w0"}, 1), ("b", {"w1"}, 1), ("c", {"w2"}, 1)]
+        assert score_candidates({}, cands, policy_p=100) == "a"
+        rotated = cands[1:] + cands[:1]
+        assert score_candidates({}, rotated, policy_p=100) == "b"
+
+    # -- region-affinity term (work-stealing tier) ------------------------
+
+    def test_affinity_breaks_balance_tie_toward_owner(self):
+        cands = [("a", {"w0"}, 2), ("b", {"w1"}, 2)]
+        assert score_candidates({}, cands, policy_p=50,
+                                region_affinity=[0.0, 1.0]) == "b"
+
+    def test_affinity_never_outbids_a_less_loaded_candidate(self):
+        # owner subtree is more loaded: balance wins outright — region
+        # ownership is a tie-break, not a locality substitute
+        cands = [("a", {"w0"}, 0), ("b", {"w1"}, 3)]
+        assert score_candidates({}, cands, policy_p=80,
+                                region_affinity=[0.0, 1.0]) == "a"
+
+    def test_affinity_ignored_when_producer_bytes_exist(self):
+        # real packed bytes always beat the ownership hint
+        cands = [("a", {"w0"}, 1), ("b", {"w1"}, 1)]
+        pack = {"w0": 4096}
+        assert score_candidates(pack, cands, policy_p=80,
+                                region_affinity=[0.0, 1.0]) == "a"
+
+    def test_affinity_none_matches_pre_stealing_scoring(self):
+        cands = [("a", {"w0"}, 3), ("b", {"w1"}, 1)]
+        for pack in ({}, {"w0": 512, "w1": 512}):
+            for p in (0, 20, 100):
+                assert score_candidates(pack, cands, p) == \
+                    score_candidates(pack, cands, p, region_affinity=None)
