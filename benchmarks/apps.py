@@ -142,10 +142,11 @@ def jacobi(n_workers: int, *, total_work: float = 256e6, steps: int = 6,
         else:
             @task
             def j_group(c, g_rid: InOut.nt, b_out: Out.nt, b_in: In.nt,
-                        *nbr: In.nt, g: Safe, t: Safe):
+                        *nbr: In.nt, g: Safe, t: Safe,
+                        fine_fn: Safe = spawn_fine):
                 lo, hi = g * P // G, (g + 1) * P // G
                 for i in range(lo, hi):
-                    spawn_fine(c, i, t)
+                    fine_fn(c, i, t)
 
             for t in range(steps):
                 pb, cb = (t + 1) % 2, t % 2
@@ -203,18 +204,20 @@ def raytrace(n_workers: int, *, total_work: float = 256e6,
         g_rids = [ctx.ralloc(root, 1, label=f"g{g}") for g in range(G)]
         outs = [ctx.alloc(lines_bytes, g_rids[grp(i)]) for i in range(P)]
 
+        def spawn_fine(c, scene_o, i):
+            c.spawn(trace_lines, scene_o, outs[i],
+                    duration=base * imbalance(i), name=f"rt{i}",
+                    work=base * imbalance(i) if real else 0.0)
+
         if not hier:
             for i in range(P):
-                ctx.spawn(trace_lines, scene, outs[i],
-                          duration=base * imbalance(i), name=f"rt{i}",
-                          work=base * imbalance(i) if real else 0.0)
+                spawn_fine(ctx, scene, i)
         else:
             @task
-            def trace_group(c, g_rid: InOut.nt, scene_o: In.nt, *, g: Safe):
+            def trace_group(c, g_rid: InOut.nt, scene_o: In.nt, *, g: Safe,
+                            fine_fn: Safe = spawn_fine):
                 for i in range(g * P // G, (g + 1) * P // G):
-                    c.spawn(trace_lines, scene_o, outs[i],
-                            duration=base * imbalance(i),
-                            work=base * imbalance(i) if real else 0.0)
+                    fine_fn(c, scene_o, i)
 
             for g in range(G):
                 ctx.spawn(trace_group, g_rids[g], scene, g=g, name=f"RT{g}")
@@ -280,8 +283,9 @@ def bitonic(n_workers: int, *, total_elems_work: float = 256e6,
         else:
             @task
             def exchange_group(c, src_r: In.nt, dst_r: Out.nt,
-                               *partner: In.nt, s: Safe, g: Safe):
-                spawn_fine(c, s, g * cpg, (g + 1) * cpg)
+                               *partner: In.nt, s: Safe, g: Safe,
+                               fine_fn: Safe = spawn_fine):
+                fine_fn(c, s, g * cpg, (g + 1) * cpg)
 
             for s, (_, j) in enumerate(stages):
                 src, dst = s % 2, (s + 1) % 2
@@ -453,8 +457,9 @@ def matmul(n_workers: int, *, total_work: float = 512e6, hier: bool = False,
             spawn_fine(ctx, range(P))
         else:
             @task
-            def mul_group(c, g_rid: InOut.nt, *ab: In.nt, g: Safe):
-                spawn_fine(c, range(g * P // G, (g + 1) * P // G))
+            def mul_group(c, g_rid: InOut.nt, *ab: In.nt, g: Safe,
+                          fine_fn: Safe = spawn_fine):
+                fine_fn(c, range(g * P // G, (g + 1) * P // G))
 
             for g in range(G):
                 ctx.spawn(mul_group, g_rids[g], *ab_rids, g=g, name=f"M{g}")

@@ -176,6 +176,10 @@ def _out_meta(args) -> dict:
         # — absent means coalesce=True, steal not yet implemented.
         "coalesce": defaults["coalesce"].default,
         "steal": defaults["steal"].default,
+        # absent from BENCH_6.json and earlier — absent means
+        # sanitize=False (the feature did not exist yet); pinned rows
+        # are only comparable with the sanitizer off.
+        "sanitize": defaults["sanitize"].default,
         "python": platform.python_version(),
         "platform": platform.platform(),
     }

@@ -1,0 +1,40 @@
+"""Footprint verification layer (static + dynamic + structural).
+
+The Myrmics dependency analysis is only sound if every task's declared
+``In``/``Out``/``InOut``/``Safe`` footprint matches what its body
+actually touches.  This package is the tooling that checks the
+assumption from three independent angles:
+
+* :mod:`.footprint_lint` — a pure-AST static linter over every
+  ``@task``-decorated function (no imports of the linted code), with a
+  ``python -m repro.analysis.lint`` CLI.  Catches annotation lies that
+  are visible in the source: writes through read-only params, refs
+  smuggled past the dependency tracker via closures/globals/``Safe``
+  args, over-declared ``Out`` footprints.
+* the dynamic sanitizer (``Myrmics(sanitize=True)`` /
+  ``SerialRuntime(sanitize=True)``) — lives in ``core`` (``deps.py``,
+  ``runtime.py``, ``serial.py``) because it instruments the hot access
+  path; validates every ``.read()``/``.write()`` against the executing
+  task's footprint and keeps an SP-bags-style shadow per object so two
+  conflicting accesses not ordered by the dependency graph raise
+  :class:`~repro.core.deps.DeterminacyRaceError` — catching scheduler
+  bugs (a steal or migration releasing a task early) as well as user
+  annotation lies.
+* :mod:`.invariants` — :func:`~.invariants.check_invariants`, a
+  structural pass over a live or finished runtime asserting
+  directory/dep-shard owner alignment, occupancy-counter conservation
+  and steal/starving-registry consistency.  Wired into the chaos
+  sweeps in ``tests/``.
+"""
+
+from .footprint_lint import Finding, lint_file, lint_paths, lint_source
+from .invariants import InvariantViolation, check_invariants
+
+__all__ = [
+    "Finding",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "InvariantViolation",
+    "check_invariants",
+]

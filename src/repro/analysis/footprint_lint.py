@@ -1,0 +1,727 @@
+"""Static footprint linter: AST checks over ``@task``-decorated functions.
+
+The declarative API promises the dependency engine that a task touches
+exactly what its signature declares.  This pass verifies the promise
+without importing (let alone running) the linted code — it is pure
+:mod:`ast`, so it is safe to run over anything, including files whose
+imports would not resolve in the linting environment.
+
+Rules (ids are what waiver comments name):
+
+``write-to-in``
+    ``p.write(...)`` / ``ctx.write(p, ...)`` where ``p`` is annotated
+    ``In`` — a declared-read-only param the body mutates.
+``notransfer-access``
+    any ``.read()``/``.write()`` on a ``.nt`` (NOTRANSFER) param: the
+    runtime never fetches the data, so the access always fails.
+``unwritten-out``
+    an ``Out`` param the body never writes nor forwards to a child —
+    an over-declared footprint that inflates dependency traffic.
+    Bodies with no storage access and no spawns at all (virtual-time
+    placeholder tasks whose effect is their ``duration``) are exempt.
+``unannotated-param``
+    a task param (after ctx) with no recognisable access annotation.
+``closure-capture``
+    a name bound in an *enclosing function* used in a ref position
+    (``.read()``/``.write()`` receiver, spawn/wait/alloc argument), or
+    a call to a captured function that itself spawns or touches
+    storage — refs reaching the body outside the declared footprint,
+    invisible to the dependency tracker.
+``global-capture``
+    same ref positions, but the name is module-level mutable data.
+``safe-ref-access``
+    a ``.read()``/``.write()`` through a ``Safe``-annotated param (or a
+    name derived from one by iteration/indexing): ``Safe`` args are
+    excluded from dependency analysis, so the access is only legal if
+    some *other* declared arg covers the node — pin intentional sites
+    with a waiver naming the covering arg.
+``uncovered-child-arg``
+    a ``Safe``-sourced name passed into a dependency-tracked param of a
+    spawned child, or an ``In`` param forwarded into a child
+    ``Out``/``InOut`` position — the child's footprint exceeds the
+    parent's.
+``parse-error``
+    the file does not parse (reported once, at the syntax error).
+
+Waivers: a comment ``# lint: allow(rule)`` or
+``# lint: allow(rule: reason)`` suppresses that rule on its line;
+placed on a ``def`` or decorator line it suppresses the rule for the
+whole function.  Multiple rules: ``# lint: allow(r1, r2)``.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable
+
+#: annotation name -> access kind
+_ACCESS = {"In": "in", "Out": "out", "InOut": "inout", "Safe": "safe"}
+
+#: ctx methods whose arguments are ref positions (node handles)
+_CTX_REF_METHODS = {
+    "spawn", "wait", "read", "write", "alloc", "balloc", "ralloc",
+    "free", "rfree",
+}
+
+#: attribute calls that mark a function as touching runtime state
+_DIRTY_ATTRS = {"spawn", "read", "write", "wait", "alloc", "balloc",
+                "ralloc", "free", "rfree"}
+
+#: spawn keywords that are scheduler metadata, not data arguments
+_SPAWN_META_KW = {"duration", "name"}
+
+_WAIVER_RE = re.compile(r"#\s*lint:\s*allow\(([^)]*)\)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One linter diagnostic."""
+
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:  # the CLI line format
+        return f"{self.path}:{self.line}:{self.col}: {self.rule}: {self.message}"
+
+
+@dataclass
+class _Param:
+    name: str
+    kind: str | None        # "in" | "out" | "inout" | "safe" | None
+    nt: bool
+    node: ast.arg
+
+
+# ---------------------------------------------------------------------------
+# annotation / decorator resolution
+# ---------------------------------------------------------------------------
+
+
+def _resolve_access(node: ast.expr | None) -> tuple[str, bool] | None:
+    """``(kind, notransfer)`` for a recognisable access annotation."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        try:
+            node = ast.parse(node.value, mode="eval").body
+        except SyntaxError:
+            return None
+    if isinstance(node, ast.Name):
+        kind = _ACCESS.get(node.id)
+        return (kind, False) if kind else None
+    if isinstance(node, ast.Attribute) and node.attr == "nt":
+        base = _resolve_access(node.value)
+        return (base[0], True) if base else None
+    if isinstance(node, ast.Subscript):
+        base_name = node.value
+        if isinstance(base_name, ast.Attribute):
+            base_name = ast.Name(id=base_name.attr)
+        if isinstance(base_name, ast.Name) and base_name.id == "Annotated":
+            sl = node.slice
+            elts = sl.elts if isinstance(sl, ast.Tuple) else [sl]
+            if not elts:
+                return None
+            acc = _resolve_access(elts[0])
+            if acc is None:
+                return None
+            nt = acc[1] or any(
+                isinstance(m, ast.Name) and m.id == "NOTRANSFER"
+                for m in elts[1:])
+            return (acc[0], nt)
+    return None
+
+
+def _is_task_decorated(fd: ast.FunctionDef) -> bool:
+    for dec in fd.decorator_list:
+        node = dec.func if isinstance(dec, ast.Call) else dec
+        if isinstance(node, ast.Name) and node.id == "task":
+            return True
+        if isinstance(node, ast.Attribute) and node.attr == "task":
+            return True
+    return False
+
+
+def _params_of(fd: ast.FunctionDef) -> list[_Param]:
+    """Params after the leading ctx param (vararg and kw-only included)."""
+    a = fd.args
+    pos = list(a.posonlyargs) + list(a.args)
+    out: list[_Param] = []
+    for arg in pos[1:] + ([a.vararg] if a.vararg else []) + list(a.kwonlyargs):
+        acc = _resolve_access(arg.annotation)
+        if acc is None:
+            out.append(_Param(arg.arg, None, False, arg))
+        else:
+            out.append(_Param(arg.arg, acc[0], acc[1], arg))
+    return out
+
+
+def _ctx_name(fd: ast.FunctionDef) -> str | None:
+    a = fd.args
+    pos = list(a.posonlyargs) + list(a.args)
+    return pos[0].arg if pos else None
+
+
+# ---------------------------------------------------------------------------
+# scope bookkeeping
+# ---------------------------------------------------------------------------
+
+
+class _BoundNames(ast.NodeVisitor):
+    """Names bound in one function scope (params + assignments + nested
+    def names), not descending into nested function bodies."""
+
+    def __init__(self) -> None:
+        self.names: set[str] = set()
+        self.func_defs: dict[str, ast.FunctionDef] = {}
+
+    def _target(self, node: ast.expr) -> None:
+        if isinstance(node, ast.Name):
+            self.names.add(node.id)
+        elif isinstance(node, (ast.Tuple, ast.List)):
+            for elt in node.elts:
+                self._target(elt)
+        elif isinstance(node, ast.Starred):
+            self._target(node.value)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._target(t)
+        self.visit(node.value)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self._target(node.target)
+        if node.value:
+            self.visit(node.value)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._target(node.target)
+        self.visit(node.value)
+
+    def visit_For(self, node: ast.For) -> None:
+        self._target(node.target)
+        self.generic_visit(node)
+
+    visit_AsyncFor = visit_For
+
+    def visit_With(self, node: ast.With) -> None:
+        for item in node.items:
+            if item.optional_vars is not None:
+                self._target(item.optional_vars)
+        self.generic_visit(node)
+
+    visit_AsyncWith = visit_With
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        if node.name:
+            self.names.add(node.name)
+        self.generic_visit(node)
+
+    def visit_NamedExpr(self, node: ast.NamedExpr) -> None:
+        self._target(node.target)
+        self.visit(node.value)
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            self.names.add((alias.asname or alias.name).split(".")[0])
+
+    visit_ImportFrom = visit_Import
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.names.add(node.name)
+        self.func_defs[node.name] = node
+        # do not descend: nested scopes bind their own names
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        pass
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.names.add(node.name)
+
+
+def _scope_names(fd: ast.FunctionDef) -> tuple[set[str], dict[str, ast.FunctionDef]]:
+    v = _BoundNames()
+    a = fd.args
+    for arg in (list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+                + ([a.vararg] if a.vararg else [])
+                + ([a.kwarg] if a.kwarg else [])):
+        v.names.add(arg.arg)
+    for stmt in fd.body:
+        v.visit(stmt)
+    return v.names, v.func_defs
+
+
+def _is_dirty(fd: ast.FunctionDef, _cache: dict = {}) -> bool:
+    """Does this function (incl. nested) spawn tasks or touch storage?"""
+    key = id(fd)
+    if key not in _cache:
+        dirty = False
+        for node in ast.walk(fd):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _DIRTY_ATTRS):
+                dirty = True
+                break
+        _cache[key] = dirty
+    return _cache[key]
+
+
+# ---------------------------------------------------------------------------
+# module index
+# ---------------------------------------------------------------------------
+
+
+class _ModuleIndex:
+    """Whole-module facts the per-task checker consults."""
+
+    def __init__(self, tree: ast.Module) -> None:
+        #: every @task function in the module, by name (for child-sig
+        #: resolution of spawn/direct-call arguments)
+        self.task_defs: dict[str, ast.FunctionDef] = {}
+        #: names bound by module-level plain data assignments
+        self.assigned: set[str] = set()
+        #: module-level functions / classes / imports (never flagged)
+        self.defs: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if _is_task_decorated(node):
+                    self.task_defs[node.name] = node
+        for stmt in tree.body:
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        self.assigned.add(t.id)
+            elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+                self.assigned.add(stmt.target.id)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                self.defs.add(stmt.name)
+            elif isinstance(stmt, (ast.Import, ast.ImportFrom)):
+                for alias in stmt.names:
+                    self.defs.add((alias.asname or alias.name).split(".")[0])
+
+    def task_params(self, name: str) -> list[_Param] | None:
+        fd = self.task_defs.get(name)
+        return _params_of(fd) if fd is not None else None
+
+
+# ---------------------------------------------------------------------------
+# waivers
+# ---------------------------------------------------------------------------
+
+
+def _parse_waivers(source: str) -> dict[int, set[str]]:
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _WAIVER_RE.search(line)
+        if not m:
+            continue
+        rules = set()
+        for tok in m.group(1).split(","):
+            rule = tok.split(":")[0].strip()
+            if rule:
+                rules.add(rule)
+        if rules:
+            out[i] = rules
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the per-task checker
+# ---------------------------------------------------------------------------
+
+
+class _TaskChecker:
+    def __init__(self, path: str, fd: ast.FunctionDef,
+                 enclosing: set[str],
+                 enclosing_funcs: dict[str, ast.FunctionDef],
+                 module: _ModuleIndex,
+                 waivers: dict[int, set[str]],
+                 findings: list[Finding]) -> None:
+        self.path = path
+        self.fd = fd
+        self.module = module
+        self.waivers = waivers
+        self.findings = findings
+        self.ctx = _ctx_name(fd)
+        self.params = {p.name: p for p in _params_of(fd)}
+        self.enclosing = enclosing - set(self.params) - {self.ctx}
+        self.enclosing_funcs = enclosing_funcs
+        self.locals, self.local_funcs = _scope_names(fd)
+        #: names derived from Safe params by assignment/iteration/indexing
+        self.safe_taint: set[str] = {
+            p.name for p in self.params.values() if p.kind == "safe"}
+        self.written: set[str] = set()
+        self.mentioned_nested: set[str] = set()
+        self.has_effects = False     # any storage access or spawn in body
+        # function-scope waivers: def line through the end of the signature
+        start = min([fd.lineno] + [d.lineno for d in fd.decorator_list])
+        end = fd.body[0].lineno if fd.body else fd.lineno
+        self.func_waivers: set[str] = set()
+        for line in range(start, end + 1):
+            self.func_waivers |= waivers.get(line, set())
+
+    # -- reporting ----------------------------------------------------------
+
+    def _emit(self, node: ast.AST, rule: str, message: str) -> None:
+        line = getattr(node, "lineno", self.fd.lineno)
+        col = getattr(node, "col_offset", 0)
+        if rule in self.waivers.get(line, ()) or rule in self.func_waivers:
+            return
+        self.findings.append(Finding(self.path, line, col, rule, message))
+
+    # -- name classification ------------------------------------------------
+
+    def _ref_bases(self, e: ast.expr) -> list[ast.Name]:
+        """Leftmost names of an expression in ref position.  Computed
+        expressions (arithmetic, f-strings...) are not ref-shaped and
+        yield nothing."""
+        if isinstance(e, ast.Name):
+            return [e]
+        if isinstance(e, (ast.Subscript, ast.Attribute)):
+            return self._ref_bases(e.value)
+        if isinstance(e, ast.Starred):
+            return self._ref_bases(e.value)
+        if isinstance(e, (ast.List, ast.Tuple, ast.Set)):
+            out: list[ast.Name] = []
+            for elt in e.elts:
+                out.extend(self._ref_bases(elt))
+            return out
+        if isinstance(e, ast.Call):
+            f = e.func
+            name = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else None)
+            if name in _ACCESS or name == "nt":
+                out = []
+                for a in e.args:
+                    out.extend(self._ref_bases(a))
+                return out
+        return []
+
+    def _check_ref_name(self, b: ast.Name, *, where: str,
+                        marks_written: bool = False,
+                        child: tuple[str, _Param | None] | None = None) -> None:
+        """Classify one base name appearing in a ref position."""
+        name = b.id
+        if name == self.ctx:
+            return
+        p = self.params.get(name)
+        if p is not None:
+            if marks_written:
+                self.written.add(name)
+            if p.kind == "safe" and child is not None:
+                cname, cparam = child
+                if cparam is not None and cparam.kind != "safe":
+                    self._emit(
+                        b, "uncovered-child-arg",
+                        f"Safe parameter '{name}' passed into dependency-"
+                        f"tracked parameter '{cparam.name}' of task "
+                        f"'{cname}' — the parent footprint does not cover "
+                        "it")
+            elif p.kind == "in" and not p.nt and child is not None:
+                cname, cparam = child
+                if cparam is not None and cparam.kind in ("out", "inout"):
+                    self._emit(
+                        b, "uncovered-child-arg",
+                        f"read-only parameter '{name}' forwarded into "
+                        f"writable parameter '{cparam.name}' of task "
+                        f"'{cname}' — the child footprint exceeds the "
+                        "parent's")
+            return
+        if name in self.safe_taint:
+            if child is not None:
+                cname, cparam = child
+                if cparam is not None and cparam.kind != "safe":
+                    self._emit(
+                        b, "uncovered-child-arg",
+                        f"'{name}' (derived from a Safe argument) passed "
+                        f"into dependency-tracked parameter "
+                        f"'{cparam.name}' of task '{cname}'")
+            return
+        if name in self.locals:
+            return
+        if name in self.enclosing:
+            fdef = self.enclosing_funcs.get(name)
+            if fdef is not None and child is not None:
+                return   # captured function handle passed as data: benign
+            self._emit(
+                b, "closure-capture",
+                f"'{name}' is captured from an enclosing function and used "
+                f"{where} — the ref bypasses the declared footprint")
+            return
+        if name in self.module.assigned and name not in self.module.defs:
+            self._emit(
+                b, "global-capture",
+                f"module-level '{name}' used {where} — the ref bypasses "
+                "the declared footprint")
+
+    def _check_receiver(self, recv: ast.expr, mode: str,
+                        call: ast.Call) -> None:
+        """``X.read()`` / ``X.write(...)`` receiver analysis."""
+        self.has_effects = True
+        for b in self._ref_bases(recv):
+            name = b.id
+            p = self.params.get(name)
+            if p is not None:
+                if p.nt:
+                    self._emit(
+                        call, "notransfer-access",
+                        f"parameter '{name}' is NOTRANSFER (.nt) but the "
+                        f"body calls .{mode}() on it — the data is never "
+                        "fetched, so the access always fails")
+                elif mode == "write":
+                    self.written.add(name)
+                    if p.kind == "in":
+                        self._emit(
+                            call, "write-to-in",
+                            f"parameter '{name}' is annotated In but the "
+                            "body writes it")
+                elif p.kind == "safe":
+                    self._emit(
+                        call, "safe-ref-access",
+                        f"read through Safe parameter '{name}' — not "
+                        "covered by the dependency footprint")
+                continue
+            if name in self.safe_taint:
+                self._emit(
+                    call, "safe-ref-access",
+                    f".{mode}() through '{name}', which derives from a "
+                    "Safe argument — not covered by the dependency "
+                    "footprint")
+                continue
+            self._check_ref_name(b, where=f"as a .{mode}() receiver",
+                                 marks_written=(mode == "write"))
+
+    # -- spawn / direct-call ------------------------------------------------
+
+    def _child_param(self, params: list[_Param] | None, pos: int | None,
+                     kw: str | None) -> _Param | None:
+        if params is None:
+            return None
+        if kw is not None:
+            for p in params:
+                if p.name == kw:
+                    return p
+            return None
+        if pos is not None and pos < len(params):
+            return params[pos]
+        return None
+
+    def _check_spawn(self, call: ast.Call, callee: ast.expr,
+                     data: list[ast.expr],
+                     keywords: list[ast.keyword]) -> None:
+        self.has_effects = True
+        cname = callee.id if isinstance(callee, ast.Name) else None
+        cparams = self.module.task_params(cname) if cname else None
+        if cname:
+            local_fd = self.local_funcs.get(cname) or self.enclosing_funcs.get(cname)
+            if local_fd is not None and _is_task_decorated(local_fd):
+                cparams = _params_of(local_fd)
+        starred = any(isinstance(a, ast.Starred) for a in data)
+        for i, a in enumerate(data):
+            child = (cname or "<unknown>",
+                     None if starred else self._child_param(cparams, i, None))
+            for b in self._ref_bases(a):
+                self._check_ref_name(b, where="as a spawn argument",
+                                     marks_written=True, child=child)
+        for k in keywords:
+            if k.arg in _SPAWN_META_KW:
+                continue
+            child = (cname or "<unknown>",
+                     self._child_param(cparams, None, k.arg))
+            # a keyword landing on a Safe child param is plain data
+            if child[1] is not None and child[1].kind == "safe":
+                continue
+            for b in self._ref_bases(k.value):
+                self._check_ref_name(b, where="as a spawn argument",
+                                     marks_written=True, child=child)
+
+    # -- the walk -----------------------------------------------------------
+
+    def _taint_from(self, value: ast.expr, targets: Iterable[ast.expr]) -> None:
+        bases = self._ref_bases(value)
+        if any(b.id in self.safe_taint for b in bases):
+            v = _BoundNames()
+            for t in targets:
+                v._target(t)
+            self.safe_taint |= v.names
+
+    def _scan_call(self, node: ast.Call) -> None:
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr in ("read", "write"):
+                base = f.value
+                if isinstance(base, ast.Name) and base.id == self.ctx:
+                    # ctx.read(oid) / ctx.write(oid, v)
+                    if node.args:
+                        self._check_receiver(node.args[0], f.attr, node)
+                else:
+                    self._check_receiver(base, f.attr, node)
+                return
+            if isinstance(f.value, ast.Name) and f.value.id == self.ctx:
+                if f.attr == "spawn":
+                    if node.args:
+                        self._check_spawn(node, node.args[0],
+                                          node.args[1:], node.keywords)
+                    return
+                if f.attr in _CTX_REF_METHODS:
+                    if f.attr not in ("wait",):
+                        self.has_effects = True
+                    for a in node.args:
+                        for b in self._ref_bases(a):
+                            self._check_ref_name(
+                                b, where=f"as a ctx.{f.attr}() argument")
+                    return
+            return
+        if isinstance(f, ast.Name):
+            if f.id in self.module.task_defs or f.id in {
+                    n for n, fd in self.local_funcs.items()
+                    if _is_task_decorated(fd)} or f.id in {
+                    n for n, fd in self.enclosing_funcs.items()
+                    if _is_task_decorated(fd)}:
+                # direct-call spawn sugar: every arg is a data arg
+                self._check_spawn(node, f, list(node.args), node.keywords)
+                return
+            fdef = self.enclosing_funcs.get(f.id)
+            if (f.id in self.enclosing and fdef is not None
+                    and _is_dirty(fdef)):
+                self.has_effects = True
+                self._emit(
+                    node, "closure-capture",
+                    f"call to captured function '{f.id}', which spawns "
+                    "tasks or touches storage — refs reach it outside "
+                    "the declared footprint")
+
+    def _scan(self, node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Name):
+                    self.mentioned_nested.add(sub.id)
+            return   # nested scopes are linted separately (if @task)
+        if isinstance(node, ast.Lambda):
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Name):
+                    self.mentioned_nested.add(sub.id)
+            return
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            # taint flows from the iterables before the element is read
+            for gen in node.generators:
+                self._scan(gen)
+            if isinstance(node, ast.DictComp):
+                self._scan(node.key)
+                self._scan(node.value)
+            else:
+                self._scan(node.elt)
+            return
+        if isinstance(node, ast.Call):
+            self._scan_call(node)
+        elif isinstance(node, ast.Assign):
+            self._taint_from(node.value, node.targets)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            self._taint_from(node.iter, [node.target])
+        elif isinstance(node, ast.comprehension):
+            self._taint_from(node.iter, [node.target])
+        for child in ast.iter_child_nodes(node):
+            self._scan(child)
+
+    # -- entry --------------------------------------------------------------
+
+    def run(self) -> None:
+        for p in self.params.values():
+            if p.kind is None:
+                self._emit(
+                    p.node, "unannotated-param",
+                    f"task parameter '{p.name}' has no In/Out/InOut/Safe "
+                    "annotation")
+        for stmt in self.fd.body:
+            self._scan(stmt)
+        for p in self.params.values():
+            if (p.kind == "out" and not p.nt
+                    and p.name not in self.written
+                    and p.name not in self.mentioned_nested
+                    and self.has_effects):
+                self._emit(
+                    p.node, "unwritten-out",
+                    f"Out parameter '{p.name}' is never written — "
+                    "over-declared footprint inflates dependency traffic")
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def _walk_funcs(node: ast.AST, chain: list[ast.FunctionDef]):
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield child, list(chain)
+            yield from _walk_funcs(child, chain + [child])
+        elif isinstance(child, ast.Lambda):
+            continue
+        else:
+            yield from _walk_funcs(child, chain)
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    """Lint one module's source text; returns all findings."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 1, e.offset or 0,
+                        "parse-error", e.msg or "syntax error")]
+    module = _ModuleIndex(tree)
+    waivers = _parse_waivers(source)
+    findings: list[Finding] = []
+    scope_cache: dict[int, tuple[set[str], dict[str, ast.FunctionDef]]] = {}
+    for fd, chain in _walk_funcs(tree, []):
+        if not _is_task_decorated(fd):
+            continue
+        enclosing: set[str] = set()
+        enclosing_funcs: dict[str, ast.FunctionDef] = {}
+        for outer in chain:
+            if id(outer) not in scope_cache:
+                scope_cache[id(outer)] = _scope_names(outer)
+            names, funcs = scope_cache[id(outer)]
+            enclosing |= names
+            enclosing_funcs.update(funcs)
+        _TaskChecker(path, fd, enclosing, enclosing_funcs, module,
+                     waivers, findings).run()
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def lint_file(path: str | Path) -> list[Finding]:
+    p = Path(path)
+    return lint_source(p.read_text(encoding="utf-8"), str(p))
+
+
+def iter_py_files(paths: Iterable[str | Path]):
+    """Expand files/directories into .py files (sorted, deterministic)."""
+    for root in paths:
+        root = Path(root)
+        if root.is_dir():
+            for p in sorted(root.rglob("*.py")):
+                if any(part.startswith(".") or part == "__pycache__"
+                       for part in p.parts):
+                    continue
+                yield p
+        else:
+            yield root
+
+
+def lint_paths(paths: Iterable[str | Path]) -> tuple[list[Finding], int]:
+    """Lint files/directories; returns (findings, files_scanned)."""
+    findings: list[Finding] = []
+    n = 0
+    for p in iter_py_files(paths):
+        n += 1
+        findings.extend(lint_file(p))
+    return findings, n

@@ -1,0 +1,228 @@
+"""Runtime invariant checker: structural consistency of a live runtime.
+
+:func:`check_invariants` walks a :class:`~repro.core.runtime.Myrmics`
+instance (sim or threads backend) and asserts the cross-shard
+bookkeeping invariants that the decentralised tiers (PRs 4-6) must
+preserve however stealing, SV-C migration and coalescing interleave:
+
+* **shard alignment** — every dep-shard node belongs to the scheduler
+  the directory says owns it, and every directory-shard entry agrees
+  with the owner map;
+* **occupancy conservation** — ``SchedNode.occ``/``load`` cover exactly
+  the live children, never go (materially) negative, and at every
+  level dominate the work actually queued below (descent increments a
+  parent before its child, completion decrements the child first, so
+  ``parent.occ[c] >= sum(c.occ)`` at any event boundary);
+* **steal/starving-registry consistency** — starving entries are
+  distinct live leaf schedulers inside the relay's subtree,
+  ``steal_pending`` is a leaf-only flag, and the steal counters are
+  arithmetically sane;
+* **quiescence** (when the program has finished) — dependency queues
+  drained, no in-flight shard hand-offs, occupancy back to ~0, worker
+  queues empty.
+
+Call it from tests (the chaos sweeps do) or interactively after — or
+during — a run.  Raises :class:`InvariantViolation` listing *every*
+failed check, and returns a small stats dict when all hold.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+#: absolute slack for occupancy floats: occ is a long +=/-= chain of
+#: O(1e6)-magnitude weights, so residuals up to ~1e-3 are rounding, not
+#: bugs.
+OCC_TOL = 1e-3
+
+
+class InvariantViolation(AssertionError):
+    """One or more runtime invariants do not hold (message lists all)."""
+
+
+def _is_leaf(node: Any) -> bool:
+    return getattr(node, "is_leaf", False)
+
+
+def check_invariants(rt: Any, *, quiescent: bool | None = None) -> dict:
+    """Check structural invariants on runtime ``rt``.
+
+    ``quiescent`` forces the stricter end-of-program checks on (True)
+    or off (False); by default it is inferred from the task counters.
+    Safe to call mid-run on the sim backend (single-threaded events);
+    on the threads backend call it after ``run()`` returns, when the
+    scheduler threads have drained.
+    """
+    problems: list[str] = []
+    hier, dirx, deps = rt.hier, rt.dir, rt.deps
+    if quiescent is None:
+        quiescent = rt.tasks_done == rt.tasks_spawned and rt.tasks_spawned > 0
+    sched_ids = {s.core_id for s in hier.scheds}
+    dead = getattr(rt, "dead_workers", set())
+    live_worker_ids = {w.core_id for w in hier.workers} - dead
+
+    # -- dep-shard / directory owner alignment ------------------------------
+    n_dep_nodes = 0
+    for owner_id, shard in deps.shards.items():
+        if owner_id not in sched_ids:
+            problems.append(f"dep shard owner {owner_id!r} is not a scheduler")
+            continue
+        for nid in shard.nodes:
+            n_dep_nodes += 1
+            try:
+                real = dirx.owner_of(nid)
+            except KeyError:
+                problems.append(
+                    f"dep shard {owner_id}: node {nid} not in the directory")
+                continue
+            if real != owner_id:
+                problems.append(
+                    f"dep shard {owner_id}: node {nid} is directory-owned "
+                    f"by {real}")
+
+    # -- directory shard / owner-map alignment ------------------------------
+    n_dir_nodes = 0
+    for owner_id, dshard in dirx.shards.items():
+        for nid, meta in dshard.nodes.items():
+            n_dir_nodes += 1
+            if meta.owner != owner_id:
+                problems.append(
+                    f"directory shard {owner_id}: node {nid} meta says "
+                    f"owner {meta.owner}")
+            if dirx._owner.get(nid) != owner_id:
+                problems.append(
+                    f"directory shard {owner_id}: node {nid} owner-map says "
+                    f"{dirx._owner.get(nid)}")
+    if n_dir_nodes != len(dirx._owner):
+        problems.append(
+            f"directory owner map has {len(dirx._owner)} entries but shards "
+            f"hold {n_dir_nodes} nodes")
+
+    # -- load / occ structure and conservation ------------------------------
+    for s in hier.scheds:
+        expected = {c.core_id for c in s.children}
+        if s.is_leaf:
+            expected |= {w.core_id for w in s.workers if w.core_id not in dead}
+        if set(s.load) != set(s.occ):
+            problems.append(
+                f"{s.core_id}: load keys {sorted(s.load)} != occ keys "
+                f"{sorted(s.occ)}")
+        extra = set(s.load) - expected
+        if extra:
+            problems.append(
+                f"{s.core_id}: load/occ track unknown children {sorted(extra)}")
+        for k, v in s.load.items():
+            if v < 0:
+                problems.append(f"{s.core_id}: load[{k}] = {v} < 0")
+        for k, v in s.occ.items():
+            if v < -OCC_TOL:
+                problems.append(f"{s.core_id}: occ[{k}] = {v} < 0")
+        if s.region_load < 0:
+            problems.append(f"{s.core_id}: region_load = {s.region_load} < 0")
+        # a parent's view of a child subtree dominates the child's own
+        # outstanding work (descent charges top-down, completion credits
+        # bottom-up)
+        for c in s.children:
+            below = sum(c.occ.values())
+            if s.occ.get(c.core_id, 0.0) + OCC_TOL < below:
+                problems.append(
+                    f"{s.core_id}: occ[{c.core_id}] = "
+                    f"{s.occ.get(c.core_id, 0.0):.3f} < child outstanding "
+                    f"{below:.3f}")
+        # leaf occupancy dominates what is actually still queued
+        if s.is_leaf:
+            for w in s.workers:
+                if w.core_id in dead:
+                    continue
+                queued = rt.worker_agent.queued_stealable(w)
+                q_occ = sum(t.occ_weight for t in queued)
+                if s.occ.get(w.core_id, 0.0) + OCC_TOL < q_occ:
+                    problems.append(
+                        f"{s.core_id}: occ[{w.core_id}] = "
+                        f"{s.occ.get(w.core_id, 0.0):.3f} < queued weight "
+                        f"{q_occ:.3f}")
+                if s.load.get(w.core_id, 0) < len(queued):
+                    problems.append(
+                        f"{s.core_id}: load[{w.core_id}] = "
+                        f"{s.load.get(w.core_id, 0)} < {len(queued)} queued")
+
+    # -- steal / starving registry ------------------------------------------
+    for s in hier.scheds:
+        if s.steal_pending and not s.is_leaf:
+            problems.append(f"{s.core_id}: steal_pending on a non-leaf")
+        if len(set(s.starving)) != len(s.starving):
+            problems.append(f"{s.core_id}: duplicate starving entries "
+                            f"{s.starving}")
+        subtree = {x.core_id for x in s.subtree_scheds()}
+        for thief_id in s.starving:
+            thief = hier.by_id.get(thief_id)
+            if thief is None or not _is_leaf(thief):
+                problems.append(
+                    f"{s.core_id}: starving entry {thief_id!r} is not a "
+                    "leaf scheduler")
+            elif thief_id not in subtree:
+                problems.append(
+                    f"{s.core_id}: starving entry {thief_id} outside the "
+                    "relay's subtree")
+    if not (0 <= rt.steals_granted <= rt.steals_attempted):
+        problems.append(
+            f"steal counters inconsistent: granted={rt.steals_granted} "
+            f"attempted={rt.steals_attempted}")
+    if rt.steals_granted == 0 and rt.steal_tasks_moved != 0:
+        problems.append(
+            f"{rt.steal_tasks_moved} tasks moved with zero grants")
+    if min(rt.steal_tasks_moved, rt.steal_bytes_moved) < 0:
+        problems.append("negative steal movement counters")
+
+    # -- counters -----------------------------------------------------------
+    if rt.tasks_done > rt.tasks_spawned:
+        problems.append(
+            f"tasks_done {rt.tasks_done} > tasks_spawned {rt.tasks_spawned}")
+
+    # -- quiescence ---------------------------------------------------------
+    if quiescent:
+        if deps.in_flight:
+            problems.append(
+                f"quiescent but dep hand-offs in flight: {deps.in_flight}")
+        for owner_id, shard in deps.shards.items():
+            for nid, node in shard.nodes.items():
+                if node.queue:
+                    problems.append(
+                        f"quiescent but dep node {nid} (shard {owner_id}) "
+                        f"has {len(node.queue)} queued entries")
+                for t in node.holders:
+                    if not t.completed:
+                        problems.append(
+                            f"quiescent but dep node {nid} held by "
+                            f"unfinished {t}")
+        for s in hier.scheds:
+            for k, v in s.load.items():
+                if k in live_worker_ids or k in sched_ids:
+                    if v != 0:
+                        problems.append(
+                            f"quiescent but {s.core_id}.load[{k}] = {v}")
+            for k, v in s.occ.items():
+                if abs(v) > OCC_TOL:
+                    problems.append(
+                        f"quiescent but {s.core_id}.occ[{k}] = {v}")
+            if s.is_leaf:
+                for w in s.workers:
+                    if w.core_id in dead:
+                        continue
+                    queued = rt.worker_agent.queued_stealable(w)
+                    if queued:
+                        problems.append(
+                            f"quiescent but {w.core_id} still queues "
+                            f"{queued}")
+
+    if problems:
+        raise InvariantViolation(
+            f"{len(problems)} invariant violation(s):\n  "
+            + "\n  ".join(problems))
+    return {
+        "quiescent": quiescent,
+        "scheds": len(hier.scheds),
+        "workers": len(hier.workers),
+        "dep_nodes": n_dep_nodes,
+        "dir_nodes": n_dir_nodes,
+    }

@@ -1,0 +1,44 @@
+"""CLI for the static footprint linter.
+
+Usage::
+
+    python -m repro.analysis.lint src examples benchmarks
+
+Prints one line per finding (``path:line:col: rule: message``) and
+exits 1 if any finding survives waivers, 0 when clean — suitable as a
+CI gate.  Waive intentional sites with ``# lint: allow(rule: reason)``
+(see :mod:`.footprint_lint` for the rule catalogue).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .footprint_lint import lint_paths
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Static footprint linter for @task annotations.")
+    ap.add_argument("paths", nargs="+",
+                    help="files or directories to lint (dirs recurse *.py)")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress the summary line")
+    ns = ap.parse_args(argv)
+    findings, n_files = lint_paths(ns.paths)
+    for f in findings:
+        print(f)
+    if not ns.quiet:
+        if findings:
+            print(f"{len(findings)} finding(s) in {n_files} file(s) scanned",
+                  file=sys.stderr)
+        else:
+            print(f"clean: 0 findings in {n_files} file(s) scanned",
+                  file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

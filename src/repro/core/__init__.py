@@ -37,7 +37,7 @@ from .api import (
     current_ctx,
     task,
 )
-from .deps import DepEngine, DepShard
+from .deps import DepEngine, DepShard, DeterminacyRaceError
 from .regions import (
     MODE_READ,
     MODE_WRITE,
@@ -60,7 +60,7 @@ __all__ = [
     "task", "TaskFn", "RegionRef", "ObjRef", "RunReport", "current_ctx",
     "Myrmics", "SerialRuntime", "SerialContext", "Task", "TaskContext",
     "CostModel", "Engine", "Directory", "DirectoryShard", "AncestryCache",
-    "DepEngine", "DepShard",
+    "DepEngine", "DepShard", "DeterminacyRaceError",
     "Message", "Substrate", "SimSubstrate",
     "MODE_READ", "MODE_WRITE", "ROOT_RID",
 ]

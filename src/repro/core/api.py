@@ -366,7 +366,7 @@ def task(fn=None, *, name: str | None = None):
 _REPORT_FIELDS = (
     "total_cycles", "tasks_spawned", "tasks_done", "events",
     "workers", "scheds", "region_load", "migrations", "nodes_migrated",
-    "backend", "msg_kinds", "steals",
+    "backend", "msg_kinds", "steals", "sanitize",
 )
 
 #: Message kinds that carry per-argument dependency control traffic —
@@ -407,6 +407,9 @@ class RunReport:
     #: work-stealing outcome counters: attempted/granted requests,
     #: tasks and packed bytes re-homed (all zero with ``steal=False``)
     steals: dict[str, Any] = field(default_factory=dict)
+    #: dynamic footprint-sanitizer counters (``Myrmics(sanitize=True)``):
+    #: ``enabled``, ``accesses_checked``, ``violations``
+    sanitize: dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {name: getattr(self, name) for name in _REPORT_FIELDS}
@@ -458,6 +461,20 @@ class RunReport:
                "tasks_moved": 0, "bytes_moved": 0}
         out.update(self.steals)
         out["occupancy_cv"] = cv
+        return out
+
+    def sanitize_summary(self) -> dict:
+        """Dynamic-sanitizer outcome for the run: whether the sanitizer
+        was armed, how many storage accesses it validated, how many
+        violations (footprint lies or determinacy races) it counted —
+        a passing sanitized run reports ``violations == 0`` — plus the
+        per-task check rate.  All-zero with the default
+        ``sanitize=False``.  :func:`repro.core.trace.sanitize_summary`
+        renders the rounded view."""
+        out = {"enabled": False, "accesses_checked": 0, "violations": 0}
+        out.update(self.sanitize)
+        out["checks_per_task"] = out["accesses_checked"] / (self.tasks_done
+                                                            or 1)
         return out
 
     def sched_summary(self) -> dict[str, dict]:

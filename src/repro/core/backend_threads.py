@@ -608,7 +608,14 @@ class ThreadWorkerAgent:
             return True
 
     def _exec(self, w: WorkerNode, task: Task) -> None:
-        """Pool thread: one task activation, measured in wall time."""
+        """Pool thread: one task activation, measured in wall time.
+
+        Sanitizer note: with ``Myrmics(sanitize=True)`` the
+        footprint/race checks ride the shared :class:`TaskContext`
+        read/write path created here, serialized by the sanitizer's own
+        lock; a ``DeterminacyRaceError`` escaping the body lands in the
+        pool loop's BaseException hook (``fail``) and re-raises from
+        ``run()`` like any task-body error."""
         rt = self.rt
         task.state = RUNNING
         ctx = TaskContext(rt, task, w, rt.sub.now)

@@ -39,6 +39,7 @@ scheduler boundaries.
 from __future__ import annotations
 
 import contextlib
+import threading
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Protocol
@@ -523,3 +524,119 @@ class DepEngine:
         for nid, node in nodes.items():
             shard.nodes[nid] = node
             self.in_flight.pop(nid, None)
+
+
+# ---------------------------------------------------------------------------
+# dynamic footprint sanitizer (Myrmics(sanitize=True))
+# ---------------------------------------------------------------------------
+
+
+class DeterminacyRaceError(RuntimeError):
+    """Two conflicting storage accesses were not ordered by the
+    dependency graph — either an annotation lie slipped past the
+    footprint check (e.g. a ref smuggled through a ``Safe`` argument)
+    or the scheduler itself released a task early (a steal/migration
+    bug).  The message names both tasks, the object, and the access
+    modes."""
+
+
+class _ObjShadow:
+    """SP-bags-style shadow for one object: the last unordered writer
+    and the readers since, each stamped with the owning task's logical
+    clock at access time."""
+
+    __slots__ = ("write", "readers")
+
+    def __init__(self) -> None:
+        self.write: tuple | None = None        # (task, seq)
+        self.readers: dict = {}                # task -> seq
+
+
+def _happens_before(prev_task, prev_seq: int, task) -> bool:
+    """Is access ``(prev_task, prev_seq)`` ordered before the current
+    access by ``task``?  True when they are the same task (program
+    order), when ``prev_task`` has completed (the dependency graph
+    ordered its release before ``task``'s access), or when
+    ``prev_task`` is an ancestor whose access preceded the spawn edge
+    leading down to ``task``."""
+    if prev_task is task or prev_task.completed:
+        return True
+    t = task
+    while t is not None:
+        if t.parent is prev_task:
+            return prev_seq < t.san_spawn_clock
+        t = t.parent
+    return False
+
+
+class Sanitizer:
+    """Per-access footprint validation + determinacy-race detection.
+
+    Installed as ``rt.san`` when ``Myrmics(sanitize=True)``; with the
+    default ``sanitize=False`` the hot path never touches this class
+    (``rt.san is None``), keeping virtual-time schedules byte-identical.
+
+    Every ``.read()``/``.write()`` from a task body funnels through
+    :meth:`check`: the access is counted, validated against the
+    executing task's declared footprint (the existing
+    ``Myrmics.check_access`` coverage walk), then checked against the
+    per-object shadow — two conflicting accesses with no
+    happens-before path through the dependency graph raise
+    :class:`DeterminacyRaceError`.  A single lock serializes shadow
+    state: the sim backend is single-threaded (negligible cost) and
+    the threads backend's pool workers contend only on actual
+    accesses.
+    """
+
+    def __init__(self, rt) -> None:
+        self.rt = rt
+        self.lock = threading.Lock()
+        self.shadow: dict[int, _ObjShadow] = {}
+        self.accesses_checked = 0
+        self.violations = 0
+
+    def counters(self) -> dict:
+        return {"enabled": True, "accesses_checked": self.accesses_checked,
+                "violations": self.violations}
+
+    def check(self, task, nid: int, mode: str) -> None:
+        """Validate one storage access; raises PermissionError (footprint
+        lie) or DeterminacyRaceError (unordered conflict)."""
+        try:
+            self.rt.check_access(task, nid, mode)
+        except PermissionError:
+            with self.lock:
+                self.accesses_checked += 1
+                self.violations += 1
+            raise
+        with self.lock:
+            self.accesses_checked += 1
+            self._race_check(task, nid, mode)
+
+    def _race_check(self, task, nid: int, mode: str) -> None:
+        sh = self.shadow.get(nid)
+        if sh is None:
+            sh = self.shadow[nid] = _ObjShadow()
+        seq = task.san_clock
+        task.san_clock = seq + 1
+        prev = None
+        if sh.write is not None and not _happens_before(*sh.write, task):
+            prev = (*sh.write, MODE_WRITE)
+        if prev is None and mode == MODE_WRITE:
+            for r_task, r_seq in sh.readers.items():
+                if not _happens_before(r_task, r_seq, task):
+                    prev = (r_task, r_seq, MODE_READ)
+                    break
+        if prev is not None:
+            self.violations += 1
+            p_task, _, p_mode = prev
+            label = self.rt.labels.get(nid, f"node {nid}")
+            raise DeterminacyRaceError(
+                f"determinacy race on {label!s} (nid {nid}): "
+                f"{p_mode} by {p_task} is unordered with {mode} by {task} "
+                "— the dependency graph does not serialize these accesses")
+        if mode == MODE_WRITE:
+            sh.write = (task, seq)
+            sh.readers.clear()
+        else:
+            sh.readers[task] = seq

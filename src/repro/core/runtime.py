@@ -67,7 +67,7 @@ from .api import (
     task,
     value_nid,
 )
-from .deps import DepEngine
+from .deps import DepEngine, Sanitizer
 from .regions import MODE_READ, MODE_WRITE, ROOT_RID, Directory
 from .sched import Hierarchy, SchedNode, WorkerNode
 from .sim import CostModel, Engine
@@ -110,6 +110,16 @@ class Task:
         self.backup_spawned = False
         self.occ_weight = 1.0           # queued-work estimate (set at packing)
         self.stolen = 0                 # times re-homed by work stealing
+        # sanitizer logical clocks (SP-bags-style happens-before): the
+        # task's own op counter, and the parent's counter value at this
+        # task's spawn — a parent access precedes a child access iff it
+        # precedes the spawn edge.  Plain int bookkeeping, maintained
+        # unconditionally (spawns of one parent are program-ordered on
+        # its executing thread); only read when sanitize=True.
+        self.san_clock = 0
+        self.san_spawn_clock = parent.san_clock if parent is not None else 0
+        if parent is not None:
+            parent.san_clock += 1
 
     def __repr__(self) -> str:
         return f"<Task {self.name}#{self.tid}>"
@@ -205,12 +215,18 @@ class TaskContext:
     # --- object store (real mode) -----------------------------------------------
     def read(self, oid: int | ObjRef) -> Any:
         nid = value_nid(oid, self.rt.dir, "read")
-        self.rt.check_access(self.task, nid, MODE_READ)
+        if self.rt.san is not None:
+            self.rt.san.check(self.task, nid, MODE_READ)
+        else:
+            self.rt.check_access(self.task, nid, MODE_READ)
         return self.rt.storage.get(nid)
 
     def write(self, oid: int | ObjRef, value: Any) -> None:
         nid = value_nid(oid, self.rt.dir, "write")
-        self.rt.check_access(self.task, nid, MODE_WRITE)
+        if self.rt.san is not None:
+            self.rt.san.check(self.task, nid, MODE_WRITE)
+        else:
+            self.rt.check_access(self.task, nid, MODE_WRITE)
         self.rt.storage[nid] = value
 
     # --- tasking ------------------------------------------------------------------
@@ -309,6 +325,15 @@ class Myrmics:
     task's packed footprint).  ``steal=False`` is the escape hatch
     reproducing the steal-free schedules byte-identically (pinned like
     ``coalesce``).
+    ``sanitize`` (default off) arms the dynamic footprint sanitizer:
+    every task-body ``.read()``/``.write()`` is validated against the
+    executing task's declared footprint and checked against an
+    SP-bags-style per-object shadow, so two conflicting accesses not
+    ordered by the dependency graph raise
+    :class:`~.deps.DeterminacyRaceError` — catching annotation lies and
+    scheduler races alike, on both backends.  Off, the access hot path
+    is untouched (``rt.san is None``) and all virtual-time schedules
+    stay byte-identical.
     """
 
     def __init__(self, n_workers: int = 4, sched_levels: list[int] | None = None,
@@ -316,7 +341,8 @@ class Myrmics:
                  max_events: int | None = 50_000_000,
                  migrate_threshold: int | None = None,
                  backend: str = "sim", max_wall_s: float = 600.0,
-                 coalesce: bool = True, steal: bool = True):
+                 coalesce: bool = True, steal: bool = True,
+                 sanitize: bool = False):
         from .alloc import AllocAgent
         from .sched_agent import DepEffects, SchedAgent
         from .worker_agent import WorkerAgent
@@ -326,6 +352,7 @@ class Myrmics:
         self.backend = backend
         self.coalesce = coalesce
         self.steal = steal
+        self.sanitize = sanitize
         self.engine = Engine()
         self.cost = cost or CostModel.heterogeneous()
         self.hier = Hierarchy.build(
@@ -389,6 +416,9 @@ class Myrmics:
             self.sub = SimSubstrate(self.hier)
             self.worker_agent = WorkerAgent(self)
         self.deps = DepEngine(self.dir, DepEffects(self), rt=self)
+        # the dynamic footprint sanitizer: None when off, so the access
+        # hot path costs one attribute test and nothing else
+        self.san = Sanitizer(self) if sanitize else None
         self.sub.bind(self._handlers(), is_done=self._program_done,
                       route=self._call_dest)
 
@@ -585,6 +615,9 @@ class Myrmics:
                 "tasks_moved": self.steal_tasks_moved,
                 "bytes_moved": self.steal_bytes_moved,
             },
+            sanitize=(self.san.counters() if self.san is not None else
+                      {"enabled": False, "accesses_checked": 0,
+                       "violations": 0}),
         )
 
 

@@ -16,20 +16,48 @@ from __future__ import annotations
 from typing import Any, Callable
 
 from .api import ObjRef, RegionRef, active_ctx, free_nid, nid_of, value_nid
-from .regions import ROOT_RID, Directory
+from .regions import MODE_READ, MODE_WRITE, ROOT_RID, Directory
 from .runtime import Arg, WaitSpec, _lower_spawn
 
 
 class SerialContext:
     """Inline (depth-first) execution context: the model's serial
-    semantics.  Used as the determinism oracle in property tests."""
+    semantics.  Used as the determinism oracle in property tests.
 
-    def __init__(self, rt: "SerialRuntime", depth: int = 0):
+    ``args`` is the lowered footprint of the activation (None for the
+    program entry, which implicitly holds the root region read-write):
+    with ``SerialRuntime(sanitize=True)`` every storage access is
+    validated against it — the serial half of the dynamic sanitizer.
+    Race detection needs no shadow here: serial elision *is* the
+    ordering the distributed backends are checked against."""
+
+    def __init__(self, rt: "SerialRuntime", depth: int = 0,
+                 args: "list[Arg] | None" = None):
         self.rt = rt
         self.depth = depth
+        self.args = args
         self.cursor = 0.0
         self.worker_id = "serial"
         self.now = 0.0
+
+    def _check(self, nid: int, mode: str) -> None:
+        rt = self.rt
+        if not rt.sanitize:
+            return
+        rt.accesses_checked += 1
+        if self.args is None:      # program entry: holds the root r/w
+            return
+        for a in self.args:
+            if a.safe or a.notransfer:
+                continue
+            if mode == MODE_WRITE and a.mode != MODE_WRITE:
+                continue
+            if rt.dir.is_ancestor_or_self(a.nid, nid):
+                return
+        rt.violations += 1
+        raise PermissionError(
+            f"serial task (depth {self.depth}) has no {mode}-covering "
+            f"argument for node {nid}")
 
     def compute(self, cycles: float) -> None:
         pass
@@ -67,17 +95,21 @@ class SerialContext:
             self.rt.storage.pop(nid, None)
 
     def read(self, oid: int | ObjRef) -> Any:
-        return self.rt.storage.get(value_nid(oid, self.rt.dir, "read"))
+        nid = value_nid(oid, self.rt.dir, "read")
+        self._check(nid, MODE_READ)
+        return self.rt.storage.get(nid)
 
     def write(self, oid: int | ObjRef, value: Any) -> None:
-        self.rt.storage[value_nid(oid, self.rt.dir, "write")] = value
+        nid = value_nid(oid, self.rt.dir, "write")
+        self._check(nid, MODE_WRITE)
+        self.rt.storage[nid] = value
 
     def spawn(self, fn: Callable | None, *args, duration: float = 0.0,
               name: str | None = None, **kwargs) -> None:
         fn, largs, call = _lower_spawn(fn, args, kwargs)
         if fn is None:
             return
-        sub = SerialContext(self.rt, self.depth + 1)
+        sub = SerialContext(self.rt, self.depth + 1, largs)
         if call is not None:
             pos, kw = call
         else:
@@ -99,11 +131,16 @@ class SerialRuntime:
     """Serial elision of the Myrmics program: every spawn runs inline at
     the spawn point (the programming model's defining semantics [6])."""
 
-    def __init__(self) -> None:
+    def __init__(self, sanitize: bool = False) -> None:
         self.dir = Directory(root_owner="serial")
         self.root = RegionRef(ROOT_RID, "root", self.dir)
         self.storage: dict[int, Any] = {}
         self.labels: dict[int, str] = {}
+        #: footprint sanitizer (mirrors ``Myrmics(sanitize=True)``):
+        #: validate every access against the activation's footprint
+        self.sanitize = sanitize
+        self.accesses_checked = 0
+        self.violations = 0
 
     def run(self, main_fn: Callable, *extra: Any) -> dict[int, Any]:
         from .api import TaskFn

@@ -101,6 +101,16 @@ def steal_summary(report, ndigits: int = 6) -> dict:
     return s
 
 
+def sanitize_summary(report, ndigits: int = 3) -> dict:
+    """Dynamic-sanitizer rollup for a :class:`~.api.RunReport`:
+    whether the sanitizer was armed, accesses validated, violations
+    counted, and the (rounded) checks-per-task rate.  All-zero for the
+    default ``sanitize=False`` run."""
+    s = report.sanitize_summary()
+    s["checks_per_task"] = round(s["checks_per_task"], ndigits)
+    return s
+
+
 def attach_tracer(rt) -> Tracer:
     """Instrument a Myrmics runtime instance (monkey-patch the two
     choke points: worker-agent task completion and core occupancy)."""

@@ -83,7 +83,7 @@ def run_training_schedule(cfg: OrchestratorConfig) -> list[StepStats]:
     @task
     def reduce_task(ctx, region: In, out: InOut, g_oids: Safe):
         ctx.compute(cfg.compute_cycles * 0.1)
-        vals = [g.read() for g in g_oids]
+        vals = [g.read() for g in g_oids]  # lint: allow(safe-ref-access: covered by region: In)
         out.write(("reduced", len(vals)))
 
     def main(ctx, root):
@@ -162,7 +162,7 @@ def run_myrmics_training(model_cfg, *, seq_len: int = 64,
 
     @task
     def apply_update(ctx, p: InOut, o: InOut, step_r: In, gs: Safe):
-        grads = [g.read() for g in gs]
+        grads = [g.read() for g in gs]  # lint: allow(safe-ref-access: covered by step_r: In)
         avg = jax.tree.map(lambda *x: sum(x) / len(x), *grads)
         params, opt_state, _ = opt.update(avg, o.read(), p.read())
         p.write(params)

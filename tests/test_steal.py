@@ -31,6 +31,7 @@ import random
 import pytest
 
 from benchmarks.paper_figs import _coalescing_app as saturation_app
+from repro.analysis import check_invariants
 from benchmarks.paper_figs import _skewed_app
 from repro.core import In, InOut, Myrmics, Out, SerialRuntime, task
 from repro.core.sched_agent import SchedAgent
@@ -213,10 +214,10 @@ def test_sim_steal_races_migration_without_losing_tasks():
     assert rep.migrations > 0                      # both features fired
     assert rep.steal_summary()["tasks_moved"] > 0
     assert rep.tasks_spawned == rep.tasks_done     # nothing dropped
-    for owner_id, shard in rt.deps.shards.items():
-        for nid in shard.nodes:
-            assert rt.dir.owner_of(nid) == owner_id
-    assert rt.deps.in_flight == {}
+    # full structural audit: shard alignment, occupancy conservation,
+    # steal-registry sanity, quiescence (subsumes the old manual loop)
+    stats = check_invariants(rt)
+    assert stats["quiescent"]
 
 
 def test_threads_steal_with_migration_matches_serial():
@@ -228,7 +229,7 @@ def test_threads_steal_with_migration_matches_serial():
     rep = rt.run(app)
     assert rep.tasks_spawned == rep.tasks_done
     assert rt.labelled_storage() == sr.labelled_storage()
-    assert rt.deps.in_flight == {}
+    assert check_invariants(rt)["quiescent"]
 
 
 # ---------------------------------------------------------------------------
