@@ -4,6 +4,7 @@ baseline and fail on virtual-cycle regressions.
     PYTHONPATH=src python -m benchmarks.check_perf FRESH BASELINE
                                                    [--tol 0.05]
                                                    [--rows NAME[,NAME...]]
+                                                   [--wall-tol FRAC]
 
 For every benchmark row present in both files (optionally restricted by
 ``--rows``), derived entries are matched up positionally — their
@@ -11,11 +12,17 @@ identity keys (``bench``, ``mode``, ``workers``, ``levels``,
 ``backend``, ``policy_p``) must agree, so a silently reshaped grid is
 an error, not a skipped comparison — and every ``cycles*`` field is
 checked: the fresh value may not exceed the baseline by more than
-``--tol`` (relative).  Only virtual cycles are compared; wall-clock
-fields (``us_per_call``, ``samples_us``) are runner-dependent noise and
-deliberately ignored.  Improvements (fewer cycles) always pass — the
-baseline is a ceiling, not a pin; byte-identity pins live in the test
-suite.
+``--tol`` (relative).  By default only virtual cycles are compared;
+wall-clock fields are runner-dependent noise and ignored.
+Improvements (fewer cycles) always pass — the baseline is a ceiling,
+not a pin; byte-identity pins live in the test suite.
+
+``--wall-tol FRAC`` opts in to a wall-clock gate on top: each row's
+``us_per_call`` (the *median* of its ``--repeat`` samples, so run the
+fresh file with ``--repeat >= 3``) may not exceed the baseline's by
+more than ``FRAC`` relative.  Keep the tolerance generous (0.5 or
+more): it exists to catch interpreter-hot-path regressions measured in
+multiples, not scheduler noise measured in percent.
 
 Exit status: 0 clean, 1 regression(s), 2 usage/shape error.
 """
@@ -30,12 +37,13 @@ import sys
 IDENTITY_KEYS = ("bench", "mode", "workers", "levels", "backend", "policy_p")
 
 
-def _rows_by_name(payload: dict) -> dict[str, list[dict]]:
-    return {r["name"]: r["derived"] for r in payload["rows"]}
+def _rows_by_name(payload: dict) -> dict[str, dict]:
+    return {r["name"]: r for r in payload["rows"]}
 
 
 def compare(fresh: dict, base: dict, tol: float,
-            only: set[str] | None = None) -> list[str]:
+            only: set[str] | None = None,
+            wall_tol: float | None = None) -> list[str]:
     """All regression/shape complaints, empty when clean."""
     fresh_rows, base_rows = _rows_by_name(fresh), _rows_by_name(base)
     names = sorted(set(fresh_rows) & set(base_rows))
@@ -48,7 +56,17 @@ def compare(fresh: dict, base: dict, tol: float,
         return ["no benchmark rows in common between the two files"]
     bad: list[str] = []
     for name in names:
-        f_entries, b_entries = fresh_rows[name], base_rows[name]
+        if wall_tol is not None:
+            fw = fresh_rows[name].get("us_per_call")
+            bw = base_rows[name].get("us_per_call")
+            if isinstance(fw, (int, float)) and isinstance(bw, (int, float)) \
+                    and bw > 0 and fw > bw * (1.0 + wall_tol):
+                bad.append(
+                    f"{name}: wall time regressed {bw:.0f}us -> {fw:.0f}us "
+                    f"per run (+{100 * (fw / bw - 1):.0f}% "
+                    f"> {100 * wall_tol:.0f}%)")
+        f_entries = fresh_rows[name]["derived"]
+        b_entries = base_rows[name]["derived"]
         if len(f_entries) != len(b_entries):
             bad.append(f"{name}: grid reshaped "
                        f"({len(b_entries)} -> {len(f_entries)} entries)")
@@ -82,6 +100,10 @@ def main() -> None:
     ap.add_argument("--rows", default=None,
                     help="comma-separated row names to compare "
                     "(default: every row common to both files)")
+    ap.add_argument("--wall-tol", type=float, default=None, metavar="FRAC",
+                    help="opt-in wall-clock gate: fail when a row's "
+                    "median us_per_call exceeds the baseline's by more "
+                    "than FRAC relative (keep it generous, e.g. 0.5)")
     args = ap.parse_args()
     try:
         with open(args.fresh) as f:
@@ -92,7 +114,7 @@ def main() -> None:
         print(f"error: {e}", file=sys.stderr)
         sys.exit(2)
     only = set(args.rows.split(",")) if args.rows else None
-    bad = compare(fresh, base, args.tol, only)
+    bad = compare(fresh, base, args.tol, only, wall_tol=args.wall_tol)
     shape_errors = [b for b in bad if "regressed" not in b]
     if shape_errors:
         print("\n".join(shape_errors), file=sys.stderr)
@@ -100,8 +122,10 @@ def main() -> None:
     if bad:
         print("\n".join(bad), file=sys.stderr)
         sys.exit(1)
-    print(f"ok: no cycles regression > {100 * args.tol:.0f}% "
-          f"({args.fresh} vs {args.baseline})")
+    gates = f"no cycles regression > {100 * args.tol:.0f}%"
+    if args.wall_tol is not None:
+        gates += f", no wall-time regression > {100 * args.wall_tol:.0f}%"
+    print(f"ok: {gates} ({args.fresh} vs {args.baseline})")
 
 
 if __name__ == "__main__":

@@ -514,6 +514,36 @@ def threads_smoke(scheds: int = 2, n_workers: int = 4) -> list[dict]:
     }]
 
 
+# -- Paper scale: the full 8-scheduler + 512-worker machine ------------------------
+
+
+def paper_scale(configs=((512, (1, 7)), (512, (1, 2, 8)))) -> list[dict]:
+    """The prototype's full machine size run end-to-end in virtual time:
+    jacobi (hier) at 512 workers under the 8-scheduler tree
+    (``[1, 7]`` = 1 root + 7 leaves, the board's Cortex-A9 count) and a
+    depth-3 variant (``[1, 2, 8]``).  These are the largest single runs
+    in the harness — the interpreter fast path is what makes them
+    CI-viable — and their cycles/task counts are regression-gated like
+    every other derived value."""
+    import time as _time
+
+    from .apps import APPS, _run
+
+    builder, _ = APPS["jacobi"]
+    rows = []
+    for w, levels in configs:
+        t0 = _time.perf_counter()
+        r = _run(builder(w, hier=True), w, list(levels))
+        wall = _time.perf_counter() - t0
+        rows.append({
+            "bench": "jacobi", "mode": "hier", "workers": w,
+            "levels": list(levels),
+            "cycles": round(r.cycles), "tasks": r.tasks,
+            "wall_s": round(wall, 3),
+        })
+    return rows
+
+
 # -- Fig. 12b: deeper hierarchies -------------------------------------------------------
 
 def hierarchy_depth(workers=(32, 64, 128, 256),

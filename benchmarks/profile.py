@@ -4,13 +4,25 @@
                                                 [--workers 64]
                                                 [--mode hier]
                                                 [--top 25]
+                                                [--sort cumulative|tottime]
+                                                [--out FILE]
                                                 [--no-coalesce]
 
 Profiles one simulator run of a paper benchmark and prints the top-N
-functions by *cumulative* time, so perf PRs target measured hot spots
-instead of guessed ones.  The default (jacobi, 64 workers, hier) is the
-fig8 mid-point: big enough that the dependency/packing/scheduling hot
-path dominates, small enough to finish in seconds.
+functions (``--sort cumulative`` by default; ``tottime`` ranks by
+self-time, which is what interpreter micro-optimisation targets), so
+perf PRs target measured hot spots instead of guessed ones.  ``--out
+FILE`` additionally dumps the raw pstats data for offline viewers
+(``snakeviz FILE``, ``pstats.Stats(FILE)``).  The default (jacobi, 64
+workers, hier) is the fig8 mid-point: big enough that the
+dependency/packing/scheduling hot path dominates, small enough to
+finish in seconds.  The paper-scale smoke point is::
+
+    PYTHONPATH=src python -m benchmarks.profile --workers 512 --mode hier
+
+— the 8-scheduler/512-worker machine (fig8 right edge; ~4 s virtual
+run under the profiler) whose hot profile is what the ``--full`` CI
+grid's wall time follows.
 """
 
 from __future__ import annotations
@@ -28,7 +40,14 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=64)
     ap.add_argument("--mode", default="hier", choices=("flat", "hier"))
     ap.add_argument("--top", type=int, default=25,
-                    help="functions to print (cumulative time order)")
+                    help="functions to print")
+    ap.add_argument("--sort", default="cumulative",
+                    choices=("cumulative", "tottime"),
+                    help="ranking: cumulative (callers included) or "
+                    "tottime (self-time only)")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="also dump raw pstats data to FILE "
+                    "(for snakeviz / pstats.Stats)")
     ap.add_argument("--no-coalesce", dest="coalesce", action="store_false",
                     help="profile the per-arg (uncoalesced) message path")
     args = ap.parse_args()
@@ -48,8 +67,11 @@ def main() -> None:
     print(f"# {args.app} mode={args.mode} workers={args.workers} "
           f"coalesce={args.coalesce}: {result.tasks} tasks, "
           f"{result.cycles:.3e} virtual cycles")
+    if args.out is not None:
+        prof.dump_stats(args.out)
+        print(f"# raw pstats written to {args.out}")
     stats = pstats.Stats(prof, stream=sys.stdout)
-    stats.strip_dirs().sort_stats("cumulative").print_stats(args.top)
+    stats.strip_dirs().sort_stats(args.sort).print_stats(args.top)
 
 
 if __name__ == "__main__":

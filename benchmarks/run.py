@@ -16,8 +16,10 @@ error, not a silent no-op.  ``--list`` prints the known rows and exits.
 deterministic, and wall-clock rows like ``threads_smoke`` are noisy
 single-shot otherwise).  ``--out FILE`` additionally writes the
 emitted rows as structured JSON (``[{"name", "us_per_call",
-"samples_us", "derived"}, ...]``) so tooling consumes them without
-scraping the CSV — ``samples_us`` holds the raw per-repeat samples.
+"samples_us", "wall_us", "derived"}, ...]``) so tooling consumes them
+without scraping the CSV — ``samples_us`` holds the raw per-repeat
+samples (normalized per simulated run) and ``wall_us`` uniform
+whole-row wall-time stats (median/min/max/total across repeats).
 """
 
 from __future__ import annotations
@@ -93,6 +95,15 @@ def _row_fns():
         rows = F.skewed_dag(workers=workers)
         return rows, 2 * len(rows)
 
+    def paper_scale(full):
+        # full: the paper's 8-scheduler/512-worker machine ([1,7]) plus
+        # a depth-3 tree; reduced: a cheap 64-worker stand-in so the row
+        # shape exists on every grid.
+        configs = ((512, (1, 7)), (512, (1, 2, 8))) if full \
+            else ((64, (1, 4)),)
+        rows = F.paper_scale(configs=configs)
+        return rows, len(rows)
+
     def threads_smoke(full):
         rows = F.threads_smoke()
         return rows, len(rows)
@@ -115,6 +126,7 @@ def _row_fns():
         ("sched_scaling", sched_scaling),
         ("msg_coalescing", msg_coalescing),
         ("skewed_dag", skewed_dag),
+        ("paper_scale_512", paper_scale),
         ("fig12b_hierarchy_depth", fig12b),
         ("threads_smoke", threads_smoke),
         ("roofline_table", roofline),
@@ -133,6 +145,7 @@ ROWS = (
     "sched_scaling",
     "msg_coalescing",
     "skewed_dag",
+    "paper_scale_512",
     "fig12b_hierarchy_depth",
     "threads_smoke",
     "roofline_table",
@@ -166,6 +179,9 @@ def _out_meta(args) -> dict:
     return {
         "git_sha": _git_sha(),
         "grid": "full" if args.full else "reduced",
+        # explicit flag alongside the label, so tooling need not parse
+        # the string (absent from BENCH_6.json and earlier)
+        "full": args.full,
         "repeat": args.repeat,
         "only": args.only,
         "backend": "sim (threads_smoke row: threads)",
@@ -186,12 +202,21 @@ def _out_meta(args) -> dict:
 
 
 def _emit(name: str, us_per_call: float, samples_us: list[float],
-          rows: list[dict]) -> None:
+          row_wall_us: list[float], rows: list[dict]) -> None:
     derived = json.dumps(rows, separators=(",", ":"))
     print(f"{name},{us_per_call:.0f},{derived}")
     sys.stdout.flush()
+    # every row carries the same wall-time stats block (raw whole-row
+    # wall time per repeat, *not* normalized per simulated run) — before
+    # BENCH_8.json wall time was only recoverable for some rows
     EMITTED.append({"name": name, "us_per_call": round(us_per_call),
                     "samples_us": [round(s) for s in samples_us],
+                    "wall_us": {
+                        "median": round(statistics.median(row_wall_us)),
+                        "min": round(min(row_wall_us)),
+                        "max": round(max(row_wall_us)),
+                        "total": round(sum(row_wall_us)),
+                    },
                     "derived": rows})
 
 
@@ -228,6 +253,7 @@ def main() -> None:
             continue
         rows = None
         samples = []
+        row_wall = []
         for _ in range(args.repeat):
             t0 = time.time()
             r, n_runs = fn(args.full)
@@ -235,11 +261,12 @@ def main() -> None:
             if r is None:
                 break
             samples.append(dt * 1e6 / max(n_runs, 1))
+            row_wall.append(dt * 1e6)
             if rows is None:
                 rows = r
         if rows is None:
             continue
-        _emit(name, statistics.median(samples), samples, rows)
+        _emit(name, statistics.median(samples), samples, row_wall, rows)
 
     if args.out is not None:
         with open(args.out, "w") as f:

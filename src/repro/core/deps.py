@@ -42,9 +42,14 @@ import contextlib
 import threading
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Protocol
+from typing import Callable, Protocol
 
 from .regions import MODE_READ, MODE_WRITE, Directory
+
+#: reusable no-op context (``contextlib.nullcontext`` instances are
+#: stateless, so one object serves every un-coalesced batch scope)
+_NULL_CTX = contextlib.nullcontext()
+_UNSET = object()
 
 
 # ---------------------------------------------------------------------------
@@ -93,11 +98,18 @@ class DepNode:
     recv_r: int = 0   # child-side cumulative received counters ('p' counters)
     recv_w: int = 0
     last_quiesce_sent: tuple[int, int] = (-1, -1)
+    #: Running sums of ``busy_r``/``busy_w`` over all edges, maintained
+    #: where the per-edge counters change (_activate / recv_quiesce) so
+    #: the activation scan never re-sums the adjacency dict.  Both are
+    #: always >= 0: ``acked`` is only ever set to a value ``sent``
+    #: already reached.
+    busy_r_total: int = 0
+    busy_w_total: int = 0
 
     def child_busy(self, mode: str) -> int:
         if mode == MODE_WRITE:
-            return sum(e.busy_r + e.busy_w for e in self.edges.values())
-        return sum(e.busy_w for e in self.edges.values())
+            return self.busy_r_total + self.busy_w_total
+        return self.busy_w_total
 
     def active_writers(self) -> list:
         return [t for t, m in self.holders.items() if m == MODE_WRITE]
@@ -106,7 +118,8 @@ class DepNode:
         return (
             not self.queue
             and not self.holders
-            and all(e.busy_r == 0 and e.busy_w == 0 for e in self.edges.values())
+            and self.busy_r_total == 0
+            and self.busy_w_total == 0
         )
 
 
@@ -138,6 +151,7 @@ class DepShard:
         self.fx = effects
         self.eng = engine
         self.nodes: dict[int, DepNode] = {}
+        self._sub = None   # substrate memo (set on first non-None sighting)
 
     def __len__(self) -> int:
         return len(self.nodes)
@@ -148,8 +162,13 @@ class DepShard:
     def _check_context(self) -> None:
         """Shard state may only be touched in its owner's execution
         context (or outside any handler: program entry, tests)."""
-        sub = self.eng.sub if self.eng is not None else None
-        ex = sub.executing_id() if sub is not None else None
+        sub = self._sub
+        if sub is None:
+            sub = self.eng.sub if self.eng is not None else None
+            if sub is None:     # bare-engine tests / pre-bind: no context
+                return
+            self._sub = sub     # the substrate never changes once set
+        ex = sub.executing_id()
         if ex is not None and ex != self.owner_id:
             raise AssertionError(
                 f"DepShard[{self.owner_id}] touched from scheduler {ex}: "
@@ -167,6 +186,12 @@ class DepShard:
 
     @staticmethod
     def _is_ancestor_task(maybe_anc, task) -> bool:
+        # runtime Tasks carry a precomputed ancestor set; fall back to
+        # the parent-chain walk for opaque task stand-ins (bare-engine
+        # tests use plain objects)
+        anc = getattr(task, "_anc", None)
+        if anc is not None:
+            return maybe_anc in anc
         cur = task
         while cur is not None:
             cur = getattr(cur, "parent", None)
@@ -192,32 +217,59 @@ class DepShard:
             else:
                 node.recv_r += 1
         node.queue.append(entry)
-        self.scan(nid)
+        self.scan(nid, node)
 
     # -- activation scan ------------------------------------------------------
 
     def _can_activate(self, node: DepNode, entry: Entry) -> bool:
-        foreign = self._foreign_holders(node, entry.task)
-        foreign_w = [t for t in foreign if node.holders[t] == MODE_WRITE]
-        if entry.kind == TRAVERSE:
+        # same predicate as the original list-building form ("foreign" =
+        # holders that are not ancestors of entry.task), written as
+        # early-exit loops over the holders dict: the scan calls this
+        # for every queued entry, so no per-call list allocation.
+        holders = node.holders
+        task = entry.task
+        kind = entry.kind
+        if kind == TRAVERSE:
             # heading into a child: ordering deeper in the tree resolves
             # same-branch conflicts; only whole-node holders block us.
             if entry.mode == MODE_WRITE:
-                return not foreign
-            return not foreign_w
-        if entry.kind == ARG:
+                for t in holders:
+                    if not self._is_ancestor_task(t, task):
+                        return False
+                return True
+            for t, m in holders.items():
+                if m == MODE_WRITE and not self._is_ancestor_task(t, task):
+                    return False
+            return True
+        if kind == ARG:
             if entry.mode == MODE_WRITE:
-                return not foreign and node.child_busy(MODE_WRITE) == 0
-            return not foreign_w and node.child_busy(MODE_READ) == 0
-        if entry.kind == WAIT:
-            others = [t for t in node.holders if t is not entry.task]
+                if node.busy_r_total or node.busy_w_total:
+                    return False
+                for t in holders:
+                    if not self._is_ancestor_task(t, task):
+                        return False
+                return True
+            if node.busy_w_total:
+                return False
+            for t, m in holders.items():
+                if m == MODE_WRITE and not self._is_ancestor_task(t, task):
+                    return False
+            return True
+        if kind == WAIT:
             if entry.mode == MODE_WRITE:
-                return not others and node.child_busy(MODE_WRITE) == 0
-            return (
-                not [t for t in others if node.holders[t] == MODE_WRITE]
-                and node.child_busy(MODE_READ) == 0
-            )
-        raise AssertionError(entry.kind)
+                if node.busy_r_total or node.busy_w_total:
+                    return False
+                for t in holders:
+                    if t is not task:
+                        return False
+                return True
+            if node.busy_w_total:
+                return False
+            for t, m in holders.items():
+                if t is not task and m == MODE_WRITE:
+                    return False
+            return True
+        raise AssertionError(kind)
 
     def _activate(self, node: DepNode, entry: Entry) -> None:
         if entry.kind == ARG:
@@ -227,11 +279,15 @@ class DepShard:
             self.fx.arg_activated(entry.task, entry.arg_index, node.nid)
         elif entry.kind == TRAVERSE:
             nxt = entry.path[0]
-            edge = node.edges.setdefault(nxt, EdgeState())
+            edge = node.edges.get(nxt)
+            if edge is None:
+                edge = node.edges[nxt] = EdgeState()
             if entry.mode == MODE_WRITE:
                 edge.sent_w += 1
+                node.busy_w_total += 1
             else:
                 edge.sent_r += 1
+                node.busy_r_total += 1
             self.fx.forward_traverse(node.nid, entry)
         elif entry.kind == WAIT:
             self.fx.wait_activated(entry.task, node.nid)
@@ -244,37 +300,57 @@ class DepShard:
         (transitively) by a holder, and a holder's *own* entries — in
         particular its sys_wait: a WAIT stuck behind a foreign ARG that
         is itself blocked by the waiter's hold would deadlock."""
-        return any(h is entry.task or self._is_ancestor_task(h, entry.task)
-                   for h in node.holders)
+        task = entry.task
+        holders = node.holders
+        # ``task in holders`` == any(h is task): Task hashes by identity.
+        if task in holders:
+            return True
+        anc = getattr(task, "_anc", None)
+        if anc is not None:
+            # any holder among task's ancestors, as one C-level set op
+            return not anc.isdisjoint(holders)
+        for h in holders:
+            if self._is_ancestor_task(h, task):
+                return True
+        return False
 
-    def scan(self, nid: int) -> None:
+    def scan(self, nid: int, node: DepNode | None = None) -> None:
         """Activate admissible entries: FIFO prefix for ordinary entries
         (the first blocked entry stops ordinary activation, preserving
         the program's serial order), but entries nested inside a current
-        active holder bypass the blocked prefix."""
-        node = self.node(nid)
-        progressed = True
+        active holder bypass the blocked prefix.
+
+        Identical activation order to the original copy-per-pass
+        implementation: each pass walks the queue in place and removes
+        the chosen entry by index (duplicate-valued entries behave the
+        same — equal entries satisfy the same predicates, so the first
+        eligible one is always the first equal one)."""
+        if node is None:
+            node = self.node(nid)
+        queue = node.queue
+        progressed = queue
         while progressed:
             progressed = False
             blocked_front = False
-            for entry in list(node.queue):
+            i = 0
+            for entry in queue:
                 if not blocked_front:
                     if self._can_activate(node, entry):
-                        node.queue.remove(entry)
+                        del queue[i]
                         self._activate(node, entry)
                         progressed = True
                         break
                     blocked_front = True
-                    continue
                 # behind a blocked entry: only holder-nested entries
                 # (in their own FIFO order) may bypass
-                if self._nested_in_holder(node, entry) and \
+                elif self._nested_in_holder(node, entry) and \
                         self._can_activate(node, entry):
-                    node.queue.remove(entry)
+                    del queue[i]
                     self._activate(node, entry)
                     progressed = True
                     break
-        self._maybe_quiesce(nid)
+                i += 1
+        self._maybe_quiesce(nid, node)
 
     @staticmethod
     def _merge_hold(existing: str | None, new: str) -> str:
@@ -289,22 +365,24 @@ class DepShard:
         queue progress."""
         node = self.node(nid)
         node.holders.pop(task, None)
-        self.scan(nid)
+        self.scan(nid, node)
 
     # -- quiesce protocol --------------------------------------------------------
 
-    def _maybe_quiesce(self, nid: int) -> None:
-        node = self.node(nid)
+    def _maybe_quiesce(self, nid: int, node: DepNode | None = None) -> None:
+        if node is None:
+            node = self.node(nid)
+        if not node.idle():
+            return
         # dep state for nid lives on nid's owner, whose shard also holds
         # the parent pointer — a local (already-charged) directory read.
         parent = self.dir.parent_of(nid) if self.dir.has(nid) else None
         if parent is None:
             return
-        if node.idle():
-            snap = (node.recv_r, node.recv_w)
-            if snap != node.last_quiesce_sent and snap != (0, 0):
-                node.last_quiesce_sent = snap
-                self.fx.send_quiesce(nid, parent, *snap)
+        snap = (node.recv_r, node.recv_w)
+        if snap != node.last_quiesce_sent and snap != (0, 0):
+            node.last_quiesce_sent = snap
+            self.fx.send_quiesce(nid, parent, *snap)
 
     def recv_quiesce(self, parent_nid: int, child_nid: int,
                      recv_r: int, recv_w: int) -> None:
@@ -316,8 +394,10 @@ class DepShard:
         if edge is None:
             return
         if edge.sent_r == recv_r and edge.sent_w == recv_w:
+            node.busy_r_total -= recv_r - edge.acked_r
+            node.busy_w_total -= recv_w - edge.acked_w
             edge.acked_r, edge.acked_w = recv_r, recv_w
-            self.scan(parent_nid)
+            self.scan(parent_nid, node)
 
     # -- teardown ---------------------------------------------------------------
 
@@ -349,6 +429,7 @@ class DepEngine:
         self.fx = effects
         self.rt = rt
         self.shards: dict[str, DepShard] = {}
+        self._scope_fn = _UNSET   # memoized fx.coalesce_scope (or None)
         #: nid -> new owner core_id while a migration hand-off is in
         #: flight (set atomically with the owner-table flip, cleared by
         #: ``adopt`` in the new owner's context).
@@ -422,8 +503,10 @@ class DepEngine:
     def _fx_scope(self):
         """The effects object's outgoing-message coalescing scope, when
         it provides one (a no-op otherwise — e.g. bare-engine tests)."""
-        scope = getattr(self.fx, "coalesce_scope", None)
-        return scope() if scope is not None else contextlib.nullcontext()
+        scope = self._scope_fn
+        if scope is _UNSET:
+            scope = self._scope_fn = getattr(self.fx, "coalesce_scope", None)
+        return scope() if scope is not None else _NULL_CTX
 
     def _batch_on_owner(self, op: str, items: list) -> None:
         """Run ``shard.op(*item)`` for every item (item[0] is the nid) in
@@ -431,28 +514,45 @@ class DepEngine:
         destination.  Items whose owner's context this is run inline;
         items that crossed an SV-C migration are re-homed to the new
         owner — as whole sub-batches — through the same uncharged
-        ``update``/``defer`` channels the per-item path uses."""
+        ``update``/``defer`` channels the per-item path uses.
+
+        Hot path: all dict/method lookups hoisted, the shard method
+        resolved once per (owner, op) — the common all-local batch runs
+        as one bound-method call per item with no group dicts built."""
         sub = self.sub
         ex = sub.executing_id() if sub is not None else None
-        deferred: dict[str, list] = {}
-        rehomed: dict[str, list] = {}
+        in_flight = self.in_flight
+        owner_of = self.dir.owner_of
+        deferred: dict[str, list] | None = None
+        rehomed: dict[str, list] | None = None
+        bound: dict[str, Callable] = {}
         for item in items:
             nid = item[0]
-            target = self.in_flight.get(nid)
-            if target is not None and sub is not None:
-                deferred.setdefault(target, []).append(item)
-                continue
-            owner = self.dir.owner_of(nid)
+            if in_flight:
+                target = in_flight.get(nid)
+                if target is not None and sub is not None:
+                    if deferred is None:
+                        deferred = {}
+                    deferred.setdefault(target, []).append(item)
+                    continue
+            owner = owner_of(nid)
             if sub is not None and ex is not None and ex != owner:
+                if rehomed is None:
+                    rehomed = {}
                 rehomed.setdefault(owner, []).append(item)
                 continue
-            getattr(self.shard(owner), op)(*item)
-        for owner, group in rehomed.items():
-            sub.update(self.rt.sched_of(owner), self._h_batch_group,
-                       op, group)
-        for target, group in deferred.items():
-            sub.defer(self.rt.sched_of(target), self._h_batch_group,
-                      op, group)
+            fn = bound.get(owner)
+            if fn is None:
+                fn = bound[owner] = getattr(self.shard(owner), op)
+            fn(*item)
+        if rehomed:
+            for owner, group in rehomed.items():
+                sub.update(self.rt.sched_of(owner), self._h_batch_group,
+                           op, group)
+        if deferred:
+            for target, group in deferred.items():
+                sub.defer(self.rt.sched_of(target), self._h_batch_group,
+                          op, group)
 
     def _h_batch_group(self, op: str, items: list) -> None:
         """Re-homed/deferred sub-batch, re-entering in (what is now) the

@@ -107,6 +107,13 @@ class Directory:
         #: (SV-C migration) or nodes die (free): per-scheduler
         #: AncestryCaches invalidate their owner entries against it.
         self.version = 0
+        #: Flat nid -> NodeMeta read index across all shards.  A meta
+        #: object is created exactly once (``_place``) and never
+        #: replaced: migration moves the *same* object between shards
+        #: and free only marks, so this index is always coherent and a
+        #: metadata read is one dict hit instead of the two-step
+        #: owner-route read (which remains the authority for routing).
+        self._flat: dict[int, NodeMeta] = {}
         self._place(NodeMeta(ROOT_RID, None, True, root_owner))
 
     # -- shard plumbing -----------------------------------------------------
@@ -121,21 +128,14 @@ class Directory:
         with self.lock:
             self.shard(meta.owner).nodes[meta.nid] = meta
             self._owner[meta.nid] = meta.owner
+            self._flat[meta.nid] = meta
 
     def _meta(self, nid: int) -> NodeMeta:
-        # lock-free two-step read (owner route, then the owner's shard):
-        # a concurrent migration can complete between the two steps, so
-        # on a miss re-read the route — migrate_subtree publishes the
-        # node at the new home before unlinking the old one, and nodes
-        # are never unlinked otherwise (free only marks), so the retry
-        # is bounded by the number of in-flight migrations.
-        while True:
-            owner = self._owner[nid]
-            meta = self.shards[owner].nodes.get(nid)
-            if meta is not None:
-                return meta
-            if self._owner[nid] == owner:
-                raise KeyError(nid)
+        # one lock-free dict hit via the flat index (see __init__): the
+        # meta object is shard-location-independent, so a concurrent
+        # migration (which moves the same object between shards) can
+        # never make this read miss or go stale.
+        return self._flat[nid]
 
     # -- routing / liveness (free: owner bits are part of the id) -----------
 
@@ -283,11 +283,12 @@ class Directory:
     def is_ancestor_or_self(self, anc: int, nid: int) -> bool:
         if anc == nid:
             return True
-        cur = self._meta(nid).parent
+        flat = self._flat
+        cur = flat[nid].parent
         while cur is not None:
             if cur == anc:
                 return True
-            cur = self._meta(cur).parent
+            cur = flat[cur].parent
         return False
 
     def covering_node(self, parent_arg_nids: list[int], target: int) -> int:

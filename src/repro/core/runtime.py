@@ -95,6 +95,11 @@ class Task:
         self.args = args
         self.call = call        # declarative spawns: (pos values, kw values)
         self.parent = parent
+        # precomputed ancestor set (identity semantics — Task has no
+        # __eq__): the dependency engine's per-queue-entry ancestor
+        # checks become one set hit instead of a parent-chain walk
+        self._anc = (parent._anc | {parent}) if parent is not None \
+            else frozenset()
         self.duration = duration
         self.name = name or (fn.__name__ if fn is not None else f"t{self.tid}")
         self.state = SPAWNED

@@ -14,6 +14,7 @@ score B, as ``T = (p*L + (100-p)*B) / 100`` (paper SV-E / SVI-D).
 
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -101,6 +102,11 @@ class Hierarchy:
     scheds: list[SchedNode]
     workers: list[WorkerNode]
     by_id: dict[str, Any] = field(default_factory=dict)
+    #: route memo: (src id, dst id) -> (intermediate nodes, wire latency).
+    #: Safe to cache lazily: parent pointers are immutable after a node
+    #: is built (add_worker only introduces fresh ids, kill_worker keeps
+    #: the node's position), and CostModel is frozen.
+    _routes: dict = field(default_factory=dict, repr=False)
 
     @staticmethod
     def build(engine: Engine, cost: CostModel, n_workers: int,
@@ -170,32 +176,63 @@ class Hierarchy:
         """Route a message src -> dst along the tree.  Intermediate
         schedulers charge forwarding cost; the destination core charges
         ``proc_cost`` and then runs ``handler(*args)``."""
-        t = self.engine.now if send_time is None else send_time
-        if src is dst:
-            dst.core.exec_at(t, proc_cost, handler, *args)
-            return
-        src.core.stats.msgs_sent += 1
-        src.core.stats.msg_bytes_sent += payload_bytes
-        inter = self.route_path(src, dst)
-        hops = len(inter) + 1
-        t += self.cost.msg_base_latency + self.cost.msg_hop_latency * (hops - 1)
-        for node in inter:
-            t = node.core.occupy(t, self.cost.msg_proc)
-            node.core.stats.msgs_sent += 1
-            node.core.stats.msg_bytes_sent += payload_bytes
-        dst.core.exec_at(t, proc_cost, handler, *args)
+        engine = self.engine
+        t = engine.now if send_time is None else send_time
+        if src is not dst:
+            stats = src.core.stats
+            stats.msgs_sent += 1
+            stats.msg_bytes_sent += payload_bytes
+            route = self._routes.get((src.core_id, dst.core_id))
+            if route is None:
+                inter = tuple(self.route_path(src, dst))
+                # hops = len(inter) + 1; latency depends only on the pair
+                lat = (self.cost.msg_base_latency
+                       + self.cost.msg_hop_latency * len(inter))
+                route = self._routes[src.core_id, dst.core_id] = (inter, lat)
+            inter, lat = route
+            t += lat
+            msg_proc = self.cost.msg_proc
+            for node in inter:
+                t = node.core.occupy(t, msg_proc)
+                stats = node.core.stats
+                stats.msgs_sent += 1
+                stats.msg_bytes_sent += payload_bytes
+        # fused dst.core.exec_at: occupy the destination and push the
+        # handler event without re-packing *args through two frames
+        end = dst.core.occupy(t, proc_cost)
+        now = engine.now
+        engine._seq = seq = engine._seq + 1
+        heapq.heappush(engine._q,
+                       (end if end > now else now, seq, handler, args))
 
     def local(self, node: Any, proc_cost: float, handler, *args,
               at_time: float | None = None):
         """Charge processing on ``node`` without any message (same-core
         follow-up work)."""
-        t = self.engine.now if at_time is None else at_time
-        node.core.exec_at(t, proc_cost, handler, *args)
+        engine = self.engine
+        t = engine.now if at_time is None else at_time
+        end = node.core.occupy(t, proc_cost)
+        now = engine.now
+        engine._seq = seq = engine._seq + 1
+        heapq.heappush(engine._q,
+                       (end if end > now else now, seq, handler, args))
 
 
 def choose(scored: list[tuple[float, int, Any]]) -> Any:
-    """Pick max score; ties broken by the stable secondary key."""
-    best = max(scored, key=lambda x: (x[0], -x[1]))
+    """Pick max score; ties broken by the stable secondary key (the
+    smallest index wins — list order).  Equivalent to
+    ``max(scored, key=lambda x: (x[0], -x[1]))`` without the per-item
+    lambda call: scanning in index order and replacing only on a
+    strictly greater score keeps the earliest of any tied maximum."""
+    if not scored:
+        raise ValueError("choose() arg is an empty sequence")
+    it = iter(scored)
+    best = next(it)
+    best_t = best[0]
+    for s in it:
+        if s[0] > best_t:
+            best = s
+            best_t = s[0]
     return best[2]
 
 
@@ -243,14 +280,31 @@ def score_candidates(
     first-spawn tasks cannot silently shift under scoring changes.
     """
     total = sum(pack_bytes_by_worker.values())
-    max_load = max((load for _, _, load in candidates), default=0)
-    min_load = min((load for _, _, load in candidates), default=0)
+    max_load = min_load = 0
+    if candidates:
+        max_load = min_load = candidates[0][2]
+        for _, _, load in candidates:
+            if load > max_load:
+                max_load = load
+            elif load < min_load:
+                min_load = load
     scored = []
-    for i, (node, wids, load) in enumerate(candidates):
+    i = 0
+    for node, wids, load in candidates:
         if total > 0:
-            produced = sum(
-                b for wid, b in pack_bytes_by_worker.items() if wid in wids
-            )
+            # integer byte sum over the smaller collection: addition
+            # order differs between the two shapes but the sum is an
+            # exact int either way, so the score is identical
+            produced = 0
+            if len(wids) < len(pack_bytes_by_worker):
+                for wid in wids:
+                    b = pack_bytes_by_worker.get(wid)
+                    if b is not None:
+                        produced += b
+            else:
+                for wid, b in pack_bytes_by_worker.items():
+                    if wid in wids:
+                        produced += b
             loc = 1024.0 * produced / total
         elif region_affinity is not None and load == min_load:
             loc = 1024.0 * region_affinity[i]
@@ -259,4 +313,5 @@ def score_candidates(
         bal = 1024.0 * (1.0 - (load / max_load if max_load > 0 else 0.0))
         t = (policy_p * loc + (100 - policy_p) * bal) / 100.0
         scored.append((t, i, node))
+        i += 1
     return choose(scored)

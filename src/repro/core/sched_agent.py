@@ -37,8 +37,8 @@ message or charge differs from the unsharded runtime.
 
 from __future__ import annotations
 
+import sys
 import threading
-from contextlib import contextmanager
 from typing import TYPE_CHECKING
 
 from .api import nid_of
@@ -253,9 +253,15 @@ class SchedAgent:
         rt.sub.local(sched, Message("s_descend", (sched, task), cost=cost))
 
     def live_workers(self, sched: SchedNode) -> set[str]:
+        """Live worker ids under ``sched`` (callers only read).  With no
+        dead workers — every run except the fault-injection ones — this
+        is the precomputed subtree set itself, not a fresh copy built
+        per descent candidate."""
         rt = self.rt
-        return {w for w in rt.subtree_workers[sched.core_id]
-                if w not in rt.dead_workers}
+        subtree = rt.subtree_workers[sched.core_id]
+        if not rt.dead_workers:
+            return subtree
+        return {w for w in subtree if w not in rt.dead_workers}
 
     def h_descend(self, task: "Task") -> None:
         rt = self.rt
@@ -598,6 +604,11 @@ class SchedAgent:
         for w in sched.workers:
             if exclude and w.core_id in exclude:
                 continue
+            # passing ⊆ w.queue, so a queue under the minimum bar can
+            # never produce a take — skip the scan (most queues are
+            # empty or shallow when a steal check sweeps the leaf)
+            if len(w.queue) < self.STEAL_MIN_VICTIM_QUEUE:
+                continue
             passing = []
             for task in rt.worker_agent.queued_stealable(w):
                 if task.completed or task.state != DISPATCHED:
@@ -744,6 +755,58 @@ class SchedAgent:
         target.region_load += n_moved
 
 
+#: kind -> interned "{kind}_batch" tag, built lazily (4 kinds in
+#: practice): the flush path must not allocate a fresh f-string — and
+#: re-hash it — per coalesced batch.
+_BATCH_KINDS: dict = {}
+
+
+def _batch_kind(kind: str) -> str:
+    k = _BATCH_KINDS.get(kind)
+    if k is None:
+        k = _BATCH_KINDS[kind] = sys.intern(kind + "_batch")
+    return k
+
+
+class _CoalesceScope:
+    """Context for one dependency-cascade coalescing extent.  The
+    effect buffer dict is recycled through ``fx._local.spare`` across
+    scopes on the same thread, so steady-state cascades allocate only
+    this small slotted object."""
+
+    __slots__ = ("fx", "opened")
+
+    def __init__(self, fx: "DepEffects"):
+        self.fx = fx
+
+    def __enter__(self) -> "_CoalesceScope":
+        fx = self.fx
+        local = fx._local
+        if not fx.rt.coalesce or getattr(local, "buf", None) is not None:
+            self.opened = False
+            return self
+        buf = getattr(local, "spare", None)
+        if buf is None:
+            buf = {}
+        else:
+            local.spare = None
+        local.buf = buf
+        self.opened = True
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if self.opened:
+            fx = self.fx
+            local = fx._local
+            buf, local.buf = local.buf, None
+            try:
+                fx._flush(buf)
+            finally:
+                buf.clear()
+                local.spare = buf
+        return False
+
+
 class DepEffects:
     """DepEngine effects: every callback is work on the owner of the
     destination node; route + charge accordingly.  The effects object
@@ -770,21 +833,15 @@ class DepEffects:
 
     # ---- outgoing-message coalescing ----------------------------------------
 
-    @contextmanager
-    def coalesce_scope(self):
+    def coalesce_scope(self) -> "_CoalesceScope":
         """Buffer batchable effect messages for the dynamic extent of
         one dependency-handler cascade; no-op (and no buffer) when
-        coalescing is off or a scope is already open on this thread."""
-        if not self.rt.coalesce or \
-                getattr(self._local, "buf", None) is not None:
-            yield
-            return
-        self._local.buf = {}
-        try:
-            yield
-        finally:
-            buf, self._local.buf = self._local.buf, None
-            self._flush(buf)
+        coalescing is off or a scope is already open on this thread.
+
+        A hand-rolled context-manager object, not ``@contextmanager``:
+        the generator machinery (one generator + two ``next`` calls per
+        scope) was a measurable share of the dep-cascade hot path."""
+        return _CoalesceScope(self)
 
     def _emit(self, src: SchedNode, dst: SchedNode, kind: str,
               item: tuple, cost: float) -> None:
@@ -792,21 +849,27 @@ class DepEffects:
         if buf is None:
             self.rt.sub.send(src, dst, Message(kind, item, cost=cost))
             return
-        buf.setdefault((src.core_id, dst.core_id, kind), []).append(
-            (item, cost))
+        key = (src.core_id, dst.core_id, kind)
+        group = buf.get(key)
+        if group is None:
+            group = buf[key] = []
+        group.append((item, cost))
 
     def _flush(self, buf: dict) -> None:
         rt = self.rt
+        sched_of = rt.sched_of
+        send = rt.sub.send
+        batch_cost_mixed = rt.cost.batch_cost_mixed
         for (src_id, dst_id, kind), entries in buf.items():
-            src, dst = rt.sched_of(src_id), rt.sched_of(dst_id)
             if len(entries) == 1:
                 item, cost = entries[0]
-                rt.sub.send(src, dst, Message(kind, item, cost=cost))
+                send(sched_of(src_id), sched_of(dst_id),
+                     Message(kind, item, cost=cost))
             else:
                 items = tuple(item for item, _ in entries)
-                rt.sub.send(src, dst, Message(
-                    f"{kind}_batch", (items,),
-                    cost=rt.cost.batch_cost_mixed(c for _, c in entries),
+                send(sched_of(src_id), sched_of(dst_id), Message(
+                    _batch_kind(kind), (items,),
+                    cost=batch_cost_mixed(c for _, c in entries),
                     payload_bytes=batch_payload_bytes(len(entries))))
 
     # ---- batch-message handler entry points ----------------------------------

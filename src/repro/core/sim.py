@@ -25,52 +25,58 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import itertools
 from dataclasses import dataclass
 from typing import Any, Callable
 
 
-class Event:
-    __slots__ = ("time", "seq", "fn", "args")
-
-    def __init__(self, time: float, seq: int, fn: Callable, args: tuple):
-        self.time = time
-        self.seq = seq
-        self.fn = fn
-        self.args = args
-
-    def __lt__(self, other: "Event") -> bool:
-        return (self.time, self.seq) < (other.time, other.seq)
-
-
 class Engine:
-    """Minimal deterministic discrete-event engine (virtual cycles)."""
+    """Minimal deterministic discrete-event engine (virtual cycles).
+
+    Events live on the heap as plain ``(time, seq, fn, args)`` tuples:
+    the unique, monotonically increasing ``seq`` both enforces FIFO
+    ordering among same-timestamp events and guarantees tuple
+    comparison never reaches the (non-orderable) callable, so every
+    heap sift runs at C speed with no Python ``__lt__`` calls."""
 
     def __init__(self) -> None:
-        self._q: list[Event] = []
-        self._seq = itertools.count()
+        self._q: list[tuple[float, int, Callable, tuple]] = []
+        self._seq = 0
         self.now: float = 0.0
         self.events_processed = 0
 
     def at(self, time: float, fn: Callable, *args: Any) -> None:
-        heapq.heappush(self._q, Event(max(time, self.now), next(self._seq), fn, args))
+        now = self.now
+        self._seq = seq = self._seq + 1
+        heapq.heappush(self._q, (time if time > now else now, seq, fn, args))
 
     def after(self, delay: float, fn: Callable, *args: Any) -> None:
         self.at(self.now + delay, fn, *args)
 
     def run(self, until: float | None = None, max_events: int | None = None) -> None:
-        while self._q:
+        q = self._q
+        pop = heapq.heappop
+        if until is None and max_events is None:
+            # hot path: no bound checks, locals bound outside the loop.
+            while q:
+                time, _seq, fn, args = pop(q)
+                self.now = time
+                self.events_processed += 1
+                fn(*args)
+            return
+        while q:
             if max_events is not None and self.events_processed >= max_events:
                 raise RuntimeError(
                     f"simulation exceeded {max_events} events (possible livelock)"
                 )
-            ev = heapq.heappop(self._q)
-            if until is not None and ev.time > until:
-                heapq.heappush(self._q, ev)
+            # peek instead of pop+push-back: pausing at ``until`` leaves
+            # the heap untouched (no re-heapify on resume).
+            time = q[0][0]
+            if until is not None and time > until:
                 return
-            self.now = ev.time
+            time, _seq, fn, args = pop(q)
+            self.now = time
             self.events_processed += 1
-            ev.fn(*ev.args)
+            fn(*args)
 
     @property
     def pending(self) -> int:
@@ -156,9 +162,17 @@ class CostModel:
     def batch_cost_mixed(self, per_item_costs) -> float:
         """:meth:`batch_cost` for a batch whose items carry different
         legacy charges (e.g. traverse hops mixed with arg enqueues)."""
-        costs = list(per_item_costs)
-        return (self.msg_proc * batch_packets(len(costs))
-                + sum(max(0.0, c - self.msg_proc) for c in costs))
+        mp = self.msg_proc
+        n = 0
+        extra = 0.0
+        # same arithmetic as summing max(0.0, c - mp) in order: adding
+        # an exact 0.0 term never changes a float sum, so skipping the
+        # clamped-to-zero items is byte-identical.
+        for c in per_item_costs:
+            n += 1
+            if c > mp:
+                extra += c - mp
+        return mp * batch_packets(n) + extra
 
     @staticmethod
     def heterogeneous() -> "CostModel":
@@ -213,13 +227,15 @@ class Core:
     def occupy(self, arrival: float, cost: float) -> float:
         """Reserve the core for ``cost`` cycles starting no earlier than
         ``arrival``; returns the completion time."""
-        start = max(arrival, self.next_free)
+        nf = self.next_free
+        start = arrival if arrival > nf else nf
         end = start + cost
         self.next_free = end
-        self.stats.busy_cycles += cost
-        self.stats.events += 1
-        self.stats.msgs_handled += 1
-        self.stats.queue_delay_cycles += start - arrival
+        stats = self.stats
+        stats.busy_cycles += cost
+        stats.events += 1
+        stats.msgs_handled += 1
+        stats.queue_delay_cycles += start - arrival
         return end
 
     def exec_at(self, arrival: float, cost: float, fn: Callable, *args: Any) -> float:

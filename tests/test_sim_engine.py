@@ -1,0 +1,146 @@
+"""Engine/Core internals: the event-loop contracts the substrate fast
+path relies on (DESIGN.md §1.10).
+
+The heap holds plain ``(time, seq, fn, args)`` tuples; these tests pin
+the observable semantics of that representation: FIFO order among
+same-timestamp events (the ``seq`` tie-break), pausing at ``until=``
+without disturbing the pending heap, the ``max_events`` livelock
+backstop, and ``Core.occupy``'s serialization/queue-delay accounting.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core.sim import Core, Engine
+
+
+class TestSameTimestampFIFO:
+    def test_insertion_order_at_equal_time(self):
+        eng = Engine()
+        order = []
+        for i in range(8):
+            eng.at(10.0, order.append, i)
+        eng.run()
+        assert order == list(range(8))
+        assert eng.now == 10.0
+        assert eng.events_processed == 8
+
+    def test_fifo_survives_interleaved_times(self):
+        # same-timestamp events keep insertion order even when pushed
+        # between events at other times (heap sift must not reorder
+        # equal-time entries thanks to the monotone seq)
+        eng = Engine()
+        order = []
+        eng.at(5.0, order.append, "a5")
+        eng.at(1.0, order.append, "a1")
+        eng.at(5.0, order.append, "b5")
+        eng.at(3.0, order.append, "a3")
+        eng.at(5.0, order.append, "c5")
+        eng.run()
+        assert order == ["a1", "a3", "a5", "b5", "c5"]
+
+    def test_past_times_clamp_to_now_in_fifo_order(self):
+        # events scheduled "in the past" run at now, after anything
+        # already queued for now, still in insertion order
+        eng = Engine()
+        order = []
+
+        def spawn_past():
+            order.append("head")
+            eng.at(0.0, order.append, "p1")   # now is 7.0 here
+            eng.at(0.0, order.append, "p2")
+
+        eng.at(7.0, spawn_past)
+        eng.run()
+        assert order == ["head", "p1", "p2"]
+        assert eng.now == 7.0
+
+
+class TestUntilPauseResume:
+    def test_pause_leaves_pending_heap_intact(self):
+        eng = Engine()
+        order = []
+        for t in (1.0, 2.0, 3.0, 4.0):
+            eng.at(t, order.append, t)
+        eng.run(until=2.5)
+        assert order == [1.0, 2.0]
+        assert eng.now == 2.0            # time of the last *run* event
+        assert eng.pending == 2          # 3.0 and 4.0 still queued
+        # resume: the remaining events run in order, nothing is lost or
+        # duplicated by the pause (the peek-based bound never pops)
+        eng.run()
+        assert order == [1.0, 2.0, 3.0, 4.0]
+        assert eng.pending == 0
+
+    def test_pause_resume_with_mid_heap_insertions(self):
+        eng = Engine()
+        order = []
+        eng.at(1.0, order.append, "a")
+        eng.at(10.0, order.append, "z")
+        eng.run(until=5.0)
+        assert order == ["a"]
+        # schedule between the pause point and the queued tail
+        eng.at(7.0, order.append, "m")
+        eng.at(10.0, order.append, "z2")  # ties with z, inserted later
+        eng.run()
+        assert order == ["a", "m", "z", "z2"]
+
+    def test_until_exactly_at_event_time_runs_it(self):
+        eng = Engine()
+        order = []
+        eng.at(2.0, order.append, "x")
+        eng.at(3.0, order.append, "y")
+        eng.run(until=2.0)
+        assert order == ["x"]
+        assert eng.pending == 1
+
+
+class TestMaxEventsBackstop:
+    def test_livelock_raises(self):
+        eng = Engine()
+
+        def tick():
+            eng.at(eng.now, tick)     # perpetual zero-advance self-post
+
+        eng.at(0.0, tick)
+        with pytest.raises(RuntimeError, match="possible livelock"):
+            eng.run(max_events=100)
+        assert eng.events_processed == 100
+
+    def test_terminating_run_passes_under_budget(self):
+        eng = Engine()
+        order = []
+        for t in range(5):
+            eng.at(float(t), order.append, t)
+        eng.run(max_events=100)
+        assert order == [0, 1, 2, 3, 4]
+
+
+class TestCoreOccupy:
+    def test_idle_core_starts_at_arrival(self):
+        core = Core(Engine(), "w0")
+        end = core.occupy(5.0, 10.0)
+        assert end == 15.0
+        assert core.next_free == 15.0
+        st = core.stats
+        assert st.busy_cycles == 10.0
+        assert st.msgs_handled == 1
+        assert st.queue_delay_cycles == 0.0
+
+    def test_busy_core_queues_and_counts_delay(self):
+        core = Core(Engine(), "w0")
+        core.occupy(0.0, 10.0)          # busy until 10
+        end = core.occupy(4.0, 6.0)     # arrives at 4, waits until 10
+        assert end == 16.0
+        st = core.stats
+        assert st.queue_delay_cycles == 6.0
+        assert st.msgs_handled == 2
+        assert st.busy_cycles == 16.0
+
+    def test_arrival_after_free_has_no_delay(self):
+        core = Core(Engine(), "w0")
+        core.occupy(0.0, 10.0)
+        end = core.occupy(30.0, 5.0)    # core idle again at 10
+        assert end == 35.0
+        assert core.stats.queue_delay_cycles == 0.0
