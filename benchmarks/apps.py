@@ -594,9 +594,10 @@ def run_app(name: str, n_workers: int, mode: str, *, policy_p: int = 20,
             coalesce: bool = True, steal: bool = True, **kw):
     """mode: mpi (analytic cycles) | flat | hier (AppResult).
 
-    ``backend="threads"`` runs the app on the concurrent executor with
-    real payloads (``real=True`` is implied); timings in the result are
-    wall-clock seconds.  ``coalesce=False`` runs the per-arg message
+    ``backend="threads"`` runs the app on the concurrent executor,
+    ``backend="procs"`` on one OS process per worker over wire frames;
+    both imply real payloads (``real=True``) and wall-clock timings in
+    the result.  ``coalesce=False`` runs the per-arg message
     stream (the pre-coalescing virtual-time figures); ``steal=False``
     runs without work stealing / region-affinity placement (the
     pre-stealing schedules)."""
@@ -610,7 +611,7 @@ def run_app(name: str, n_workers: int, mode: str, *, policy_p: int = 20,
         sig = inspect.signature(mpi_model)
         mkw = {k: v for k, v in kw.items() if k in sig.parameters}
         return mpi_model(n_workers, cost, **mkw)
-    if backend == "threads":
+    if backend in ("threads", "procs"):
         kw.setdefault("real", True)
     if mode == "flat":
         return _run(builder(n_workers, hier=False, **kw), n_workers, [1],

@@ -514,6 +514,95 @@ def threads_smoke(scheds: int = 2, n_workers: int = 4) -> list[dict]:
     }]
 
 
+def procs_smoke(scheds: int = 2, n_workers: int = 4) -> list[dict]:
+    """Process-backend smoke at >1 scheduler: worker nodes are real OS
+    processes, every dispatch/footprint/sys-call crosses the wire as
+    binary frames, and the written-back object store must match the
+    serial oracle."""
+    from repro.core import SerialRuntime, task as task_
+
+    @task_
+    def t_set(ctx, o: Out, v: Safe):
+        o.write(v)
+
+    @task_
+    def t_add(ctx, o: InOut, dv: Safe):
+        o.write(o.read() + dv)
+
+    def app(ctx, root):
+        grps = [ctx.ralloc(root, 1, label=f"r{g}") for g in range(scheds * 2)]
+        oids = [ctx.alloc(8, g, label=f"o{i}") for i, g in enumerate(grps)]
+        for i, o in enumerate(oids):
+            ctx.spawn(t_set, o, i)
+        for o in oids:
+            ctx.spawn(t_add, o, 100)
+        yield ctx.wait([InOut(root)])
+
+    sr = SerialRuntime()
+    sr.run(app)
+    rt = Myrmics(n_workers=n_workers, sched_levels=[1, scheds],
+                 backend="procs")
+    rep = rt.run(app)
+    matches = rt.labelled_storage() == sr.labelled_storage()
+    assert matches, (
+        f"procs backend diverged from the serial oracle: "
+        f"{rt.labelled_storage()} != {sr.labelled_storage()}")
+    wire = rep.wire_summary()
+    return [{
+        "backend": "procs",
+        "sched_threads": rt.sub.scheduler_threads,
+        "workers": n_workers,
+        "tasks": rep.tasks_done,
+        "matches_serial": matches,
+        "wire_frames": wire["total_frames"],
+        "wire_bytes": wire["total_bytes"],
+    }]
+
+
+def procs_scaling(workers=(1, 8), app: str = "raytrace",
+                  total_work: float = 2e9, repeats: int = 3,
+                  min_speedup: float = 3.0) -> list[dict]:
+    """Wall-clock scaling of the process backend: ``app`` with a real
+    GIL-releasing payload at 1..N worker *processes*; the paper's claim
+    is that real OS-level parallelism breaks the interpreter ceiling.
+    Each point is the median of ``repeats`` runs.  The >= ``min_speedup``
+    assertion at the top worker count only arms on machines with enough
+    cores (``os.cpu_count() >= workers``); the row always records the
+    measured speedup, the core count and whether the gate was armed, so
+    a single-core CI box still exercises the full path end-to-end."""
+    import os as _os
+    import statistics as _st
+
+    rows = []
+    base_wall = None
+    ncpu = _os.cpu_count() or 1
+    for w in workers:
+        walls = []
+        for _ in range(repeats):
+            r = run_app(app, w, "flat", backend="procs",
+                        total_work=total_work)
+            walls.append(r.cycles)      # wall seconds on real backends
+        wall = _st.median(walls)
+        if base_wall is None:
+            base_wall = wall
+        speedup = base_wall / wall if wall else 0.0
+        armed = ncpu >= w and w > 1
+        if armed and w >= max(workers):
+            assert speedup >= min_speedup, (
+                f"procs backend speedup {speedup:.2f}x at {w} worker "
+                f"processes (cpu_count={ncpu}) is below the required "
+                f"{min_speedup}x")
+        rows.append({
+            "backend": "procs", "bench": app, "workers": w,
+            "wall_s": round(wall, 4),
+            "speedup_vs_1w": round(speedup, 2),
+            "cpu_count": ncpu,
+            "gate_armed": armed,
+            "min_speedup": min_speedup,
+        })
+    return rows
+
+
 # -- Paper scale: the full 8-scheduler + 512-worker machine ------------------------
 
 

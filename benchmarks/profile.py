@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m benchmarks.profile [--app jacobi]
                                                 [--workers 64]
                                                 [--mode hier]
+                                                [--backend sim|threads|procs]
                                                 [--top 25]
                                                 [--sort cumulative|tottime]
                                                 [--out FILE]
@@ -23,6 +24,13 @@ finish in seconds.  The paper-scale smoke point is::
 — the 8-scheduler/512-worker machine (fig8 right edge; ~4 s virtual
 run under the profiler) whose hot profile is what the ``--full`` CI
 grid's wall time follows.
+
+``--backend threads`` / ``--backend procs`` profile the real-execution
+substrates instead (host-side view: on procs the worker processes'
+task bodies run outside the profiled interpreter, so the profile shows
+the wire/marshalling/agent hot path — exactly the runtime overhead a
+procs perf PR targets).  Real backends default to 8 workers unless
+``--workers`` is given explicitly.
 """
 
 from __future__ import annotations
@@ -37,8 +45,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--app", default="jacobi",
                     help="benchmark app name (see benchmarks.apps.APPS)")
-    ap.add_argument("--workers", type=int, default=64)
+    ap.add_argument("--workers", type=int, default=None,
+                    help="worker count (default: 64 on sim, 8 on "
+                    "threads/procs)")
     ap.add_argument("--mode", default="hier", choices=("flat", "hier"))
+    ap.add_argument("--backend", default="sim",
+                    choices=("sim", "threads", "procs"),
+                    help="sim: virtual time; threads: concurrent "
+                    "executor; procs: one OS process per worker")
     ap.add_argument("--top", type=int, default=25,
                     help="functions to print")
     ap.add_argument("--sort", default="cumulative",
@@ -57,16 +71,19 @@ def main() -> None:
         print(f"error: unknown app {args.app!r}; known: "
               + ", ".join(APPS), file=sys.stderr)
         sys.exit(2)
+    if args.workers is None:
+        args.workers = 64 if args.backend == "sim" else 8
 
     prof = cProfile.Profile()
     prof.enable()
     result = run_app(args.app, args.workers, args.mode,
-                     coalesce=args.coalesce)
+                     backend=args.backend, coalesce=args.coalesce)
     prof.disable()
 
+    unit = "virtual cycles" if args.backend == "sim" else "wall seconds"
     print(f"# {args.app} mode={args.mode} workers={args.workers} "
-          f"coalesce={args.coalesce}: {result.tasks} tasks, "
-          f"{result.cycles:.3e} virtual cycles")
+          f"backend={args.backend} coalesce={args.coalesce}: "
+          f"{result.tasks} tasks, {result.cycles:.3e} {unit}")
     if args.out is not None:
         prof.dump_stats(args.out)
         print(f"# raw pstats written to {args.out}")

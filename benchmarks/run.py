@@ -108,6 +108,19 @@ def _row_fns():
         rows = F.threads_smoke()
         return rows, len(rows)
 
+    def procs_smoke(full):
+        rows = F.procs_smoke()
+        return rows, len(rows)
+
+    def procs_scaling(full):
+        # full: the paper-grid point (1 vs 8 worker processes, 3x wall
+        # gate when the machine has the cores); reduced: 1 vs 2 so CI
+        # still drives the whole multi-process path cheaply.
+        workers = (1, 8) if full else (1, 2)
+        total_work = 2e9 if full else 4e8
+        rows = F.procs_scaling(workers=workers, total_work=total_work)
+        return rows, len(rows) * 3  # repeats inside the row
+
     def roofline(full):
         if not os.path.isdir("reports"):
             return None, 1
@@ -129,6 +142,8 @@ def _row_fns():
         ("paper_scale_512", paper_scale),
         ("fig12b_hierarchy_depth", fig12b),
         ("threads_smoke", threads_smoke),
+        ("procs_smoke", procs_smoke),
+        ("procs_scaling", procs_scaling),
         ("roofline_table", roofline),
     )
 
@@ -148,6 +163,8 @@ ROWS = (
     "paper_scale_512",
     "fig12b_hierarchy_depth",
     "threads_smoke",
+    "procs_smoke",
+    "procs_scaling",
     "roofline_table",
 )
 
@@ -184,7 +201,7 @@ def _out_meta(args) -> dict:
         "full": args.full,
         "repeat": args.repeat,
         "only": args.only,
-        "backend": "sim (threads_smoke row: threads)",
+        "backend": "sim (threads_smoke row: threads; procs_* rows: procs)",
         "cost_model": CostModel.heterogeneous().name
         + " (microblaze rows: microblaze)",
         # runtime feature flags the rows ran under (their Myrmics

@@ -43,10 +43,19 @@ def main(ctx, root):
 
 
 if __name__ == "__main__":
-    rt = Myrmics(n_workers=8, sched_levels=[1, 2])
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("sim", "threads", "procs"),
+                    default="sim",
+                    help="sim: virtual time; threads: concurrent executor; "
+                    "procs: one OS process per worker over wire frames")
+    args = ap.parse_args()
+
+    rt = Myrmics(n_workers=8, sched_levels=[1, 2], backend=args.backend)
     report = rt.run(main)
+    unit = "virtual cycles" if args.backend == "sim" else "wall seconds"
     print(f"tasks: {report.tasks_done}, "
-          f"virtual cycles: {report.total_cycles:.0f}")
+          f"{unit}: {report.total_cycles:.4g}")
 
     serial = SerialRuntime()
     serial.run(main)

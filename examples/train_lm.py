@@ -43,9 +43,12 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     ap.add_argument("--inject-failure", action="store_true",
                     help="kill a 'worker' mid-run to demo restart")
-    ap.add_argument("--backend", choices=("loop", "threads"), default="loop",
+    ap.add_argument("--backend", choices=("loop", "threads", "procs"),
+                    default="loop",
                     help="loop: plain JAX loop; threads: schedule each "
-                    "step as a Myrmics task DAG on the concurrent executor")
+                    "step as a Myrmics task DAG on the concurrent executor; "
+                    "procs: same DAG on one OS process per shard (gradient "
+                    "tasks ship params over the wire and write grads back)")
     ap.add_argument("--shards", type=int, default=4,
                     help="data-parallel gradient shards (threads backend)")
     args = ap.parse_args()
@@ -69,14 +72,14 @@ def main() -> None:
         if step % 10 == 0:
             print(f"step {step:5d}  loss {loss:.4f}")
 
-    if args.backend == "threads":
+    if args.backend in ("threads", "procs"):
         if args.inject_failure:
             raise SystemExit("--inject-failure is loop-backend only")
         from repro.train.orchestrator import run_myrmics_training
         rep, run_rep = run_myrmics_training(
             cfg, seq_len=args.seq_len, global_batch=args.batch,
             steps=args.steps, n_shards=args.shards, opt=opt,
-            on_step=on_step, backend="threads")
+            on_step=on_step, backend=args.backend)
         print(f"done ({run_rep.backend} backend, {args.shards} shards, "
               f"{run_rep.tasks_done} tasks, "
               f"{run_rep.total_cycles:.1f}s wall): "

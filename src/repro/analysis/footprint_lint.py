@@ -40,6 +40,15 @@ Rules (ids are what waiver comments name):
     spawned child, or an ``In`` param forwarded into a child
     ``Out``/``InOut`` position — the child's footprint exceeds the
     parent's.
+``unpicklable-capture``
+    a task body uses a name bound (in an enclosing function or at
+    module level) to recognisably unpicklable state — an ``open()``
+    handle, a ``threading`` synchronization primitive, a socket, a
+    ``subprocess.Popen`` handle, ``threading.local()``.  Task bodies
+    ship over the wire on ``backend="procs"``; such a capture
+    serializes fine nowhere and raises ``WireError`` at dispatch.
+    Plain closures and lambdas are *not* flagged: the wire marshaller
+    ships non-importable functions by value.
 ``parse-error``
     the file does not parse (reported once, at the syntax error).
 
@@ -72,6 +81,35 @@ _DIRTY_ATTRS = {"spawn", "read", "write", "wait", "alloc", "balloc",
 
 #: spawn keywords that are scheduler metadata, not data arguments
 _SPAWN_META_KW = {"duration", "name"}
+
+#: constructor names whose result cannot cross the process boundary
+#: (matched on the called name: ``open(...)``, ``threading.Lock()``,
+#: ``socket.socket()``, ``subprocess.Popen(...)``, ...)
+_UNPICKLABLE_FACTORIES = {
+    "open": "an open file handle",
+    "Lock": "a lock",
+    "RLock": "a lock",
+    "Condition": "a condition variable",
+    "Semaphore": "a semaphore",
+    "BoundedSemaphore": "a semaphore",
+    "Event": "a thread event",
+    "Barrier": "a thread barrier",
+    "socket": "a socket",
+    "socketpair": "a socket",
+    "Popen": "a subprocess handle",
+    "local": "thread-local storage",
+}
+
+
+def _unpicklable_desc(value: ast.expr | None) -> str | None:
+    """Description when ``value`` is a call to a known factory of
+    process-boundary-unsafe state, else None."""
+    if not isinstance(value, ast.Call):
+        return None
+    f = value.func
+    name = f.id if isinstance(f, ast.Name) else (
+        f.attr if isinstance(f, ast.Attribute) else None)
+    return _UNPICKLABLE_FACTORIES.get(name) if name else None
 
 _WAIVER_RE = re.compile(r"#\s*lint:\s*allow\(([^)]*)\)")
 
@@ -179,6 +217,15 @@ class _BoundNames(ast.NodeVisitor):
     def __init__(self) -> None:
         self.names: set[str] = set()
         self.func_defs: dict[str, ast.FunctionDef] = {}
+        #: name -> description, for names bound to recognisably
+        #: process-boundary-unsafe values (``f = open(...)``,
+        #: ``with open(...) as f``, ``lk = threading.Lock()``)
+        self.unpicklable: dict[str, str] = {}
+
+    def _note_unpicklable(self, target: ast.expr, value: ast.expr) -> None:
+        desc = _unpicklable_desc(value)
+        if desc is not None and isinstance(target, ast.Name):
+            self.unpicklable[target.id] = desc
 
     def _target(self, node: ast.expr) -> None:
         if isinstance(node, ast.Name):
@@ -192,11 +239,13 @@ class _BoundNames(ast.NodeVisitor):
     def visit_Assign(self, node: ast.Assign) -> None:
         for t in node.targets:
             self._target(t)
+            self._note_unpicklable(t, node.value)
         self.visit(node.value)
 
     def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
         self._target(node.target)
         if node.value:
+            self._note_unpicklable(node.target, node.value)
             self.visit(node.value)
 
     def visit_AugAssign(self, node: ast.AugAssign) -> None:
@@ -213,6 +262,8 @@ class _BoundNames(ast.NodeVisitor):
         for item in node.items:
             if item.optional_vars is not None:
                 self._target(item.optional_vars)
+                self._note_unpicklable(item.optional_vars,
+                                       item.context_expr)
         self.generic_visit(node)
 
     visit_AsyncWith = visit_With
@@ -246,7 +297,9 @@ class _BoundNames(ast.NodeVisitor):
         self.names.add(node.name)
 
 
-def _scope_names(fd: ast.FunctionDef) -> tuple[set[str], dict[str, ast.FunctionDef]]:
+def _scope_names(
+    fd: ast.FunctionDef,
+) -> tuple[set[str], dict[str, ast.FunctionDef], dict[str, str]]:
     v = _BoundNames()
     a = fd.args
     for arg in (list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
@@ -255,7 +308,7 @@ def _scope_names(fd: ast.FunctionDef) -> tuple[set[str], dict[str, ast.FunctionD
         v.names.add(arg.arg)
     for stmt in fd.body:
         v.visit(stmt)
-    return v.names, v.func_defs
+    return v.names, v.func_defs, v.unpicklable
 
 
 def _is_dirty(fd: ast.FunctionDef, _cache: dict = {}) -> bool:
@@ -289,15 +342,20 @@ class _ModuleIndex:
         self.assigned: set[str] = set()
         #: module-level functions / classes / imports (never flagged)
         self.defs: set[str] = set()
+        #: module-level names bound to process-boundary-unsafe values
+        self.unpicklable: dict[str, str] = {}
         for node in ast.walk(tree):
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 if _is_task_decorated(node):
                     self.task_defs[node.name] = node
         for stmt in tree.body:
             if isinstance(stmt, ast.Assign):
+                desc = _unpicklable_desc(stmt.value)
                 for t in stmt.targets:
                     if isinstance(t, ast.Name):
                         self.assigned.add(t.id)
+                        if desc is not None:
+                            self.unpicklable[t.id] = desc
             elif isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
                 self.assigned.add(stmt.target.id)
             elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
@@ -344,7 +402,8 @@ class _TaskChecker:
                  enclosing_funcs: dict[str, ast.FunctionDef],
                  module: _ModuleIndex,
                  waivers: dict[int, set[str]],
-                 findings: list[Finding]) -> None:
+                 findings: list[Finding],
+                 enclosing_unpicklable: dict[str, str] | None = None) -> None:
         self.path = path
         self.fd = fd
         self.module = module
@@ -354,7 +413,12 @@ class _TaskChecker:
         self.params = {p.name: p for p in _params_of(fd)}
         self.enclosing = enclosing - set(self.params) - {self.ctx}
         self.enclosing_funcs = enclosing_funcs
-        self.locals, self.local_funcs = _scope_names(fd)
+        self.locals, self.local_funcs, _ = _scope_names(fd)
+        #: captured name -> description of unpicklable state it holds
+        self.unpicklable: dict[str, str] = dict(module.unpicklable)
+        self.unpicklable.update(enclosing_unpicklable or {})
+        for shadowed in (set(self.params) | {self.ctx} | self.locals):
+            self.unpicklable.pop(shadowed, None)
         #: names derived from Safe params by assignment/iteration/indexing
         self.safe_taint: set[str] = {
             p.name for p in self.params.values() if p.kind == "safe"}
@@ -621,6 +685,15 @@ class _TaskChecker:
             else:
                 self._scan(node.elt)
             return
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            desc = self.unpicklable.get(node.id)
+            if desc is not None:
+                self._emit(
+                    node, "unpicklable-capture",
+                    f"'{node.id}' captures {desc} from an enclosing "
+                    "scope — it cannot be marshalled to a worker "
+                    "process (backend=\"procs\" ships task bodies over "
+                    "the wire)")
         if isinstance(node, ast.Call):
             self._scan_call(node)
         elif isinstance(node, ast.Assign):
@@ -680,20 +753,25 @@ def lint_source(source: str, path: str = "<string>") -> list[Finding]:
     module = _ModuleIndex(tree)
     waivers = _parse_waivers(source)
     findings: list[Finding] = []
-    scope_cache: dict[int, tuple[set[str], dict[str, ast.FunctionDef]]] = {}
+    scope_cache: dict[
+        int, tuple[set[str], dict[str, ast.FunctionDef], dict[str, str]]
+    ] = {}
     for fd, chain in _walk_funcs(tree, []):
         if not _is_task_decorated(fd):
             continue
         enclosing: set[str] = set()
         enclosing_funcs: dict[str, ast.FunctionDef] = {}
+        enclosing_unp: dict[str, str] = {}
         for outer in chain:
             if id(outer) not in scope_cache:
                 scope_cache[id(outer)] = _scope_names(outer)
-            names, funcs = scope_cache[id(outer)]
+            names, funcs, unp = scope_cache[id(outer)]
             enclosing |= names
             enclosing_funcs.update(funcs)
+            enclosing_unp.update(unp)
         _TaskChecker(path, fd, enclosing, enclosing_funcs, module,
-                     waivers, findings).run()
+                     waivers, findings,
+                     enclosing_unpicklable=enclosing_unp).run()
     findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     return findings
 

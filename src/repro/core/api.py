@@ -366,7 +366,7 @@ def task(fn=None, *, name: str | None = None):
 _REPORT_FIELDS = (
     "total_cycles", "tasks_spawned", "tasks_done", "events",
     "workers", "scheds", "region_load", "migrations", "nodes_migrated",
-    "backend", "msg_kinds", "steals", "sanitize",
+    "backend", "msg_kinds", "steals", "sanitize", "wire", "procs",
 )
 
 #: Message kinds that carry per-argument dependency control traffic —
@@ -410,6 +410,14 @@ class RunReport:
     #: dynamic footprint-sanitizer counters (``Myrmics(sanitize=True)``):
     #: ``enabled``, ``accesses_checked``, ``violations``
     sanitize: dict[str, Any] = field(default_factory=dict)
+    #: procs backend only: real wire-frame accounting —
+    #: ``{"per_kind": {kind: {"frames", "bytes"}}, "total_frames",
+    #: "total_bytes"}`` measured on the host<->worker sockets (empty on
+    #: sim/threads, whose messages never serialize)
+    wire: dict[str, Any] = field(default_factory=dict)
+    #: procs backend only: per-worker-process stats (pid, frames/bytes
+    #: each way, tasks shipped); empty on sim/threads
+    procs: dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {name: getattr(self, name) for name in _REPORT_FIELDS}
@@ -442,6 +450,29 @@ class RunReport:
             "msgs_per_task": total / tasks,
             "dep_ctrl_msgs_per_task": dep / tasks,
         }
+
+    def wire_summary(self) -> dict:
+        """Real wire traffic for a procs-backend run: per-frame-kind
+        frame counts and byte totals measured on the host<->worker
+        sockets, plus per-task rates.  All-zero/empty on sim/threads
+        (their messages are routed in-memory and never serialize)."""
+        per_kind = dict(self.wire.get("per_kind", {}))
+        total = self.wire.get("total_frames", 0)
+        total_bytes = self.wire.get("total_bytes", 0)
+        tasks = self.tasks_done or 1
+        return {
+            "per_kind": per_kind,
+            "total_frames": total,
+            "total_bytes": total_bytes,
+            "frames_per_task": total / tasks,
+            "bytes_per_task": total_bytes / tasks,
+        }
+
+    def proc_summary(self) -> dict:
+        """Per-worker-process stats for a procs-backend run: pid, frames
+        and bytes in each direction, tasks shipped.  Empty on
+        sim/threads."""
+        return {wid: dict(st) for wid, st in sorted(self.procs.items())}
 
     def steal_summary(self) -> dict:
         """Work-stealing outcome for the run: requests attempted and

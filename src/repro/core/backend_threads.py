@@ -202,6 +202,19 @@ class ThreadSubstrate(Substrate):
                 f"scheduler {ex.core_id} would block on a marshalled "
                 f"{kind} call to {dst.core_id}: runtime services are "
                 "worker-side entry points")
+        # charge the call's argument payload into the per-kind message
+        # table (estimated; see wire.payload_size) so marshalled sys_*
+        # traffic is byte-accounted comparably with the sim's charged
+        # payloads and the procs backend's real frame sizes.
+        from . import wire
+        with self._stats_lock:
+            self._note_msg(kind, wire.payload_size(args))
+        return self._marshal(dst, kind, args)
+
+    def _marshal(self, dst, kind: str, args: tuple):
+        """Queue a synchronous service request to ``dst``'s mailbox and
+        block for the answer (the worker-thread half of ``call``; the
+        procs backend's reader threads enter here directly)."""
         req = _Call(kind, args)
         self._put(dst, req)
         req.done.wait()

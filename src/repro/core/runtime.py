@@ -36,6 +36,11 @@ which substrate executes it:
   against the object store; DMA/compute charges become wall-clock
   measurements — including per-scheduler queue delay — in the
   ``RunReport``.
+* ``backend="procs"`` — :class:`~.backend_procs.ProcSubstrate`: the
+  scheduler tier as above, but every worker node is a forked OS
+  process speaking serialized ``Message`` frames over a Unix socket —
+  task bodies run outside the GIL entirely, with footprint snapshots
+  shipped in and write-backs shipped out (the paper's DMA model).
 
 A task function has signature ``fn(ctx, *args)``.  Under the
 declarative API each argument arrives as the handle the spawner passed
@@ -307,8 +312,10 @@ class Myrmics:
     directory, dependency engine, object store, counters) and delegates
     all behaviour to the role-scoped agents it wires together.
     ``backend`` selects the substrate executing the agents' messages:
-    ``"sim"`` (deterministic virtual time, the default) or ``"threads"``
-    (real concurrent execution; see :mod:`.backend_threads`).
+    ``"sim"`` (deterministic virtual time, the default), ``"threads"``
+    (real concurrent execution; see :mod:`.backend_threads`) or
+    ``"procs"`` (real multi-process execution over serialized message
+    frames; see :mod:`.backend_procs`).
     ``migrate_threshold`` opts in to SV-C region-ownership migration:
     a scheduler owning more than that many directory nodes offers
     subtrees to underloaded siblings (default off — virtual-time results
@@ -352,8 +359,15 @@ class Myrmics:
         from .sched_agent import DepEffects, SchedAgent
         from .worker_agent import WorkerAgent
 
-        if backend not in ("sim", "threads"):
-            raise ValueError(f"unknown backend {backend!r}: sim | threads")
+        if backend not in ("sim", "threads", "procs"):
+            raise ValueError(
+                f"unknown backend {backend!r}: sim | threads | procs")
+        if sanitize and backend == "procs":
+            raise ValueError(
+                "sanitize=True needs a shared-memory backend (sim | "
+                "threads): the procs workers run task bodies in separate "
+                "address spaces, so the sanitizer's shadow state cannot "
+                "observe their accesses")
         self.backend = backend
         self.coalesce = coalesce
         self.steal = steal
@@ -417,6 +431,12 @@ class Myrmics:
             from .backend_threads import ThreadSubstrate, ThreadWorkerAgent
             self.sub = ThreadSubstrate(self.hier, max_wall_s=max_wall_s)
             self.worker_agent = ThreadWorkerAgent(self)
+        elif backend == "procs":
+            from .backend_procs import ProcSubstrate, ProcWorkerAgent
+            self.sub = ProcSubstrate(self.hier, max_wall_s=max_wall_s)
+            self.worker_agent = ProcWorkerAgent(self)
+            self.sub.runtime = self
+            self.sub.agent = self.worker_agent
         else:
             self.sub = SimSubstrate(self.hier)
             self.worker_agent = WorkerAgent(self)
@@ -623,6 +643,10 @@ class Myrmics:
             sanitize=(self.san.counters() if self.san is not None else
                       {"enabled": False, "accesses_checked": 0,
                        "violations": 0}),
+            wire=(self.sub.wire_report()
+                  if hasattr(self.sub, "wire_report") else {}),
+            procs=(self.sub.proc_report()
+                   if hasattr(self.sub, "proc_report") else {}),
         )
 
 

@@ -40,9 +40,46 @@ virtual-cycle costs carried by the message.  The two implementations:
 from __future__ import annotations
 
 import gc
+import struct
 from typing import Any, Callable
 
 from .sim import MESSAGE_SIZE, CoreStats
+
+#: Wire-frame header constants (``Message.to_wire``/``from_wire``): a
+#: 2-byte magic + version so a desynchronized stream fails loudly, then
+#: the interned kind code, the cost and payload_bytes charges (doubles:
+#: batch payloads can be fractional in the back-to-back packet model),
+#: then the length-prefixed pickled args blob.
+WIRE_MAGIC = b"\xa9M"
+WIRE_VERSION = 1
+
+#: Every interned message kind, in wire-code order.  Appending is safe;
+#: reordering is a wire-format break (bump WIRE_VERSION).  Kinds not in
+#: this table (tests, future extensions) travel as code 0xFF plus an
+#: inline length-prefixed kind string.
+WIRE_KINDS = (
+    "noop",
+    # scheduler-role messages
+    "s_spawn", "s_enqueue", "s_mark_ready", "s_descend", "s_wait",
+    "s_complete", "s_steal_check", "s_steal_req", "s_steal_grant",
+    "s_release", "s_arg_ready", "s_wait_ready", "d_quiesce",
+    # coalesced control-plane batches (one frame, many ops)
+    "s_enqueue_batch", "s_release_batch", "d_quiesce_batch",
+    "s_arg_ready_batch", "s_wait_ready_batch",
+    # worker-role messages
+    "w_dispatch", "w_resume", "w_try_start", "w_exec", "w_resume_retry",
+    "w_backup_check", "w_kill",
+    # marshalled runtime services
+    "sys_spawn", "sys_spawn_batch", "sys_ralloc", "sys_alloc",
+    "sys_balloc", "sys_free", "sys_rfree",
+    # procs-backend transport frames (host <-> worker process)
+    "x_exec", "x_resume", "x_call", "x_reply", "x_complete",
+    "x_suspend", "x_error", "x_stop",
+)
+_WIRE_KIND_INDEX = {k: i for i, k in enumerate(WIRE_KINDS)}
+_WIRE_KIND_RAW = 0xFF
+_WIRE_HEADER = struct.Struct(">2sBBdd")
+_WIRE_LEN = struct.Struct(">I")
 
 
 class Message:
@@ -72,6 +109,76 @@ class Message:
     def __repr__(self) -> str:
         return (f"Message(kind={self.kind!r}, args={self.args!r}, "
                 f"cost={self.cost!r}, payload_bytes={self.payload_bytes!r})")
+
+    # -- wire form (procs backend) ------------------------------------------
+
+    def to_wire(self) -> bytes:
+        """Compact binary frame body: header (magic, version, interned
+        kind code, cost, payload_bytes) + length-prefixed pickled args.
+        Batch messages serialize exactly like singles — one frame per
+        ``*_batch`` group, mirroring the 64-byte-packet cost model's
+        one-charge-per-batch convention."""
+        from . import wire
+        code = _WIRE_KIND_INDEX.get(self.kind, _WIRE_KIND_RAW)
+        blob = wire.dumps(self.args)
+        try:
+            head = _WIRE_HEADER.pack(WIRE_MAGIC, WIRE_VERSION, code,
+                                     float(self.cost),
+                                     float(self.payload_bytes))
+        except (struct.error, TypeError, ValueError) as e:
+            raise wire.WireError(
+                f"unencodable frame header for {self.kind!r}: {e}") from e
+        if code == _WIRE_KIND_RAW:
+            kb = self.kind.encode("utf-8")
+            head += _WIRE_LEN.pack(len(kb)) + kb
+        return head + _WIRE_LEN.pack(len(blob)) + blob
+
+    @classmethod
+    def from_wire(cls, buf: bytes) -> "Message":
+        """Inverse of :meth:`to_wire`; raises :class:`~.wire.WireError`
+        on malformed frames (bad magic/version/kind code, truncated or
+        trailing bytes, corrupt args blob)."""
+        from . import wire
+        try:
+            magic, ver, code, cost, pb = _WIRE_HEADER.unpack_from(buf, 0)
+        except struct.error as e:
+            raise wire.WireError(f"truncated frame header: {e}") from e
+        if magic != WIRE_MAGIC:
+            raise wire.WireError(f"bad frame magic {magic!r}")
+        if ver != WIRE_VERSION:
+            raise wire.WireError(
+                f"wire version mismatch: got {ver}, expected {WIRE_VERSION}")
+        off = _WIRE_HEADER.size
+        if code == _WIRE_KIND_RAW:
+            if len(buf) < off + _WIRE_LEN.size:
+                raise wire.WireError("truncated kind-string length")
+            (klen,) = _WIRE_LEN.unpack_from(buf, off)
+            off += _WIRE_LEN.size
+            kb = buf[off:off + klen]
+            if len(kb) != klen:
+                raise wire.WireError("truncated kind string")
+            kind = kb.decode("utf-8")
+            off += klen
+        else:
+            if code >= len(WIRE_KINDS):
+                raise wire.WireError(f"unknown interned kind code {code}")
+            kind = WIRE_KINDS[code]
+        if len(buf) < off + _WIRE_LEN.size:
+            raise wire.WireError("truncated args-blob length")
+        (blen,) = _WIRE_LEN.unpack_from(buf, off)
+        off += _WIRE_LEN.size
+        blob = buf[off:off + blen]
+        if len(blob) != blen or off + blen != len(buf):
+            raise wire.WireError(
+                f"frame length mismatch: header says {blen} args bytes, "
+                f"buffer has {len(buf) - off} (trailing garbage or "
+                "truncation)")
+        args = wire.loads(blob)
+        if not isinstance(args, tuple):
+            args = tuple(args)
+        pb_int = int(pb)
+        return cls(kind, args, cost=cost,
+                   payload_bytes=pb_int if pb_int == pb else pb)
 
 
 class Substrate:

@@ -111,6 +111,22 @@ def run_training_schedule(cfg: OrchestratorConfig) -> list[StepStats]:
     return stats
 
 
+#: per-process jit cache for the gradient tasks: keyed by arch so a
+#: forked worker process (backend="procs") compiles once and reuses the
+#: executable across every grad task it is shipped — the jitted wrapper
+#: itself cannot cross the wire, the (module-level, by-reference)
+#: factory can.
+_GRAD_CACHE: dict = {}
+
+
+def _grad_fn_for(lm):
+    fn = _GRAD_CACHE.get(lm.cfg.arch_id)
+    if fn is None:
+        import jax
+        fn = _GRAD_CACHE[lm.cfg.arch_id] = jax.jit(jax.value_and_grad(lm.loss))
+    return fn
+
+
 def run_myrmics_training(model_cfg, *, seq_len: int = 64,
                          global_batch: int = 8, steps: int = 10,
                          n_shards: int = 2, seed: int = 0, opt=None,
@@ -144,7 +160,6 @@ def run_myrmics_training(model_cfg, *, seq_len: int = 64,
     opt = opt or AdamW(lr=1e-3, warmup_steps=max(steps // 10, 1),
                        total_steps=steps)
     data = TokenDataset(model_cfg, seq_len, global_batch, seed)
-    grad_fn = jax.jit(jax.value_and_grad(lm.loss))
 
     params0 = lm.init(jax.random.PRNGKey(seed))
     opt0 = opt.init(params0)
@@ -156,7 +171,7 @@ def run_myrmics_training(model_cfg, *, seq_len: int = 64,
     @task
     def grad_shard(ctx, g: Out, loss_o: Out, p: In, batch: Safe):
         b = {k: jnp.asarray(v) for k, v in batch.items()}
-        loss, grads = grad_fn(p.read(), b)
+        loss, grads = _grad_fn_for(lm)(p.read(), b)
         g.write(grads)
         loss_o.write(float(loss))
 
@@ -177,7 +192,9 @@ def run_myrmics_training(model_cfg, *, seq_len: int = 64,
             step_r = ctx.ralloc(root, 1, label=f"step{step}")
             gs = ctx.balloc(param_bytes, step_r, n_shards,
                             label=f"g{step}")
-            ls = ctx.balloc(8, step_r, n_shards, label=f"l{step}")
+            # losses live under root (not the freed step region) so the
+            # host can rebuild the report when main ran out-of-process
+            ls = ctx.balloc(8, root, n_shards, label=f"l{step}")
             batch = data.get_batch(step)
             for i in range(n_shards):
                 shard = {k: v[i * per_shard:(i + 1) * per_shard]
@@ -187,15 +204,32 @@ def run_myrmics_training(model_cfg, *, seq_len: int = 64,
             ctx.spawn(apply_update, p_obj, o_obj, step_r, list(gs),
                       name=f"upd{step}")
             yield ctx.wait([InOut(root)])
-            losses = [ctx.read(lo) for lo in ls]
-            report.losses.append(sum(losses) / len(losses))
-            report.steps_run += 1
-            if on_step is not None:
-                on_step(step, report.losses[-1])
+            if backend != "procs":
+                # on procs, main itself runs inside a worker process:
+                # these closure mutations (and on_step prints) would
+                # land in the wrong address space — the host rebuilds
+                # the report from written-back loss objects instead.
+                losses = [ctx.read(lo) for lo in ls]
+                report.losses.append(sum(losses) / len(losses))
+                report.steps_run += 1
+                if on_step is not None:
+                    on_step(step, report.losses[-1])
             ctx.rfree(step_r)
 
     rt = Myrmics(n_workers=n_shards, sched_levels=[1], backend=backend)
     run_rep = rt.run(main)
+    if backend == "procs" and steps:
+        # main's closure ran inside a worker process, so its report /
+        # on_step mutations never reached this address space — rebuild
+        # from the loss objects written back to the host object store
+        # (the l{step} batch lives under root).
+        stored = rt.labelled_storage()
+        for step in range(steps):
+            vals = [stored[f"l{step}[{i}]"] for i in range(n_shards)]
+            report.losses.append(sum(vals) / len(vals))
+            report.steps_run += 1
+            if on_step is not None:
+                on_step(step, report.losses[-1])
     return report, run_rep
 
 

@@ -510,3 +510,68 @@ def test_invariants_detect_starving_registry_garbage():
     rt.hier.root.starving.append("w0")    # a worker is not a leaf sched
     with pytest.raises(InvariantViolation, match="starving"):
         check_invariants(rt)
+
+
+def test_linter_unpicklable_capture_rule():
+    src = '''
+import threading
+from repro.core import Out, Safe, task
+
+LK = threading.Lock()
+
+def build():
+    log = open("/tmp/x.log", "w")
+    scale = 3
+
+    @task
+    def bad(ctx, o: Out):
+        with LK:
+            log.write("boom")
+            o.write(1)
+
+    @task
+    def fine(ctx, o: Out, f: Safe):
+        # lambdas/closures over plain data ship by value: not flagged
+        o.write((lambda v: v * scale)(2))
+
+    @task
+    def opens_locally(ctx, o: Out):
+        # opening inside the body happens child-side: legal
+        with open("/tmp/y.log", "w") as fh:
+            fh.write("x")
+        o.write(1)
+    return bad, fine, opens_locally
+'''
+    by_rule = {}
+    for f in lint_source(src, "fx.py"):
+        by_rule.setdefault(f.rule, []).append(f)
+    caught = by_rule.get("unpicklable-capture", [])
+    msgs = " / ".join(f.message for f in caught)
+    assert "'LK' captures a lock" in msgs
+    assert "'log' captures an open file handle" in msgs
+    # exactly the two genuinely unshippable captures — the lambda, the
+    # plain-data closure and the body-local open() stay clean
+    assert len(caught) == 2
+
+
+def test_linter_unpicklable_capture_waiver_and_shadow():
+    src = '''
+import threading
+from repro.core import Out, task
+
+LK = threading.Lock()
+
+@task
+def waived(ctx, o: Out):  # lint: allow(unpicklable-capture: sim-only app)
+    with LK:
+        o.write(1)
+
+@task
+def shadows(ctx, o: Out):
+    LK = threading.Lock()   # local rebind: child-side state, legal
+    with LK:
+        o.write(1)
+'''
+    findings = [f for f in lint_source(src, "fx.py")
+                if f.rule == "unpicklable-capture"]
+    assert findings == []

@@ -448,3 +448,35 @@ def test_threads_real_payload_speedup():
         speedups[name] = one / many
     assert sum(s >= threshold for s in speedups.values()) >= need, \
         (speedups, nw_hi, cores)
+
+
+def test_threads_marshalled_call_payload_bytes_charged():
+    """Regression: marshalled sys_* calls (a worker thread's ctx.spawn /
+    ctx.alloc crossing to the scheduler loop) used to be counted as
+    frames with no payload, under-reporting msg_summary() bytes — the
+    charge must reflect the argument sizes, like the procs backend's
+    real frames do."""
+    def fan(c, rid):
+        for i in range(4):
+            o = c.alloc(8, rid, label=f"m{i}")
+            c.spawn(lambda cc, oo, i=i: cc.write(oo, i), [Out(o)])
+
+    def app(ctx, root):
+        rid = ctx.ralloc(root, 1, label="r")
+        ctx.spawn(fan, [InOut(rid)])
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="threads")
+    rep = rt.run(app)
+    per_kind = rep.msg_summary()["per_kind"]
+    sys_kinds = {k: v for k, v in per_kind.items() if k.startswith("sys_")}
+    assert sys_kinds, f"no marshalled sys_* calls recorded: {sorted(per_kind)}"
+    for kind, rec in sys_kinds.items():
+        assert rec["count"] > 0
+        assert rec["bytes"] > 0, (
+            f"{kind}: {rec['count']} calls charged 0 payload bytes")
+    # a spawn carries task descriptors: more than a bare frame header
+    spawn_kind = ("sys_spawn_batch" if "sys_spawn_batch" in sys_kinds
+                  else "sys_spawn")
+    rec = sys_kinds[spawn_kind]
+    assert rec["bytes"] / rec["count"] > 16

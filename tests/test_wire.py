@@ -1,0 +1,226 @@
+"""Wire-format tests: ``Message.to_wire()/from_wire()`` round-trips,
+malformed-frame rejection, and the process-boundary reducers in
+:mod:`repro.core.wire` (by-value closures, TaskFn, Ref, module
+handles; WireError on generators/locks/host Task objects)."""
+
+import random
+import threading
+
+import pytest
+
+from repro.core import In, Out, Safe, task
+from repro.core.api import ObjRef, RegionRef, TaskFn
+from repro.core.substrate import (
+    WIRE_KINDS, WIRE_MAGIC, WIRE_VERSION, Message, _WIRE_HEADER,
+)
+from repro.core import wire
+from repro.core.wire import WireError, payload_size
+
+
+def rt(msg: Message) -> Message:
+    return Message.from_wire(msg.to_wire())
+
+
+def assert_same(a: Message, b: Message) -> None:
+    assert a.kind == b.kind
+    assert a.args == b.args
+    assert a.cost == b.cost
+    assert a.payload_bytes == b.payload_bytes
+
+
+# -- frame round-trips --------------------------------------------------------
+
+
+def test_roundtrip_every_interned_kind():
+    for i, kind in enumerate(WIRE_KINDS):
+        m = Message(kind, (i, "x", (1, 2)), cost=1.5 * i, payload_bytes=64 + i)
+        got = rt(m)
+        assert_same(m, got)
+        # interned kinds must not fall back to the inline-string form
+        code = m.to_wire()[_WIRE_HEADER.size - 20:]  # header holds the code
+        assert got.kind == kind
+
+
+def test_roundtrip_uninterned_kind_inline():
+    m = Message("x_custom_kind_not_interned", ("payload",))
+    assert_same(m, rt(m))
+
+
+def test_roundtrip_batch_group():
+    # coalesced batch: one frame carrying a list of per-item tuples
+    items = [("w3", ("t%d" % i, i, None)) for i in range(40)]
+    m = Message("s_enqueue_batch", (items,), payload_bytes=4096)
+    got = rt(m)
+    assert_same(m, got)
+    assert got.args[0] == items
+
+
+def test_roundtrip_large_payload():
+    blob = bytes(random.Random(7).randrange(256) for _ in range(1 << 20))
+    m = Message("x_exec", ((1, None, [blob], "spawn", (), "big", 0.0),),
+                payload_bytes=len(blob))
+    assert rt(m).args[0][2][0] == blob
+
+
+def test_roundtrip_float_payload_bytes():
+    m = Message("noop", (), payload_bytes=12.5)
+    assert rt(m).payload_bytes == 12.5
+    # integral floats come back as ints (the header carries a double)
+    assert rt(Message("noop", (), payload_bytes=64)).payload_bytes == 64
+
+
+def test_roundtrip_args_tuple_coercion():
+    m = Message("s_wait", [1, 2, 3])  # list args arrive as a tuple
+    assert rt(m).args == (1, 2, 3)
+
+
+# -- malformed frames ---------------------------------------------------------
+
+
+def test_reject_bad_magic():
+    buf = bytearray(Message("noop").to_wire())
+    buf[0] ^= 0xFF
+    with pytest.raises(WireError):
+        Message.from_wire(bytes(buf))
+
+
+def test_reject_bad_version():
+    buf = bytearray(Message("noop").to_wire())
+    buf[2] = WIRE_VERSION + 1
+    with pytest.raises(WireError):
+        Message.from_wire(bytes(buf))
+
+
+def test_reject_truncated_frame():
+    buf = Message("s_spawn", (1, 2, 3)).to_wire()
+    for cut in (1, _WIRE_HEADER.size - 1, len(buf) - 1):
+        with pytest.raises(WireError):
+            Message.from_wire(buf[:cut])
+
+
+def test_reject_trailing_garbage():
+    with pytest.raises(WireError):
+        Message.from_wire(Message("noop").to_wire() + b"\x00")
+
+
+def test_reject_unknown_kind_code():
+    buf = bytearray(Message("noop").to_wire())
+    buf[3] = 0xFE   # not an interned code, not the raw-string marker
+    with pytest.raises(WireError):
+        Message.from_wire(bytes(buf))
+
+
+def test_reject_garbage_pickle_body():
+    head = Message("noop").to_wire()[:_WIRE_HEADER.size]
+    with pytest.raises(WireError):
+        Message.from_wire(head + b"\x00\x00\x00\x04junk")
+
+
+def test_magic_is_stable():
+    assert Message("noop").to_wire()[:2] == WIRE_MAGIC
+
+
+# -- reducers -----------------------------------------------------------------
+
+
+def test_closure_taskfn_roundtrip():
+    bias = 7
+
+    @task
+    def t_add(ctx, o: Out, v: In, scale: Safe = 3):
+        o.write(v.read() * scale + bias)
+
+    got = wire.loads(wire.dumps(t_add))
+    assert isinstance(got, TaskFn)
+    assert got.__name__ == t_add.__name__
+    # annotations survive (the footprint specs are re-derived from them)
+    assert {k: v for k, v in got.fn.__annotations__.items()} \
+        == t_add.fn.__annotations__
+    assert got.fn.__defaults__ == (3,)
+    assert got.fn.__closure__[0].cell_contents == 7
+
+
+def test_lambda_ships_by_value():
+    k = 10
+    fn = wire.loads(wire.dumps(lambda x: x + k))
+    assert fn(5) == 15
+
+
+def test_importable_function_ships_by_reference():
+    import os.path
+    assert wire.loads(wire.dumps(os.path.join)) is os.path.join
+
+
+def test_ref_roundtrip_is_directoryless():
+    for ref in (ObjRef(42, "obj"), RegionRef(7, "reg")):
+        got = wire.loads(wire.dumps(ref))
+        assert type(got) is type(ref)
+        assert (got.nid, got.label) == (ref.nid, ref.label)
+
+
+def test_module_roundtrip():
+    import math
+    assert wire.loads(wire.dumps(math)) is math
+
+
+def test_generator_rejected():
+    def g():
+        yield 1
+    with pytest.raises(WireError):
+        wire.dumps(g())
+
+
+def test_lock_rejected():
+    with pytest.raises(WireError):
+        wire.dumps(threading.Lock())
+
+
+def test_host_task_rejected():
+    from repro.core.runtime import Task
+    t = Task.__new__(Task)
+    with pytest.raises(WireError):
+        wire.dumps(t)
+
+
+# -- payload_size estimator ---------------------------------------------------
+
+
+def test_payload_size_shapes():
+    assert payload_size(None) == 1
+    assert payload_size(12) == 8
+    assert payload_size("abcd") == 4
+    assert payload_size(b"\x00" * 100) == 100
+    assert payload_size(ObjRef(1, None)) == 16
+    assert payload_size([1, 2, 3]) == 8 + 24
+    assert payload_size({"a": 1}) == 8 + 1 + 8
+    assert payload_size(object()) == 32
+
+
+# -- seeded fuzz round-trip (runs without hypothesis) -------------------------
+
+
+def _random_payload(rng: random.Random, depth: int = 2):
+    leaf = rng.randrange(6)
+    if depth == 0 or leaf < 4:
+        return rng.choice([
+            None, True, rng.randrange(-2**40, 2**40),
+            rng.random() * 1e9, "s" * rng.randrange(0, 20),
+            bytes(rng.randrange(256) for _ in range(rng.randrange(0, 64))),
+        ])
+    if leaf == 4:
+        return tuple(_random_payload(rng, depth - 1)
+                     for _ in range(rng.randrange(0, 4)))
+    return {f"k{i}": _random_payload(rng, depth - 1)
+            for i in range(rng.randrange(0, 4))}
+
+
+def test_fuzz_roundtrip_seeded():
+    rng = random.Random(1234)
+    kinds = WIRE_KINDS + ("totally_raw_kind",)
+    for _ in range(300):
+        m = Message(rng.choice(kinds),
+                    tuple(_random_payload(rng)
+                          for _ in range(rng.randrange(0, 4))),
+                    cost=rng.random() * 1e12,
+                    payload_bytes=rng.randrange(0, 2**31))
+        assert_same(m, rt(m))

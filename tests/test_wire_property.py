@@ -1,0 +1,32 @@
+"""Hypothesis round-trip over the wire frame format: every interned
+kind (plus the raw-string fallback), arbitrary nested payloads, full
+cost/payload_bytes ranges.  The deterministic seeded variant of this
+sweep lives in test_wire.py so the property holds in environments
+without hypothesis too."""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.substrate import WIRE_KINDS, Message  # noqa: E402
+
+_payloads = st.recursive(
+    st.none() | st.booleans() | st.integers(-2**40, 2**40)
+    | st.floats(allow_nan=False) | st.text(max_size=20)
+    | st.binary(max_size=64),
+    lambda inner: st.lists(inner, max_size=4).map(tuple)
+    | st.dictionaries(st.text(max_size=5), inner, max_size=4),
+    max_leaves=12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(kind=st.sampled_from(WIRE_KINDS + ("totally_raw_kind",)),
+       args=st.lists(_payloads, max_size=4).map(tuple),
+       cost=st.floats(0, 1e12, allow_nan=False),
+       pb=st.integers(0, 2**31))
+def test_property_roundtrip(kind, args, cost, pb):
+    m = Message(kind, args, cost=cost, payload_bytes=pb)
+    got = Message.from_wire(m.to_wire())
+    assert (got.kind, got.args, got.cost, got.payload_bytes) \
+        == (m.kind, m.args, m.cost, m.payload_bytes)
