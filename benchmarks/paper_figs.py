@@ -469,6 +469,77 @@ def skewed_dag(workers=(64, 256), policy_p: int = 80,
     return rows
 
 
+def _fault_app(n_workers: int, tasks_per_worker: int = 12, seed: int = 0):
+    """Deep-queue fanout for the fault rows: every task is spawned up
+    front with a seeded duration, so worker queues stay occupied for
+    most of the run and a random mid-window kill reliably catches
+    DISPATCHED/RUNNING victims (the replay set)."""
+    import random as _random
+
+    rng = _random.Random(seed)
+    durs = [rng.uniform(200e3, 800e3)
+            for _ in range(n_workers * tasks_per_worker)]
+
+    def main(ctx, root):
+        oids = ctx.balloc(64, root, len(durs), label="x")
+        for i, (o, d) in enumerate(zip(oids, durs)):
+            ctx.spawn(lambda c, oo, v=i: c.write(oo, v * 3 + 1), [Out(o)],
+                      duration=d)
+        yield ctx.wait([InOut(root)])
+
+    return main
+
+
+def fault_recovery(workers: int = 16, kill_counts=(0, 1, 2, 4),
+                   seed: int = 0) -> list[dict]:
+    """Fault-recovery overhead (PR 10): a deep-queue fanout DAG run
+    under seeded-random worker kills at increasing failure rates, on
+    the sim backend (kills are virtual-time events, so every row is
+    deterministic per (workers, seed)).  ``kills=0`` pins the
+    no-failure cycles — with ``faults=None`` that run must stay
+    byte-identical to the fault-layer-free build, which the fig7a/fig8
+    pinned tests already enforce; here the 0-row doubles as the
+    denominator for the recovery-overhead ratios.  Each killed worker's
+    queued and in-flight tasks replay from their recorded footprints;
+    the final store is held to the no-failure run's store every time."""
+    cm = CostModel.heterogeneous()
+    levels = hier_levels(workers)
+    app = lambda: _fault_app(workers, seed=seed)     # noqa: E731
+    rows = []
+    base_cycles = None
+    base_store = None
+    for k in kill_counts:
+        faults = None if k == 0 else {
+            "seed": seed, "n_kills": k,
+            "window": (0.1 * base_cycles, 0.7 * base_cycles)}
+        rt = Myrmics(n_workers=workers, sched_levels=levels, cost=cm,
+                     steal=True, faults=faults)
+        rep = rt.run(app())
+        assert rep.tasks_spawned == rep.tasks_done, (
+            f"fault_recovery: run with {k} kills did not complete")
+        fs = rep.fault_summary()
+        if k == 0:
+            base_cycles = rep.total_cycles
+            base_store = rt.labelled_storage()
+            assert fs["enabled"] is False
+        else:
+            assert fs["workers_killed"] == k
+            assert rt.labelled_storage() == base_store, (
+                f"fault_recovery: store diverged after {k} kills")
+            from repro.analysis.invariants import check_invariants
+            check_invariants(rt)
+        rows.append({
+            "workers": workers,
+            "levels": levels,
+            "kills": k,
+            "cycles": round(rep.total_cycles),
+            "overhead_vs_0": round(rep.total_cycles / base_cycles, 3),
+            "replays": fs["tasks_replayed"],
+            "rescheduled": rt.tasks_rescheduled,
+        })
+    return rows
+
+
 def threads_smoke(scheds: int = 2, n_workers: int = 4) -> list[dict]:
     """Concurrent-executor smoke at >1 scheduler thread: a real
     multi-scheduler threads-backend run whose object store must match

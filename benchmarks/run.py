@@ -112,6 +112,16 @@ def _row_fns():
         rows = F.procs_smoke()
         return rows, len(rows)
 
+    def fault_recovery(full):
+        # full: one extra failure-rate point on a bigger machine;
+        # reduced: the 16-worker grid at 0/1/2/4 kills
+        if full:
+            rows = F.fault_recovery(workers=64,
+                                    kill_counts=(0, 1, 2, 4, 8))
+        else:
+            rows = F.fault_recovery()
+        return rows, len(rows)
+
     def procs_scaling(full):
         # full: the paper-grid point (1 vs 8 worker processes, 3x wall
         # gate when the machine has the cores); reduced: 1 vs 2 so CI
@@ -144,6 +154,7 @@ def _row_fns():
         ("threads_smoke", threads_smoke),
         ("procs_smoke", procs_smoke),
         ("procs_scaling", procs_scaling),
+        ("fault_recovery", fault_recovery),
         ("roofline_table", roofline),
     )
 
@@ -165,6 +176,7 @@ ROWS = (
     "threads_smoke",
     "procs_smoke",
     "procs_scaling",
+    "fault_recovery",
     "roofline_table",
 )
 

@@ -19,7 +19,12 @@ preserve however stealing, SV-C migration and coalescing interleave:
   arithmetically sane;
 * **quiescence** (when the program has finished) — dependency queues
   drained, no in-flight shard hand-offs, occupancy back to ~0, worker
-  queues empty.
+  queues empty;
+* **post-recovery hygiene** (when workers/schedulers have died,
+  PR 10) — no directory or dep shard still owned by a dead scheduler,
+  the owner map never routes to a corpse, load/occ exclude dead
+  children, no in-flight hand-off targets a dead node, and dead leaves
+  never linger in a starving registry.
 
 Call it from tests (the chaos sweeps do) or interactively after — or
 during — a run.  Raises :class:`InvariantViolation` listing *every*
@@ -59,6 +64,8 @@ def check_invariants(rt: Any, *, quiescent: bool | None = None) -> dict:
         quiescent = rt.tasks_done == rt.tasks_spawned and rt.tasks_spawned > 0
     sched_ids = {s.core_id for s in hier.scheds}
     dead = getattr(rt, "dead_workers", set())
+    dead_scheds = getattr(rt, "dead_scheds", set())
+    live_sched_ids = sched_ids - dead_scheds
     live_worker_ids = {w.core_id for w in hier.workers} - dead
 
     # -- dep-shard / directory owner alignment ------------------------------
@@ -67,6 +74,10 @@ def check_invariants(rt: Any, *, quiescent: bool | None = None) -> dict:
         if owner_id not in sched_ids:
             problems.append(f"dep shard owner {owner_id!r} is not a scheduler")
             continue
+        if owner_id in dead_scheds and shard.nodes:
+            problems.append(
+                f"dead scheduler {owner_id} still owns {len(shard.nodes)} "
+                "dep node(s) (evacuation incomplete)")
         for nid in shard.nodes:
             n_dep_nodes += 1
             try:
@@ -83,6 +94,10 @@ def check_invariants(rt: Any, *, quiescent: bool | None = None) -> dict:
     # -- directory shard / owner-map alignment ------------------------------
     n_dir_nodes = 0
     for owner_id, dshard in dirx.shards.items():
+        if owner_id in dead_scheds and dshard.nodes:
+            problems.append(
+                f"dead scheduler {owner_id} still owns {len(dshard.nodes)} "
+                "directory node(s) (evacuation incomplete)")
         for nid, meta in dshard.nodes.items():
             n_dir_nodes += 1
             if meta.owner != owner_id:
@@ -97,12 +112,31 @@ def check_invariants(rt: Any, *, quiescent: bool | None = None) -> dict:
         problems.append(
             f"directory owner map has {len(dirx._owner)} entries but shards "
             f"hold {n_dir_nodes} nodes")
+    if dead_scheds:
+        routed = {nid for nid, o in dirx._owner.items() if o in dead_scheds}
+        if routed:
+            problems.append(
+                f"owner map routes {len(routed)} node(s) to dead "
+                f"scheduler(s): sample {sorted(routed)[:5]}")
+        stuck = {nid: tgt for nid, tgt in deps.in_flight.items()
+                 if tgt in dead_scheds}
+        if stuck:
+            problems.append(
+                f"dep hand-off(s) in flight toward dead scheduler(s): {stuck}")
 
     # -- load / occ structure and conservation ------------------------------
     for s in hier.scheds:
-        expected = {c.core_id for c in s.children}
+        if s.core_id in dead_scheds:
+            continue
+        expected = {c.core_id for c in s.children
+                    if c.core_id not in dead_scheds}
         if s.is_leaf:
             expected |= {w.core_id for w in s.workers if w.core_id not in dead}
+        corpses = (set(s.load) | set(s.occ)) & (dead | dead_scheds)
+        if corpses:
+            problems.append(
+                f"{s.core_id}: load/occ still track dead node(s) "
+                f"{sorted(corpses)}")
         if set(s.load) != set(s.occ):
             problems.append(
                 f"{s.core_id}: load keys {sorted(s.load)} != occ keys "
@@ -123,6 +157,8 @@ def check_invariants(rt: Any, *, quiescent: bool | None = None) -> dict:
         # outstanding work (descent charges top-down, completion credits
         # bottom-up)
         for c in s.children:
+            if c.core_id in dead_scheds:
+                continue
             below = sum(c.occ.values())
             if s.occ.get(c.core_id, 0.0) + OCC_TOL < below:
                 problems.append(
@@ -148,6 +184,8 @@ def check_invariants(rt: Any, *, quiescent: bool | None = None) -> dict:
 
     # -- steal / starving registry ------------------------------------------
     for s in hier.scheds:
+        if s.core_id in dead_scheds:
+            continue
         if s.steal_pending and not s.is_leaf:
             problems.append(f"{s.core_id}: steal_pending on a non-leaf")
         if len(set(s.starving)) != len(s.starving):
@@ -156,7 +194,11 @@ def check_invariants(rt: Any, *, quiescent: bool | None = None) -> dict:
         subtree = {x.core_id for x in s.subtree_scheds()}
         for thief_id in s.starving:
             thief = hier.by_id.get(thief_id)
-            if thief is None or not _is_leaf(thief):
+            if thief_id in dead_scheds:
+                problems.append(
+                    f"{s.core_id}: starving entry {thief_id} is a dead "
+                    "scheduler")
+            elif thief is None or not _is_leaf(thief):
                 problems.append(
                     f"{s.core_id}: starving entry {thief_id!r} is not a "
                     "leaf scheduler")
@@ -168,9 +210,8 @@ def check_invariants(rt: Any, *, quiescent: bool | None = None) -> dict:
         problems.append(
             f"steal counters inconsistent: granted={rt.steals_granted} "
             f"attempted={rt.steals_attempted}")
-    if rt.steals_granted == 0 and rt.steal_tasks_moved != 0:
-        problems.append(
-            f"{rt.steal_tasks_moved} tasks moved with zero grants")
+    # note: steal_tasks_moved > 0 with zero grants is legal — intra-leaf
+    # rebalances (_steal_local) move tasks without a grant message.
     if min(rt.steal_tasks_moved, rt.steal_bytes_moved) < 0:
         problems.append("negative steal movement counters")
 
@@ -196,8 +237,10 @@ def check_invariants(rt: Any, *, quiescent: bool | None = None) -> dict:
                             f"quiescent but dep node {nid} held by "
                             f"unfinished {t}")
         for s in hier.scheds:
+            if s.core_id in dead_scheds:
+                continue
             for k, v in s.load.items():
-                if k in live_worker_ids or k in sched_ids:
+                if k in live_worker_ids or k in live_sched_ids:
                     if v != 0:
                         problems.append(
                             f"quiescent but {s.core_id}.load[{k}] = {v}")
@@ -223,6 +266,8 @@ def check_invariants(rt: Any, *, quiescent: bool | None = None) -> dict:
         "quiescent": quiescent,
         "scheds": len(hier.scheds),
         "workers": len(hier.workers),
+        "dead_workers": len(dead),
+        "dead_scheds": len(dead_scheds),
         "dep_nodes": n_dep_nodes,
         "dir_nodes": n_dir_nodes,
     }

@@ -367,6 +367,7 @@ _REPORT_FIELDS = (
     "total_cycles", "tasks_spawned", "tasks_done", "events",
     "workers", "scheds", "region_load", "migrations", "nodes_migrated",
     "backend", "msg_kinds", "steals", "sanitize", "wire", "procs",
+    "faults",
 )
 
 #: Message kinds that carry per-argument dependency control traffic —
@@ -418,6 +419,10 @@ class RunReport:
     #: procs backend only: per-worker-process stats (pid, frames/bytes
     #: each way, tasks shipped); empty on sim/threads
     procs: dict[str, Any] = field(default_factory=dict)
+    #: fault-layer recovery counters (``Myrmics(faults=...)``): kills,
+    #: replays, evacuations, detections, snapshot commits/restores;
+    #: ``{"enabled": False}`` on a fault-free run
+    faults: dict[str, Any] = field(default_factory=dict)
 
     def to_dict(self) -> dict:
         return {name: getattr(self, name) for name in _REPORT_FIELDS}
@@ -506,6 +511,21 @@ class RunReport:
         out.update(self.sanitize)
         out["checks_per_task"] = out["accesses_checked"] / (self.tasks_done
                                                             or 1)
+        return out
+
+    def fault_summary(self) -> dict:
+        """Fault-layer outcome for the run: whether an injector was
+        armed, workers/schedulers killed, tasks replayed from their
+        recorded footprints, shard evacuations performed, detections by
+        reason, and region-snapshot commits/restores.  All-zero with
+        the default ``faults=None``."""
+        out = {
+            "enabled": False, "workers_killed": 0, "scheds_killed": 0,
+            "tasks_replayed": 0, "evacuations": 0, "nodes_evacuated": 0,
+            "detections": {}, "snapshots_saved": 0,
+            "snapshots_restored": 0, "snapshots_skipped": 0,
+        }
+        out.update(self.faults)
         return out
 
     def sched_summary(self) -> dict[str, dict]:

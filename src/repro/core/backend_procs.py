@@ -236,7 +236,12 @@ class ProcSubstrate(ThreadSubstrate):
         # multiprocessing's fd-passing reduction).
         start = "spawn" if "jax" in sys.modules else "fork"
         ctx = multiprocessing.get_context(start)
-        pairs = []
+        # fork every child before starting any host thread (reader
+        # threads included): fork + live threads is the classic deadlock.
+        # Each pair is created, forked and its child end closed before
+        # the next fork — otherwise later children inherit earlier
+        # children's socket ends and a dead sibling's channel never
+        # reaches EOF (death detection would hang on the duplicate fd).
         for w in self.hier.workers:
             host_sock, child_sock = socket.socketpair()
             proc = ctx.Process(
@@ -244,10 +249,6 @@ class ProcSubstrate(ThreadSubstrate):
                 args=(host_sock if start == "fork" else None,
                       child_sock, w.core_id, rt.coalesce),
                 name=f"myrmics-{w.core_id}", daemon=True)
-            pairs.append((w, host_sock, child_sock, proc))
-        # fork every child before starting any host thread (reader
-        # threads included): fork + live threads is the classic deadlock
-        for w, host_sock, child_sock, proc in pairs:
             proc.start()
             child_sock.close()
             ch = _Channel(w, host_sock, proc)
@@ -292,6 +293,24 @@ class ProcSubstrate(ThreadSubstrate):
         finally:
             self._stop_children()
 
+    def kill_channel(self, wid: str) -> int | None:
+        """Sever a worker process's channel (kill path): mark it closing
+        so the reader's EOF stays quiet, close the socket and terminate
+        the child.  The process object stays registered so
+        ``_stop_children`` still joins it.  Returns the pid."""
+        ch = self._channels.get(wid)
+        if ch is None:
+            return None
+        ch.closing = True
+        try:
+            ch.sock.close()
+        except OSError:
+            pass
+        pid = ch.proc.pid
+        if ch.proc.is_alive():
+            ch.proc.terminate()
+        return pid
+
     # -- frames out ----------------------------------------------------------
 
     def send_frame(self, wid: str, msg: Message) -> None:
@@ -301,8 +320,20 @@ class ProcSubstrate(ThreadSubstrate):
             with ch.wlock:
                 ch.sock.sendall(frame)
         except OSError as e:
-            self.fail(RuntimeError(
-                f"worker process {wid} (pid {ch.proc.pid}) is gone: {e}"))
+            rt = self.runtime
+            if ch.closing or (rt is not None and wid in rt.dead_workers):
+                return          # already-detected death: drop quietly
+            if rt is not None and rt.fault_injector is not None:
+                # recovery armed: surface the uniform death message;
+                # the leaf-context kill replays this worker's tasks
+                ch.closing = True
+                self.dispatch("w_dead", (wid, "send-error"))
+                return
+            from .faults import WorkerDiedError
+            self.fail(WorkerDiedError(
+                wid, pid=ch.proc.pid,
+                last_task=self.agent.last_task_of(wid),
+                detail=f"send failed: {e}"))
             return
         self._note_wire(msg.kind, len(frame), wid, outbound=True)
 
@@ -320,10 +351,24 @@ class ProcSubstrate(ThreadSubstrate):
                     f"corrupt frame from worker process {wid}: {e}"))
                 return
             if msg is None:             # EOF
-                if not (ch.closing or self._aborting):
-                    self.fail(RuntimeError(
-                        f"worker process {wid} (pid {ch.proc.pid}) exited "
-                        "unexpectedly"))
+                if ch.closing or self._aborting:
+                    return
+                rt = self.runtime
+                try:
+                    if rt is not None and rt.fault_injector is not None:
+                        # recovery armed: uniform death message — the
+                        # kill surgery runs in the leaf's context, this
+                        # reader thread just reports and exits
+                        ch.closing = True
+                        self.dispatch("w_dead", (wid, "eof"))
+                    else:
+                        from .faults import WorkerDiedError
+                        self.fail(WorkerDiedError(
+                            wid, pid=ch.proc.pid,
+                            last_task=self.agent.last_task_of(wid),
+                            detail="socket EOF (child process died)"))
+                except BaseException as e:
+                    self.fail(e)
                 return
             self._note_wire(msg.kind, len(msg.to_wire()) + _LEN.size,
                             wid, outbound=False)
@@ -417,11 +462,72 @@ class ProcWorkerAgent(ThreadWorkerAgent):
         # in-flight activations: tid -> (task, worker, wall0)
         self._inflight: dict[int, tuple] = {}
         self._busy: dict[str, int] = {}     # worker id -> activations shipped
+        # suspended generators resident in each child process (they
+        # cannot cross the wire, so they die with it): worker id -> tids
+        self._parked: dict[str, set[int]] = {}
+        # wid -> in-flight activations reaped from a dead child, staged
+        # between _collect_victims and the _torn_victims snapshot hook
+        self._torn: dict[str, list] = {}
 
     def inflight_task(self, tid: int) -> tuple:
         with self._qlock:
             task, w, _ = self._inflight[tid]
         return task, w
+
+    def last_task_of(self, wid: str):
+        """The task in flight on a worker process (diagnostics for
+        :class:`~.faults.WorkerDiedError`)."""
+        with self._qlock:
+            for task, w, _ in self._inflight.values():
+                if w.core_id == wid:
+                    return task
+        return None
+
+    # ---- fault handling -------------------------------------------------------
+
+    def _collect_victims(self, w: WorkerNode) -> list:
+        """Queued tasks (host-side, replayable) plus the activation in
+        flight inside the dead process (RUNNING — replayable, its torn
+        writes roll back if snapshots are on).  A *suspended* generator
+        resident in the child is unrecoverable: its continuation lived
+        only in that address space, so the run fails loudly instead of
+        silently replaying side effects (at-most-once limit, DESIGN.md
+        §1.12)."""
+        rt = self.rt
+        wid = w.core_id
+        victims = super()._collect_victims(w)
+        torn = self._torn.setdefault(wid, [])
+        with self._qlock:
+            flight = [tid for tid, (t, ww, _) in self._inflight.items()
+                      if ww.core_id == wid]
+            for tid in flight:
+                task, _, _ = self._inflight.pop(tid)
+                victims.append(task)
+                torn.append(task)
+            self._busy[wid] = 0
+            parked = self._parked.pop(wid, None)
+        pid = rt.sub.kill_channel(wid)
+        if parked:
+            from .faults import WorkerDiedError
+            raise WorkerDiedError(
+                wid, pid=pid, last_task=sorted(parked),
+                detail=f"{len(parked)} suspended task(s) were resident "
+                "in the dead process; a mid-wait continuation cannot be "
+                "replayed (its spawned children are visible side "
+                "effects) — failing loudly")
+        return victims
+
+    def _torn_victims(self, w: WorkerNode, victims: list) -> list:
+        """The dead child's in-flight activations: shipped bodies may
+        have partially executed (and partially flushed write-backs)
+        before the SIGKILL, so these — and only these — roll back to
+        their last committed snapshot."""
+        return self._torn.pop(w.core_id, [])
+
+    def _rehome_parked(self, w: WorkerNode, parked: list) -> None:
+        # nothing host-side to re-home: child-resident continuations are
+        # handled (fatally) in _collect_victims
+        return
 
     # ---- dispatch ------------------------------------------------------------
 
@@ -443,6 +549,8 @@ class ProcWorkerAgent(ThreadWorkerAgent):
         rt = self.rt
         while True:
             with self._qlock:
+                if w.core_id in rt.dead_workers:
+                    return
                 if self._busy.get(w.core_id, 0) > 0:
                     return
                 q = self._queues.get(w.core_id)
@@ -519,6 +627,9 @@ class ProcWorkerAgent(ThreadWorkerAgent):
         with self._qlock:
             self._busy[w.core_id] = self._busy.get(w.core_id, 0) + 1
             self._inflight[task.tid] = (task, w, rt.sub.now)
+            parked = self._parked.get(w.core_id)
+            if parked is not None:
+                parked.discard(task.tid)
         task.state = RUNNING
         rt.sub.send_frame(w.core_id,
                           Message("x_resume",
@@ -528,14 +639,21 @@ class ProcWorkerAgent(ThreadWorkerAgent):
 
     def _deactivate(self, w: WorkerNode, tid: int) -> tuple:
         with self._qlock:
-            task, _, wall0 = self._inflight.pop(tid)
-            self._busy[w.core_id] -= 1
+            entry = self._inflight.pop(tid, None)
+            if entry is None:
+                # already reaped by _collect_victims (message raced the
+                # kill) — nothing to account
+                return None, 0.0, False
+            task, _, wall0 = entry
+            self._busy[w.core_id] = max(0, self._busy.get(w.core_id, 1) - 1)
             idle = not self._queues.get(w.core_id)
         return task, wall0, idle
 
     def on_complete(self, w: WorkerNode, tid: int) -> None:
         rt = self.rt
         task, wall0, idle = self._deactivate(w, tid)
+        if task is None:
+            return
         dt = rt.sub.now - wall0
         task.last_exec_cycles = dt
         rt.sub.charge_task(w, dt, executed=True)
@@ -549,6 +667,10 @@ class ProcWorkerAgent(ThreadWorkerAgent):
     def on_suspend(self, w: WorkerNode, tid: int, wait_args: list) -> None:
         rt = self.rt
         task, wall0, _ = self._deactivate(w, tid)
+        if task is None:
+            return
+        with self._qlock:
+            self._parked.setdefault(w.core_id, set()).add(tid)
         task.state = WAITING
         task.wait_remaining = len(wait_args)
         rt.sub.charge_task(w, rt.sub.now - wall0, executed=False)

@@ -38,10 +38,16 @@ agents as the virtual-time simulation, but over this substrate:
   task activation, handler and mailbox wait, and ``total_cycles`` is
   the wall-clock duration of the run.
 
-Features that re-execute tasks (straggler backups, ``kill_worker``
-fault injection) are virtual-time-only: real task bodies have visible
-side effects, so blind re-execution would corrupt the object store.
-The threaded worker agent refuses them loudly.
+Fault handling: ``kill_worker`` (and the ``Myrmics(faults=...)``
+injector) works on this backend too.  The fail-stop boundary is the
+per-worker *dispatch queue*: a killed worker's queued tasks replay
+through their owners from the recorded footprints and its parked
+(mid-wait) continuations re-home onto a live sibling, while a body
+already executing on the pool runs to completion — pool threads share
+the host address space, so "worker death" is a logical event and the
+in-flight activation is not torn.  Straggler backups remain
+virtual-time-only: they *duplicate* execution of live tasks, which is
+safe only for pure virtual placeholders.
 """
 
 from __future__ import annotations
@@ -56,7 +62,16 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 
 from .api import active_ctx
-from .runtime import RUNNING, WAITING, Task, TaskContext, WaitSpec, resolve_call
+from .runtime import (
+    DISPATCHED,
+    READY,
+    RUNNING,
+    WAITING,
+    Task,
+    TaskContext,
+    WaitSpec,
+    resolve_call,
+)
 from .sched import WorkerNode
 from .substrate import Message, Substrate
 
@@ -507,13 +522,107 @@ class ThreadWorkerAgent:
         self._active: set[str] = set()
         self._qlock = threading.Lock()
 
-    # ---- scale-out features: virtual-time only ------------------------------
+    # ---- fault handling ------------------------------------------------------
 
     def kill_worker(self, worker_id: str, at: float | None = None) -> None:
-        raise RuntimeError(
-            "kill_worker is a virtual-time feature (backend='sim'): real "
-            "task bodies have side effects, so fault re-execution on the "
-            "threads backend would corrupt the object store")
+        """Kill a worker domain (``at`` is wall seconds when given).
+        The fail-stop boundary is the dispatch queue: queued tasks
+        replay via their owners, parked continuations re-home, and a
+        body already on the pool finishes normally (logical death —
+        pool threads share the address space, nothing is torn)."""
+        if at is None:
+            self.do_kill(worker_id)
+        else:
+            self.rt.sub.timer(at, Message("w_kill", (worker_id,)))
+
+    def do_kill(self, worker_id: str) -> None:
+        """Route the kill surgery into the leaf scheduler's execution
+        context: all counter/queue mutation happens on the thread that
+        also runs this leaf's dispatches, so kill-vs-dispatch races are
+        serialized away."""
+        rt = self.rt
+        if worker_id in rt.dead_workers:
+            return
+        w = rt.hier.by_id[worker_id]
+        rt.sub.update(w.parent, self._kill_in_ctx, w)
+
+    def _kill_in_ctx(self, w: WorkerNode) -> None:
+        from .faults import replay_task, retract_descent_path
+
+        rt = self.rt
+        worker_id = w.core_id
+        if worker_id in rt.dead_workers:
+            return
+        rt.dead_workers.add(worker_id)
+        inj = rt.fault_injector
+        if inj is not None:
+            with rt.count_lock:
+                inj.workers_killed += 1
+        victims = self._collect_victims(w)
+        with self._suspend_lock:
+            parked = [r for r in self._suspended.values()
+                      if r.task.worker is w]
+        for t in victims:
+            retract_descent_path(rt, w, t)
+        for rec in parked:
+            retract_descent_path(rt, w, rec.task)
+        w.parent.workers = [x for x in w.parent.workers
+                            if x.core_id != worker_id]
+        w.parent.load.pop(worker_id, None)
+        w.parent.occ.pop(worker_id, None)
+        if inj is not None and inj.snapshots is not None:
+            # restore only what may be torn: the activations that were
+            # executing inside the dead node (procs in-flight tasks —
+            # empty here and on sim; see RegionSnapshots.on_worker_death)
+            inj.snapshots.on_worker_death(
+                worker_id, self._torn_victims(w, victims))
+        self._rehome_parked(w, parked)
+        for t in victims:
+            if t.completed or t.state not in (DISPATCHED, RUNNING):
+                continue
+            rt.tasks_rescheduled += 1
+            t.state = READY
+            t.gen = None
+            t.worker = None
+            replay_task(rt, t)
+
+    def _torn_victims(self, w: WorkerNode, victims: list[Task]) -> list[Task]:
+        """The subset of victims that may have partially executed (torn
+        writes) on the dead node: none on this backend — a body already
+        on the pool finishes normally (logical death).  The procs agent
+        overrides this with the killed child's in-flight activations."""
+        return []
+
+    def _collect_victims(self, w: WorkerNode) -> list[Task]:
+        """Tasks lost with the worker: its dispatch queue (the fail-stop
+        boundary on this backend — a body already on the pool finishes
+        normally).  The procs agent overrides this to add the tasks
+        in flight inside the killed child process."""
+        with self._qlock:
+            q = self._queues.get(w.core_id)
+            victims = list(q) if q else []
+            if q:
+                q.clear()
+        return victims
+
+    def _rehome_parked(self, w: WorkerNode, parked: list) -> None:
+        """Move a dead worker's parked (mid-wait) continuations to a
+        live sibling: the generators live in host memory, so only the
+        worker pointer and the descent-path counters move.  The records
+        stay keyed in ``_suspended`` — the wait's eventual resume pops
+        by tid and continues on the adopter (worker-destined sends
+        dispatch synchronously on this backend, so no resume is ever in
+        flight toward the corpse)."""
+        from .faults import credit_descent_path, pick_live_worker
+
+        rt = self.rt
+        for rec in parked:
+            t = rec.task
+            w2 = pick_live_worker(rt, w.parent)
+            t.worker = w2
+            rec.ctx.worker = w2
+            rt.tasks_rescheduled += 1
+            credit_descent_path(rt, w2, t)
 
     def add_worker(self, leaf_sched_id: str) -> str:
         raise RuntimeError(
@@ -534,9 +643,6 @@ class ThreadWorkerAgent:
 
     def backup_check(self, task: Task) -> None:
         return
-
-    def do_kill(self, worker_id: str) -> None:
-        self.kill_worker(worker_id)
 
     # ---- sim-only message kinds (never emitted on this backend) -------------
 
@@ -563,6 +669,16 @@ class ThreadWorkerAgent:
         off, the body is submitted to the pool directly (the original
         free-for-all path, preserved as the escape hatch)."""
         rt = self.rt
+        if w.core_id in rt.dead_workers:
+            # dispatch raced with the failure (cross-leaf steal grant):
+            # retract this dispatch's counters and re-schedule
+            from .faults import replay_task, retract_descent_path
+            retract_descent_path(rt, w, task)
+            rt.tasks_rescheduled += 1
+            task.state = READY
+            task.worker = None
+            replay_task(rt, task)
+            return
         dma_bytes = sum(
             b for wid, b in task.pack_by_worker.items() if wid != w.core_id
         )
@@ -679,8 +795,12 @@ class ThreadWorkerAgent:
 
     def h_resume(self, w: WorkerNode, task: Task) -> None:
         with self._suspend_lock:
-            rec = self._suspended.pop(task.tid)
-        self.rt.sub.submit(self._continue, w, rec)
+            rec = self._suspended.pop(task.tid, None)
+        if rec is None:
+            return   # stale/duplicate resume (kill re-homed the record)
+        # resume on the task's *current* worker: a kill may have
+        # re-homed the record after the owner addressed this message
+        self.rt.sub.submit(self._continue, task.worker or w, rec)
 
     def _continue(self, w: WorkerNode, rec: ThreadExec) -> None:
         rt = self.rt

@@ -254,6 +254,29 @@ class Directory:
             self.version += 1
             return moved
 
+    def evacuate_shard(self, old_owner: str, new_owner: str) -> list[int]:
+        """Forced whole-shard migration (scheduler-death recovery):
+        every node in ``old_owner``'s shard — live or freed, regardless
+        of tree position — moves to ``new_owner``'s shard.  Same
+        publish-before-unlink ordering as :meth:`migrate_subtree` so
+        lock-free readers never observe a homeless node.  Returns the
+        moved nids."""
+        with self.lock:
+            if old_owner == new_owner:
+                return []
+            src, dst = self.shard(old_owner), self.shard(new_owner)
+            moved = []
+            for cur in sorted(src.nodes):
+                meta = src.nodes[cur]
+                dst.nodes[cur] = meta
+                meta.owner = new_owner
+                self._owner[cur] = new_owner
+                del src.nodes[cur]
+                moved.append(cur)
+            if moved:
+                self.version += 1
+            return moved
+
     # -- structural walks (cost subsumed by the calling handler's charge) ----
 
     def ancestors(self, nid: int) -> list[int]:

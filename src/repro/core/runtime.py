@@ -354,7 +354,7 @@ class Myrmics:
                  migrate_threshold: int | None = None,
                  backend: str = "sim", max_wall_s: float = 600.0,
                  coalesce: bool = True, steal: bool = True,
-                 sanitize: bool = False):
+                 sanitize: bool = False, faults=None):
         from .alloc import AllocAgent
         from .sched_agent import DepEffects, SchedAgent
         from .worker_agent import WorkerAgent
@@ -395,6 +395,7 @@ class Myrmics:
         self.backups_spawned = 0
         self.service_ewma: float | None = None
         self.dead_workers: set[str] = set()
+        self.dead_scheds: set[str] = set()
         self.tasks_rescheduled = 0
         # -- SV-C ownership migration (opt-in) --
         self.migrate_threshold = migrate_threshold
@@ -444,6 +445,16 @@ class Myrmics:
         # the dynamic footprint sanitizer: None when off, so the access
         # hot path costs one attribute test and nothing else
         self.san = Sanitizer(self) if sanitize else None
+        # the fault layer (detection / injection / replay / snapshots):
+        # None when off — every recovery hook is gated on this attribute
+        # so the faults=None hot paths stay byte-identical (§1.10)
+        if faults is not None:
+            from .faults import FaultInjector, normalize_faults
+            self.fault_plan = normalize_faults(faults)
+            self.fault_injector = FaultInjector(self, self.fault_plan)
+        else:
+            self.fault_plan = None
+            self.fault_injector = None
         self.sub.bind(self._handlers(), is_done=self._program_done,
                       route=self._call_dest)
 
@@ -523,6 +534,12 @@ class Myrmics:
             "w_resume_retry": wa.resume_retry,
             "w_backup_check": wa.backup_check,
             "w_kill": wa.do_kill,
+            # fault detection/injection (uniform across backends): real
+            # detectors (procs socket EOF, scheduler heartbeat) and the
+            # injector's timers both land here
+            "w_dead": self._h_worker_dead,
+            "s_dead": self._h_sched_dead,
+            "f_heartbeat": self._h_heartbeat,
             # synchronous runtime services (task body -> scheduler side),
             # routed to the owning scheduler's agent (see _call_dest)
             "sys_spawn": lambda task, ctx:
@@ -586,8 +603,68 @@ class Myrmics:
     def kill_worker(self, worker_id: str, at: float | None = None) -> None:
         self.worker_agent.kill_worker(worker_id, at)
 
+    def kill_scheduler(self, sched_id: str, at: float | None = None) -> None:
+        """Kill a scheduler node: its worker domains die (their tasks
+        replay elsewhere) and its directory/dep shards evacuate onto a
+        live sibling.  Immediate when ``at`` is None, else a timer
+        (virtual cycles on sim, wall seconds on threads/procs)."""
+        if at is None:
+            self._h_sched_dead(sched_id, "killed")
+        else:
+            from .substrate import Message
+            self.sub.timer(at, Message("s_dead", (sched_id, "killed")))
+
     def add_worker(self, leaf_sched_id: str) -> str:
         return self.worker_agent.add_worker(leaf_sched_id)
+
+    # ---- fault handling (detection -> recovery; see faults.py) ---------------
+
+    def _h_worker_dead(self, worker_id: str, reason: str) -> None:
+        """Uniform worker-death entry point: injected kills, procs
+        socket EOF and explicit ``kill_worker`` all converge here."""
+        if worker_id in self.dead_workers:
+            return
+        if self.fault_injector is not None:
+            self.fault_injector.note_detection(f"worker:{reason}")
+        self.worker_agent.do_kill(worker_id)
+
+    def _h_sched_dead(self, sched_id: str, reason: str) -> None:
+        """Uniform scheduler-death entry point.  Injected/logical death
+        evacuates the dead node's shards onto a sibling; a *real*
+        mailbox-thread death (heartbeat detection) fails fast — the dead
+        thread can no longer drain its shard, so recovery-in-context is
+        impossible and hanging is the alternative."""
+        if sched_id in self.dead_scheds:
+            return
+        if self.fault_injector is not None:
+            self.fault_injector.note_detection(f"sched:{reason}")
+        from .faults import SchedulerDiedError, evacuate_scheduler
+        if reason == "heartbeat":
+            raise SchedulerDiedError(
+                sched_id, "mailbox thread died (heartbeat missed); its "
+                "shard can no longer drain — failing fast instead of "
+                "hanging")
+        evacuate_scheduler(self, sched_id, reason)
+
+    def _h_heartbeat(self) -> None:
+        """Wall-clock scheduler liveness probe: every mailbox thread
+        must still be alive; a dead one can never drain its queue, which
+        today would hang the run.  Re-arms itself."""
+        inj = self.fault_injector
+        sub = self.sub
+        if inj is None or self.backend == "sim" or getattr(
+                sub, "_aborting", False):
+            return
+        threads = {t.name: t for t in getattr(sub, "_threads", ())}
+        for s in self.hier.scheds:
+            cid = s.core_id
+            if cid in self.dead_scheds:
+                continue
+            t = threads.get(f"myrmics-{cid}")
+            if t is not None and not t.is_alive():
+                self._h_sched_dead(cid, "heartbeat")
+        from .substrate import Message
+        sub.timer(sub.now + inj.plan.heartbeat_s, Message("f_heartbeat", ()))
 
     # ---- program entry ----------------------------------------------------------
 
@@ -605,6 +682,8 @@ class Myrmics:
         main.satisfied = len(main.dep_args)
         main.state = READY
         self.agent_of(main.owner).begin_packing(main)
+        if self.fault_injector is not None:
+            self.fault_injector.arm()
         self.sub.run(until=until, max_events=self.max_events)
         return self.report()
 
@@ -647,6 +726,9 @@ class Myrmics:
                   if hasattr(self.sub, "wire_report") else {}),
             procs=(self.sub.proc_report()
                    if hasattr(self.sub, "proc_report") else {}),
+            faults=(self.fault_injector.counters()
+                    if self.fault_injector is not None
+                    else {"enabled": False}),
         )
 
 

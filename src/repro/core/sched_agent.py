@@ -139,7 +139,8 @@ class SchedAgent:
         while True:
             nxt = None
             for c in owner.children:
-                if arg_owners and arg_owners <= rt.subtree_ids[c.core_id]:
+                if arg_owners and arg_owners <= rt.subtree_ids[c.core_id] \
+                        and c.core_id not in rt.dead_scheds:
                     nxt = c
                     break
             if nxt is None:
@@ -272,6 +273,13 @@ class SchedAgent:
                     f"h_descend: no live workers left anywhere in the "
                     f"hierarchy to dispatch {task} — every worker domain "
                     "has been killed; the run cannot make progress")
+            # bounce back up; a non-owner arrival was counted by the
+            # parent's pick (owner-local descends never were), so
+            # retract that increment before re-entering descent there
+            if sched is not task.owner:
+                rt.sub.update(sched.parent,
+                              rt.agent_of(sched.parent)._retract_load,
+                              sched.core_id, task.occ_weight)
             rt.sub.send(sched, sched.parent,
                         Message("s_descend", (sched.parent, task),
                                 cost=rt.cost.dispatch_proc))
@@ -293,7 +301,12 @@ class SchedAgent:
                     f"h_descend: no live workers left anywhere in the "
                     f"hierarchy to dispatch {task} — every worker domain "
                     "has been killed; the run cannot make progress")
-            # no live workers below: bounce back up to the parent
+            # no live workers below: bounce back up to the parent,
+            # retracting the parent-pick increment (see the leaf bounce)
+            if sched is not task.owner:
+                rt.sub.update(sched.parent,
+                              rt.agent_of(sched.parent)._retract_load,
+                              sched.core_id, task.occ_weight)
             rt.sub.send(sched, sched.parent,
                         Message("s_descend", (sched.parent, task),
                                 cost=rt.cost.dispatch_proc))
@@ -423,6 +436,11 @@ class SchedAgent:
         task.state = DONE
         with rt.count_lock:
             rt.tasks_done += 1
+        inj = rt.fault_injector
+        if inj is not None and inj.snapshots is not None:
+            # region durability: commit the task's Out objects before
+            # their quiesce effects propagate (owner-context hook)
+            inj.snapshots.on_complete(task)
         rt.worker_agent.note_service_time(
             getattr(task, "last_exec_cycles", 1.0))
         # load decrements piggyback on the completion route (worker ->

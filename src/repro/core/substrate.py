@@ -75,6 +75,8 @@ WIRE_KINDS = (
     # procs-backend transport frames (host <-> worker process)
     "x_exec", "x_resume", "x_call", "x_reply", "x_complete",
     "x_suspend", "x_error", "x_stop",
+    # fault detection/injection (uniform across backends)
+    "w_dead", "s_dead",
 )
 _WIRE_KIND_INDEX = {k: i for i, k in enumerate(WIRE_KINDS)}
 _WIRE_KIND_RAW = 0xFF

@@ -52,42 +52,78 @@ class WorkerAgent:
     def kill_worker(self, worker_id: str, at: float | None = None) -> None:
         """Simulate losing a worker domain: queued and running tasks are
         re-dispatched by their owners (the dependency queues define the
-        exact re-execution set); subsequent placement avoids the corpse.
-        """
+        exact re-execution set); suspended (mid-wait) continuations
+        re-home onto a live sibling; subsequent placement avoids the
+        corpse."""
         if at is None:
             self.do_kill(worker_id)
         else:
             self.rt.sub.timer(at, Message("w_kill", (worker_id,)))
 
     def do_kill(self, worker_id: str) -> None:
+        from .faults import (
+            credit_descent_path,
+            pick_live_worker,
+            replay_task,
+            retract_descent_path,
+        )
+
         rt = self.rt
+        if worker_id in rt.dead_workers:
+            return
         w = rt.hier.by_id[worker_id]
-        if w.suspended:
-            # a suspended (mid-wait) task has visible side effects
-            # (spawned children); blind re-execution would duplicate
-            # them — refuse *before* touching any state, so a refused
-            # kill leaves the hierarchy intact.
-            raise RuntimeError(
-                f"kill_worker({worker_id}): suspended tasks present; "
-                "re-execution of mid-wait tasks is not supported")
         rt.dead_workers.add(worker_id)
+        inj = rt.fault_injector
+        if inj is not None:
+            with rt.count_lock:
+                inj.workers_killed += 1
         victims = [r.task for r in w.queue]
         if w.running is not None:
             victims.append(w.running.task)
+        parked = list(w.suspended.values())
         w.queue.clear()
         w.running = None
+        w.suspended.clear()
+        # counter hygiene first: undo the descent-path load/occ of every
+        # task leaving the corpse (the walk starts at the worker, so the
+        # leaf-level entry is retracted before it is popped below)
+        for t in victims:
+            retract_descent_path(rt, w, t)
+        for rec in parked:
+            retract_descent_path(rt, w, rec.task)
         w.parent.workers = [x for x in w.parent.workers
                             if x.core_id != worker_id]
         w.parent.load.pop(worker_id, None)
         w.parent.occ.pop(worker_id, None)
+        # no snapshot restore on this backend: a sim body applies its
+        # writes atomically at its start instant, so a victim still in
+        # the queue/running slot has written nothing (exactly-once) —
+        # and rolling back would clobber applied writes of non-victim
+        # tasks whose completions (and commits) are still in flight
+        # a suspended (mid-wait) task has visible side effects (spawned
+        # children), so it must not re-execute from the top — its live
+        # continuation (the generator record) re-homes onto a live
+        # worker instead, and resumes there when its wait quiesces
+        for rec in parked:
+            t = rec.task
+            w2 = pick_live_worker(rt, w.parent)
+            t.worker = w2
+            w2.suspended[t.tid] = rec
+            rt.tasks_rescheduled += 1
+            credit_descent_path(rt, w2, t)
+            if t.wait_remaining == 0:
+                # the wait already quiesced: its w_resume targeted the
+                # corpse (dropped by h_resume's pop guard) — re-issue
+                rt.agent_of(t.owner).resume_task(t)
+        # queued / running victims replay from the recorded footprint
         for t in victims:
-            if t.state in (DISPATCHED, RUNNING, WAITING):
-                rt.tasks_rescheduled += 1
-                t.state = READY
-                t.gen = None
-                rt.sub.local(t.owner,
-                             Message("s_descend", (t.owner, t),
-                                     cost=rt.cost.schedule_base))
+            if t.completed or t.state not in (DISPATCHED, RUNNING):
+                continue
+            rt.tasks_rescheduled += 1
+            t.state = READY
+            t.gen = None
+            t.worker = None
+            replay_task(rt, t)
 
     def add_worker(self, leaf_sched_id: str) -> str:
         """Elastic join: attach a fresh worker under a leaf scheduler."""
@@ -155,11 +191,14 @@ class WorkerAgent:
     def h_dispatch(self, w: WorkerNode, task: Task) -> None:
         rt = self.rt
         if w.core_id in rt.dead_workers:
-            # dispatch raced with the failure: owner re-schedules
+            # dispatch raced with the failure: retract the descent-path
+            # counters this dispatch charged, then the owner re-schedules
+            from .faults import replay_task, retract_descent_path
+            retract_descent_path(rt, w, task)
             rt.tasks_rescheduled += 1
-            rt.sub.local(task.owner,
-                         Message("s_descend", (task.owner, task),
-                                 cost=rt.cost.schedule_base))
+            task.state = READY
+            task.worker = None
+            replay_task(rt, task)
             return
         rec = ExecRecord(task)
         dma_bytes = sum(
@@ -181,6 +220,8 @@ class WorkerAgent:
 
     def try_start(self, w: WorkerNode) -> None:
         rt = self.rt
+        if w.core_id in rt.dead_workers:
+            return   # a timer-deferred start raced with the failure
         if w.running is not None or not w.queue:
             return
         rec = w.queue[0]
@@ -199,6 +240,8 @@ class WorkerAgent:
 
     def exec_task(self, w: WorkerNode, rec: ExecRecord) -> None:
         rt = self.rt
+        if w.core_id in rt.dead_workers:
+            return   # the kill already replayed this record's task
         task = rec.task
         if task.completed:
             # a backup copy already finished; drop this duplicate
@@ -258,7 +301,11 @@ class WorkerAgent:
 
     def h_resume(self, w: WorkerNode, task: Task) -> None:
         rt = self.rt
-        rec = w.suspended.pop(task.tid)
+        rec = w.suspended.pop(task.tid, None)
+        if rec is None:
+            # stale resume addressed to a corpse: the kill re-homed the
+            # record and re-issued the resume at the adopting worker
+            return
         if w.running is not None:
             # run after the current task; keep FIFO order ahead of queue
             rt.sub.timer(rt.sub.next_free(w),

@@ -18,7 +18,7 @@ import random
 
 import pytest
 
-from repro.core import In, InOut, Myrmics, Out, Safe, SerialRuntime, task
+from repro.core import InOut, Myrmics, Out, Safe, SerialRuntime, task
 from test_backend_threads import build_wait_app, pipeline_app, random_program
 
 
@@ -176,3 +176,192 @@ def test_procs_wall_clock_speedup():
         assert top["speedup_vs_1w"] >= 3.0
     else:
         assert not top["gate_armed"]
+
+
+# ---------------------------------------------------------------------------
+# failure semantics (PR 10): a dead child process must never hang the host
+# ---------------------------------------------------------------------------
+
+
+def _slow_fanout_app(ctx, root):
+    oids = [ctx.alloc(64, root, label=f"o{i}") for i in range(10)]
+    for i, o in enumerate(oids):
+        def body(c, oo, v=i):
+            import time
+            time.sleep(0.1)
+            c.write(oo, v * 7)
+        ctx.spawn(body, [Out(o)])
+    yield ctx.wait([InOut(root)])
+
+
+def _kill_one_child(rt, avoid_parked=True, delay=0.35):
+    """SIGKILL one worker process shortly into the run (a thread so the
+    host's run() is already inside the substrate when it fires)."""
+    import signal
+    import threading
+    import time
+
+    def assassin():
+        time.sleep(delay)
+        parked = set()
+        if avoid_parked:
+            with rt.worker_agent._qlock:
+                parked = {w for w, s in rt.worker_agent._parked.items() if s}
+        for wid, ch in list(rt.sub._channels.items()):
+            if wid not in parked:
+                os.kill(ch.proc.pid, signal.SIGKILL)
+                return
+    t = threading.Thread(target=assassin, daemon=True)
+    t.start()
+    return t
+
+
+def test_procs_child_death_fails_fast_without_faults():
+    """No faults= armed: a worker process dying mid-run surfaces a
+    named WorkerDiedError (pid + last in-flight task) promptly via the
+    reader's EOF — never the old indefinite recv hang."""
+    import time
+
+    from repro.core.faults import WorkerDiedError
+
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="procs")
+    _kill_one_child(rt, avoid_parked=False)
+    t0 = time.time()
+    with pytest.raises(WorkerDiedError, match="socket EOF"):
+        rt.run(_slow_fanout_app)
+    assert time.time() - t0 < 30.0, "EOF detection took implausibly long"
+
+
+def test_procs_child_death_recovers_with_faults():
+    """faults= armed: the same SIGKILL becomes a uniform w_dead event,
+    the lost queue and in-flight activation replay on the survivor, and
+    the store matches the serial oracle.  (The victim is chosen away
+    from the worker hosting the app's parked main generator — a
+    child-resident suspended continuation is the documented at-most-once
+    hole and fails loudly instead.)"""
+    sr = SerialRuntime()
+    sr.run(_slow_fanout_app)
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="procs",
+                 faults=True)
+    _kill_one_child(rt)
+    rep = rt.run(_slow_fanout_app)
+    fs = rep.fault_summary()
+    assert fs["workers_killed"] == 1
+    assert fs["detections"].get("worker:eof", 0) + \
+        fs["detections"].get("worker:send-error", 0) >= 1
+    assert rt.labelled_storage() == sr.labelled_storage()
+    from repro.analysis.invariants import check_invariants
+    check_invariants(rt)
+
+
+def test_procs_injected_kill_replays_in_flight_task():
+    """Injected kill (no real process death needed for the timer): the
+    child is terminated via its channel, its in-flight activation
+    replays, results match.  The kill fires only once w1 actually has
+    a task in flight — a fixed wall-clock timer races child startup
+    (slow fork/import can leave the victim idle at the deadline)."""
+    import threading
+    import time
+
+    sr = SerialRuntime()
+    sr.run(_slow_fanout_app)
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="procs",
+                 faults=True)
+
+    def sniper():
+        deadline = time.time() + 20.0
+        while time.time() < deadline:
+            if rt.worker_agent.last_task_of("w1") is not None:
+                rt.kill_worker("w1")
+                return
+            time.sleep(0.01)
+
+    threading.Thread(target=sniper, daemon=True).start()
+    rep = rt.run(_slow_fanout_app)
+    fs = rep.fault_summary()
+    assert fs["workers_killed"] == 1
+    assert fs["tasks_replayed"] >= 1
+    assert rt.labelled_storage() == sr.labelled_storage()
+    assert "w1" in rt.dead_workers
+
+
+def test_procs_parked_generator_death_fails_loudly():
+    """Killing the worker whose child process holds a suspended
+    generator is the at-most-once limit: recovery must fail with the
+    named error (listing the parked tids), not silently replay the
+    continuation's side effects."""
+    import time
+
+    from repro.core.faults import WorkerDiedError
+
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="procs",
+                 faults=True)
+
+    def kill_parked_host():
+        deadline = time.time() + 10.0
+        wid = None
+        while time.time() < deadline and wid is None:
+            time.sleep(0.05)
+            with rt.worker_agent._qlock:
+                for w, s in rt.worker_agent._parked.items():
+                    if s:
+                        wid = w
+                        break
+        if wid is not None:
+            rt.kill_worker(wid)
+
+    import threading
+    threading.Thread(target=kill_parked_host, daemon=True).start()
+    with pytest.raises(WorkerDiedError, match="suspended task"):
+        rt.run(_slow_fanout_app)
+
+
+def _rmw_chain_app(ctx, root):
+    oids = ctx.balloc(64, root, 6, label="r")
+    for i, o in enumerate(oids):
+        ctx.spawn(lambda c, oo, v=i: c.write(oo, v + 1), [Out(o)])
+    for o in oids:
+        def rmw(c, oo):
+            import time
+            # long enough that the sniper's kill lands while the body
+            # is still in flight (the torn-write window under test)
+            time.sleep(0.3)
+            c.write(oo, c.read(oo) * 2 + 1)
+        ctx.spawn(rmw, [InOut(o)])
+    yield ctx.wait([InOut(root)])
+
+
+def test_procs_snapshot_restores_torn_inflight_task(tmp_path):
+    """snapshot_dir= on the real-process backend: the init round's
+    commits land, then the child is killed while a read-modify-write
+    activation is in flight — exactly the torn-write window — and its
+    object rolls back to the committed value before the replay, so the
+    RMW applies exactly once."""
+    import threading
+    import time
+
+    from repro.core.faults import FaultPlan
+
+    sr = SerialRuntime()
+    sr.run(_rmw_chain_app)
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="procs",
+                 faults=FaultPlan(snapshot_dir=str(tmp_path)))
+
+    def sniper():
+        deadline = time.time() + 20.0
+        while time.time() < deadline:
+            # wait for an in-flight task on w1 *after* the init round
+            # has committed (6 init completions), i.e. an RMW body
+            if rt.tasks_done >= 6 and \
+                    rt.worker_agent.last_task_of("w1") is not None:
+                rt.kill_worker("w1")
+                return
+            time.sleep(0.005)
+
+    threading.Thread(target=sniper, daemon=True).start()
+    rep = rt.run(_rmw_chain_app)
+    fs = rep.fault_summary()
+    assert fs["workers_killed"] == 1
+    assert fs["snapshots_saved"] > 0
+    assert fs["snapshots_restored"] >= 1
+    assert rt.labelled_storage() == sr.labelled_storage()

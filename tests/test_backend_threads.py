@@ -199,12 +199,26 @@ def test_threads_rejects_until_and_honors_max_events():
 
 def test_threads_rejects_sim_only_features():
     rt = Myrmics(n_workers=2, sched_levels=[1], backend="threads")
-    with pytest.raises(RuntimeError, match="virtual-time feature"):
-        rt.kill_worker("w0")
     with pytest.raises(RuntimeError, match="sim"):
         rt.add_worker("s0.0")
     with pytest.raises(ValueError, match="unknown backend"):
         Myrmics(backend="cuda")
+
+
+def test_threads_kill_worker_recovers():
+    """kill_worker is no longer sim-only: a mid-run worker death on the
+    threads backend replays its lost queue and the run completes with
+    oracle-identical results (PR 10)."""
+    sr = SerialRuntime()
+    sr.run(pipeline_app)
+    rt = Myrmics(n_workers=2, sched_levels=[1], backend="threads",
+                 faults=True)
+    rt.kill_worker("w1", at=0.001)
+    rep = rt.run(pipeline_app)
+    assert rep.tasks_spawned == rep.tasks_done
+    assert rt.labelled_storage() == sr.labelled_storage()
+    assert "w1" in rt.dead_workers
+    assert rep.fault_summary()["workers_killed"] == 1
 
 
 def test_threads_report_measures_wall_clock():

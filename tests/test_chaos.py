@@ -1,0 +1,271 @@
+"""Chaos harness (PR 10): kill random workers and schedulers mid-DAG
+and hold the survivors to the serial oracle.
+
+Sweeps are seeded and deterministic on the sim backend (kills are
+virtual-time events), so every run of this file exercises byte-for-byte
+the same failure interleavings across the steal x migration x coalesce
+feature matrix.  The threads sweep uses wall-clock kill timers — the
+interleaving varies, the oracle equality must not.  Every recovered run
+also passes the post-recovery structural audit
+(:func:`repro.analysis.invariants.check_invariants`): no dep/directory
+shard owned by a corpse, counters exclude dead nodes, no starving entry
+nudging a dead leaf.
+"""
+
+import random
+
+import pytest
+
+from repro.core import InOut, Myrmics, Out, SerialRuntime
+from repro.core.faults import (
+    FaultPlan,
+    PoisonTaskError,
+    SchedulerDiedError,
+)
+from repro.analysis.invariants import check_invariants
+from test_backend_threads import build_wait_app, random_program
+from test_core_shards import skewed_alloc_app
+
+
+def _oracle(app):
+    sr = SerialRuntime()
+    sr.run(app)
+    return sr.labelled_storage()
+
+
+def _baseline_cycles(app, **kw):
+    rt = Myrmics(**kw)
+    rep = rt.run(app)
+    assert rep.fault_summary()["enabled"] is False
+    return rep.total_cycles
+
+
+# ---------------------------------------------------------------------------
+# sim: seeded random worker kills across the feature matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("steal,migrate,coalesce", [
+    (True, None, True),
+    (False, 4, False),
+    (True, 4, True),
+])
+@pytest.mark.parametrize("seed", range(8))
+def test_chaos_sim_worker_kills(seed, steal, migrate, coalesce):
+    desc = random_program(random.Random(seed))
+    app = build_wait_app(desc)
+    expect = _oracle(app)
+    kw = dict(n_workers=4, sched_levels=[1, 2], steal=steal,
+              migrate_threshold=migrate, coalesce=coalesce)
+    base = _baseline_cycles(app, **kw)
+    rt = Myrmics(**kw, faults={"seed": seed, "n_kills": 2,
+                               "window": (0.1 * base, 0.8 * base)})
+    rep = rt.run(app)
+    fs = rep.fault_summary()
+    assert fs["workers_killed"] == 2
+    assert rep.tasks_spawned == rep.tasks_done
+    assert rt.labelled_storage() == expect, (
+        f"seed={seed} steal={steal} migrate={migrate} coalesce={coalesce}: "
+        "post-recovery store diverged from the serial oracle")
+    stats = check_invariants(rt)
+    assert stats["dead_workers"] == 2
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_chaos_sim_scheduler_kills(seed):
+    """Random victims drawn from workers *and* non-root schedulers: a
+    dead scheduler takes its worker domains with it and its shards
+    re-home onto a sibling, yet the store still matches the oracle."""
+    desc = random_program(random.Random(seed))
+    app = build_wait_app(desc)
+    expect = _oracle(app)
+    kw = dict(n_workers=8, sched_levels=[1, 4], steal=True)
+    base = _baseline_cycles(app, **kw)
+    rt = Myrmics(**kw, faults={"seed": seed, "n_kills": 2,
+                               "kill_scheds": True,
+                               "window": (0.1 * base, 0.8 * base)})
+    rep = rt.run(app)
+    fs = rep.fault_summary()
+    assert fs["workers_killed"] + fs["scheds_killed"] >= 2
+    assert rt.labelled_storage() == expect
+    check_invariants(rt)
+
+
+def test_chaos_sim_explicit_sched_kill_evacuates_migrated_shards():
+    """Kill the scheduler that SV-C migration loaded with directory
+    nodes: its shards must land on a live sibling (forced handoff) and
+    the audit must see zero corpse-owned nodes."""
+    app = skewed_alloc_app()
+    expect = _oracle(app)
+    kw = dict(n_workers=8, sched_levels=[1, 2], migrate_threshold=6)
+    base = _baseline_cycles(app, **kw)
+    rt = Myrmics(**kw, faults={"kills": [("s1.1", base * 0.6)]})
+    rep = rt.run(app)
+    fs = rep.fault_summary()
+    assert fs["scheds_killed"] == 1
+    assert fs["evacuations"] >= 1
+    assert fs["nodes_evacuated"] > 0
+    assert rt.labelled_storage() == expect
+    stats = check_invariants(rt)
+    assert stats["dead_scheds"] >= 1
+
+
+def test_chaos_sim_root_death_is_unrecoverable():
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2], faults=True)
+    with pytest.raises(SchedulerDiedError, match="root"):
+        rt.kill_scheduler("s0.0")
+
+
+# ---------------------------------------------------------------------------
+# sim: poison cap and snapshot restore
+# ---------------------------------------------------------------------------
+
+
+def _long_task_app(ctx, root):
+    oids = ctx.balloc(64, root, 8, label="x")
+    for i, o in enumerate(oids):
+        ctx.spawn(lambda c, oo, v=i: c.write(oo, v), [Out(o)],
+                  duration=2e6)
+    yield ctx.wait([InOut(root)])
+
+
+def test_chaos_poison_cap_fails_loudly():
+    """max_replays=0: the first replay of any victim trips the poison
+    cap — the run fails with a named error instead of retrying."""
+    rt = Myrmics(n_workers=2, sched_levels=[1],
+                 faults={"kills": [("w0", 1e6)], "max_replays": 0})
+    with pytest.raises(PoisonTaskError, match="max_replays=0"):
+        rt.run(_long_task_app)
+
+
+def test_chaos_replay_backoff_delays_redispatch():
+    """replay_delay > 0: replays re-descend via timers, later than the
+    immediate-replay run, and still converge to the oracle."""
+    expect = _oracle(_long_task_app)
+    runs = {}
+    for delay in (0.0, 3e7):    # 3e7 > the whole remaining makespan, so
+        rt = Myrmics(n_workers=2, sched_levels=[1],    # it must show up
+                     faults={"kills": [("w0", 1e6)],
+                             "replay_delay": delay})
+        rep = rt.run(_long_task_app)
+        assert rt.labelled_storage() == expect
+        assert rep.fault_summary()["tasks_replayed"] >= 1
+        runs[delay] = rep.total_cycles
+        check_invariants(rt)
+    assert runs[3e7] > runs[0.0]
+
+
+def _chain_app(ctx, root):
+    oids = ctx.balloc(64, root, 6, label="x")
+    for i, o in enumerate(oids):
+        ctx.spawn(lambda c, oo, v=i: c.write(oo, v), [Out(o)],
+                  duration=1e6)
+    for _ in range(3):
+        for o in oids:
+            ctx.spawn(lambda c, oo: c.write(oo, c.read(oo) * 2 + 1),
+                      [InOut(o)], duration=1e6)
+    yield ctx.wait([InOut(root)])
+
+
+def test_chaos_snapshot_commit_and_no_sim_rollback(tmp_path):
+    """snapshot_dir= arms region durability: completions commit Out
+    objects through the atomic checkpoint store.  On sim, restore must
+    stay *dormant* — a body applies its writes atomically at its start
+    instant, so a killed victim never wrote anything, and rolling its
+    footprint back would clobber applied writes of non-victim tasks
+    whose completion commits are still in flight (a real divergence
+    this pin guards; the torn-write restore is exercised on procs)."""
+    expect = _oracle(_chain_app)
+    rt = Myrmics(n_workers=2, sched_levels=[1],
+                 faults=FaultPlan(kills=(("w0", 2.5e6),),
+                                  snapshot_dir=str(tmp_path)))
+    rep = rt.run(_chain_app)
+    fs = rep.fault_summary()
+    assert fs["snapshots_saved"] > 0
+    assert fs["snapshots_restored"] == 0
+    assert fs["workers_killed"] == 1
+    assert rt.labelled_storage() == expect
+    check_invariants(rt)
+
+
+def test_chaos_snapshot_restore_mechanics(tmp_path):
+    """Direct restore contract: after a commit, an *executing* victim's
+    Out objects roll back to the committed value; queued/suspended
+    victims (not passed as executing) are left alone."""
+    rt = Myrmics(n_workers=2, sched_levels=[1],
+                 faults=FaultPlan(snapshot_dir=str(tmp_path)))
+    rep = rt.run(_chain_app)
+    assert rep.fault_summary()["snapshots_saved"] > 0
+    snaps = rt.fault_injector.snapshots
+    # pick any committed object, scribble a "torn" value over it, and
+    # restore it through a fake executing victim bearing its footprint
+    nid = next(iter(snaps.by_nid))
+    committed = rt.storage[nid]
+    rt.storage[nid] = committed + 999
+
+    class _Victim:
+        pass
+
+    class _Arg:
+        def __init__(self, n):
+            self.nid, self.mode, self.notransfer = n, "w", False
+
+    v = _Victim()
+    v.dep_args = [_Arg(nid)]
+    snaps.on_worker_death("w0", [v])
+    assert rt.storage[nid] == committed
+    assert snaps.restored == 1
+    # the same victim passed as non-executing (not passed at all)
+    rt.storage[nid] = committed + 999
+    snaps.on_worker_death("w0", [])
+    assert rt.storage[nid] == committed + 999
+
+
+# ---------------------------------------------------------------------------
+# threads: wall-clock kills, same oracle bar
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 2, 5, 7])
+def test_chaos_threads_worker_kills(seed):
+    desc = random_program(random.Random(seed))
+    app = build_wait_app(desc)
+    expect = _oracle(app)
+    rt = Myrmics(n_workers=4, sched_levels=[1, 2], backend="threads",
+                 faults={"kills": (("w1", 0.001), ("w3", 0.002))})
+    rep = rt.run(app)
+    fs = rep.fault_summary()
+    assert fs["workers_killed"] == 2
+    assert rep.tasks_spawned == rep.tasks_done
+    assert rt.labelled_storage() == expect, (
+        f"seed={seed}: threads post-recovery store diverged")
+    check_invariants(rt)
+
+
+def test_chaos_threads_heartbeat_death_fails_fast():
+    """A *real* scheduler-thread death (heartbeat detection) cannot be
+    evacuated — its shard state is unreachable — so the handler must
+    fail fast with the named error, never hang."""
+    rt = Myrmics(n_workers=2, sched_levels=[1, 2], backend="threads",
+                 faults=True)
+    with pytest.raises(SchedulerDiedError, match="heartbeat"):
+        rt._h_sched_dead("s1.0", "heartbeat")
+    assert rt.fault_injector.detections.get("sched:heartbeat") == 1
+
+
+def test_chaos_threads_heartbeat_quiet_on_healthy_run():
+    """The liveness probe re-arms through a healthy run without ever
+    reporting a death (no false positives)."""
+    def app(ctx, root):
+        oids = ctx.balloc(64, root, 8, label="x")
+        for i, o in enumerate(oids):
+            ctx.spawn(lambda c, oo, v=i: c.write(oo, v * 3), [Out(o)])
+        yield ctx.wait([InOut(root)])
+
+    rt = Myrmics(n_workers=2, sched_levels=[1, 2], backend="threads",
+                 faults={"heartbeat_s": 0.01})
+    rep = rt.run(app)
+    fs = rep.fault_summary()
+    assert fs["workers_killed"] == 0 and fs["scheds_killed"] == 0
+    assert not fs["detections"]
+    assert rt.labelled_storage()["x[5]"] == 15

@@ -1,0 +1,121 @@
+"""CheckpointStore contracts (the durability half of the PR 10 fault
+story — region snapshots ride on this store, so its commit protocol is
+what "restore-on-replay" ultimately trusts):
+
+1. atomic commit: a checkpoint appears only via tmp-dir rename, so a
+   crash mid-save never corrupts the latest restore point;
+2. crash-mid-save: an orphaned ``.tmp`` directory is invisible to
+   ``steps()`` and the previous checkpoint stays fully restorable;
+3. exotic dtypes (bfloat16 / float8) round-trip bit-exactly through
+   the uint view re-encoding;
+4. restore with a *new* sharding tree re-homes the state (elastic
+   rescale path);
+5. gc keeps only the newest ``keep`` steps;
+6. ``extra`` metadata survives alongside the leaves.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.checkpoint.store import CheckpointStore  # noqa: E402
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jax.numpy.asarray(rng.normal(size=(4, 8)).astype(np.float32)),
+        "opt": {"mu": jax.numpy.asarray(rng.normal(size=(8,)).astype(
+            np.float32)), "step": jax.numpy.asarray(7, dtype=np.int32)},
+    }
+
+
+def test_save_commits_via_rename_and_restores(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    state = _state()
+    path = store.save(3, state, extra={"loss": 1.25})
+    assert os.path.basename(path) == "step_00000003"
+    assert not os.path.exists(path + ".tmp")     # tmp renamed away
+    assert store.steps() == [3]
+    back = store.restore(3, like=jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state))
+    flat_a = jax.tree_util.tree_leaves(state)
+    flat_b = jax.tree_util.tree_leaves(back)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert store.extra(3) == {"loss": 1.25}
+
+
+def test_crash_mid_save_leaves_latest_restorable(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    state = _state(1)
+    store.save(1, state)
+
+    # simulate a crash mid-save of step 2: the tmp dir exists with a
+    # partial payload but was never renamed
+    tmp = os.path.join(str(tmp_path), "step_00000002.tmp")
+    os.makedirs(tmp)
+    np.save(os.path.join(tmp, "leaf_00000.npy"), np.zeros(3))
+    # no manifest.json — the writer died before commit
+
+    assert store.steps() == [1]                  # orphan is invisible
+    assert store.latest_step() == 1
+    like = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+    back = store.restore(1, like=like)
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(state["w"]))
+
+    # a half-committed dir (renamed but manifest missing) is also
+    # invisible rather than a crash
+    broken = os.path.join(str(tmp_path), "step_00000005")
+    os.makedirs(broken)
+    assert store.steps() == [1]
+
+    # and a fresh save of the same step recovers from the stale tmp
+    store.save(2, _state(2))
+    assert store.steps() == [1, 2]
+
+
+@pytest.mark.parametrize("dtype_name", ["bfloat16", "float8_e4m3fn",
+                                        "float8_e5m2"])
+def test_exotic_dtypes_round_trip(tmp_path, dtype_name):
+    import ml_dtypes
+    dt = getattr(ml_dtypes, dtype_name)
+    store = CheckpointStore(str(tmp_path))
+    rng = np.random.default_rng(3)
+    arr = rng.normal(size=(16,)).astype(np.float32).astype(dt)
+    store.save(0, {"x": arr})
+    man = json.load(open(os.path.join(
+        str(tmp_path), "step_00000000", "manifest.json")))
+    assert man["leaves"]["x"]["dtype"] == dtype_name
+    back = store.restore(0, like={"x": jax.ShapeDtypeStruct((16,), dt)})
+    got = np.asarray(back["x"]).view(dt) \
+        if np.asarray(back["x"]).dtype != dt else np.asarray(back["x"])
+    np.testing.assert_array_equal(got.view(np.uint8), arr.view(np.uint8))
+
+
+def test_restore_with_new_sharding(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    state = {"w": jax.numpy.arange(8, dtype=jax.numpy.float32)}
+    store.save(0, state)
+    # "new mesh": single-device sharding built fresh at restore time
+    dev = jax.devices()[0]
+    sharding = {"w": jax.sharding.SingleDeviceSharding(dev)}
+    back = store.restore(0, like=state, shardings=sharding)
+    assert back["w"].sharding == sharding["w"]
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_gc_keeps_last_k(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    for s in range(5):
+        store.save(s, {"x": np.full((2,), s, dtype=np.float32)})
+    assert store.steps() == [3, 4]
+    back = store.restore(4, like={"x": np.zeros((2,), np.float32)})
+    np.testing.assert_array_equal(np.asarray(back["x"]), [4.0, 4.0])

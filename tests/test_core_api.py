@@ -383,7 +383,7 @@ def test_run_report_typed_and_legacy_views():
     assert set(d) == {
         "total_cycles", "tasks_spawned", "tasks_done", "events", "workers",
         "scheds", "region_load", "migrations", "nodes_migrated", "backend",
-        "msg_kinds", "steals", "sanitize", "wire", "procs"}
+        "msg_kinds", "steals", "sanitize", "wire", "procs", "faults"}
     assert d["backend"] == "sim"
     assert d["total_cycles"] == rep.total_cycles
     with pytest.raises(KeyError):

@@ -232,9 +232,11 @@ def test_hierarchy_beats_single_scheduler_under_load():
     assert t_hier < t_flat
 
 
-def test_kill_worker_with_suspended_tasks_refused_before_mutation():
-    """A refused kill (suspended mid-wait task present) must leave the
-    hierarchy fully intact — the check runs before any state change."""
+def test_kill_worker_with_suspended_tasks_rehomes_them():
+    """A worker dying while hosting a suspended mid-wait generator no
+    longer refuses the kill: the parked continuation re-homes onto a
+    live sibling and resumes there once its awaited children land
+    (sim/threads keep continuations host-side — PR 10)."""
 
     def group(c, rid, oids):
         for i, o in enumerate(oids):
@@ -249,19 +251,20 @@ def test_kill_worker_with_suspended_tasks_refused_before_mutation():
         ctx.spawn(group, [InOut(rid), Safe(list(oids))])
         yield ctx.wait([InOut(root)])
 
-    rt = Myrmics(n_workers=1, sched_levels=[1])
+    rt = Myrmics(n_workers=2, sched_levels=[1], faults=True)
     # while `group` is suspended mid-wait (its children are running),
-    # the kill must be refused atomically
+    # kill its host; the continuation must survive on the sibling
     rt.kill_worker("w0", at=1.5e6)
-    with pytest.raises(RuntimeError, match="suspended tasks present"):
-        rt.run(app)
-    w = rt.hier.by_id["w0"]
-    assert "w0" not in rt.dead_workers
-    assert w in w.parent.workers
-    assert "w0" in w.parent.load
-    assert rt.tasks_rescheduled == 0
-    # the worker still has its suspended record: nothing was torn down
-    assert w.suspended
+    rep = rt.run(app)
+    assert rep["tasks_done"] == rep["tasks_spawned"]
+    assert "w0" in rt.dead_workers
+    w0 = rt.hier.by_id["w0"]
+    assert not w0.suspended           # parked record moved off the corpse
+    assert w0 not in w0.parent.workers
+    assert "w0" not in w0.parent.load
+    assert rt.tasks_rescheduled >= 1
+    vals = rt.labelled_storage()
+    assert vals["o[0]"] == 0 + 1 + 2 + 3
 
 
 def test_holder_wait_bypasses_blocked_foreign_arg():
